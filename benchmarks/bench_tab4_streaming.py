@@ -1,0 +1,68 @@
+"""Paper Tab. IV: sustained streaming throughput (the NIC deployment).
+
+Analogue of the 100 Gbit/s NIC experiment: data arrives in chunks from the
+pipeline (host -> device, the 'network'), each chunk is sketched on arrival
+by k pipelines, and the constant-time finalization happens once at the end
+(the paper's 203 us bucket drain).  Reported: sustained GByte/s vs k and the
+finalization latency — including the paper's observation that it is
+independent of the streamed volume.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import hll, sketch as sketchlib
+from repro.core.hll import HLLConfig
+from repro.data.pipeline import DataConfig, batch_at_step
+
+CHUNKS = 8
+CHUNK_ITEMS = 1 << 20
+PIPELINES = (1, 2, 4, 8, 16)
+
+
+def run(full: bool = False):
+    cfg = HLLConfig(p=16, hash_bits=64)
+    data = DataConfig(
+        vocab_size=2**31 - 1, global_batch=1024,
+        seq_len=CHUNK_ITEMS // 1024, distribution="unique",
+    )
+    rows = []
+    for k in PIPELINES:
+        update = jax.jit(
+            lambda r, x, k=k: sketchlib.update_pipelined(r, x, cfg, pipelines=k)
+        )
+        regs = hll.init_registers(cfg)
+        # warmup compile
+        jax.block_until_ready(update(regs, batch_at_step(data, jnp.asarray(0))["tokens"]))
+        t0 = time.perf_counter()
+        n_total = 0
+        for step in range(CHUNKS):
+            batch = batch_at_step(data, jnp.asarray(step, jnp.int32))
+            regs = update(regs, batch["tokens"])
+            n_total += batch["tokens"].size
+        jax.block_until_ready(regs)
+        dt = time.perf_counter() - t0
+        gbps = n_total * 4 / dt / 1e9
+        # constant-time finalization (paper: 203 us independent of volume)
+        t1 = time.perf_counter()
+        est = hll.estimate(regs, cfg)
+        fin_us = (time.perf_counter() - t1) * 1e6
+        exact_seen = n_total  # 'unique' stream
+        err = abs(est - exact_seen) / exact_seen
+        rows.append(dict(pipelines=k, gbytes_s=gbps, finalize_us=fin_us, err=err))
+        emit(
+            "tab4_streaming", dt / CHUNKS * 1e6,
+            f"pipelines={k} sustained={gbps:.3f}GB/s finalize={fin_us:.0f}us "
+            f"est_err={err:.4f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,0 +1,78 @@
+"""Serve a small model with batched requests + sketch telemetry.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch tinyllama-1.1b --requests 8
+
+Prefill + batched greedy decode through the ring-buffered KV cache, with two
+HLL streams on the serving datapath (the paper's NIC use-case): distinct
+request ids (how many unique users) and distinct generated tokens
+(vocabulary coverage of outputs).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.core.hll import HLLConfig
+from repro.models import transformer
+from repro.serve import engine
+from repro.telemetry.sketchboard import StreamSketch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch).reduced()
+    params = transformer.init_params(jax.random.PRNGKey(0), arch)
+    board = StreamSketch(HLLConfig(p=12, hash_bits=64))
+
+    B, S, T = args.requests, args.prompt_len, args.gen_len
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                 arch.vocab_size)
+    request_ids = jnp.arange(1000, 1000 + B, dtype=jnp.int32)
+
+    batch = {"tokens": prompts}
+    if arch.mrope:
+        batch["positions"] = transformer.default_positions(arch, B, S)
+    if arch.frontend_stub_len:
+        batch["frontend_embeds"] = (
+            jax.random.normal(jax.random.PRNGKey(2),
+                              (B, arch.frontend_stub_len, arch.d_model))
+            .astype(jnp.bfloat16) * 0.02
+        )
+
+    t0 = time.perf_counter()
+    logits, cache = engine.prefill(params, batch, arch, kv_len=S + T + 1)
+    first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    prefill_s = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    generated, _ = engine.decode_loop(
+        params, cache, first, jnp.asarray(S, jnp.int32), arch, steps=T
+    )
+    jax.block_until_ready(generated)
+    decode_s = time.perf_counter() - t1
+
+    board.observe("request_ids", request_ids)
+    board.observe("prompt_tokens", prompts)
+    board.observe("generated_tokens", generated)
+
+    print(f"served {B} requests: prefill {B * S / prefill_s:,.0f} tok/s, "
+          f"decode {B * T / decode_s:,.0f} tok/s")
+    print(f"sample output: {np.asarray(generated[0])[:16].tolist()}")
+    print("\nsketch telemetry (48KiB/stream, free on the datapath):")
+    for name, row in board.report().items():
+        print(f"  {name:18s} distinct~{row['estimate']:8.0f} "
+              f"seen={row['items_seen']:6d} dup_factor={row['duplication']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

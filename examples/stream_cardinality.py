@@ -1,0 +1,82 @@
+"""End-to-end streaming cardinality service — the paper's deployment, on JAX.
+
+A data stream (synthetic, counter-addressed — think NIC packets / storage
+scan) flows through k sketch pipelines per device and across all available
+devices; partial sketches fold by max (Fig. 3) and the exact host-side
+finalization reports the distinct count with its error. This is the
+paper-kind end-to-end driver: throughput-oriented stream processing with
+constant-memory state.
+
+    PYTHONPATH=src python examples/stream_cardinality.py --chunks 16 --pipelines 8
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hll
+from repro.core.hll import HLLConfig
+from repro.core.sketch import update_pipelined, update_sharded
+from repro.data.pipeline import DataConfig, batch_at_step
+from repro.telemetry.sketchboard import StreamSketch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chunks", type=int, default=16)
+    ap.add_argument("--chunk-items", type=int, default=1 << 20)
+    ap.add_argument("--pipelines", type=int, default=8)
+    ap.add_argument("--p", type=int, default=16)
+    ap.add_argument("--distribution", default="zipf",
+                    choices=["zipf", "uniform", "unique"])
+    args = ap.parse_args()
+
+    cfg = HLLConfig(p=args.p, hash_bits=64)
+    data = DataConfig(
+        vocab_size=2**31 - 1, global_batch=1024,
+        seq_len=args.chunk_items // 1024, distribution=args.distribution,
+    )
+    devices = jax.devices()
+    mesh = jax.make_mesh((len(devices),), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    print(f"streaming {args.chunks} x {args.chunk_items:,} items "
+          f"({args.distribution}) through {args.pipelines} pipelines "
+          f"x {len(devices)} device(s)")
+
+    regs = hll.init_registers(cfg)
+    update = jax.jit(
+        lambda r, x: update_pipelined(r, x, cfg, pipelines=args.pipelines)
+    )
+    # warmup/compile off the clock (the paper measures steady-state line rate)
+    jax.block_until_ready(update(regs, batch_at_step(data, jnp.asarray(0))["tokens"]))
+
+    t0 = time.perf_counter()
+    n = 0
+    for step in range(args.chunks):
+        batch = batch_at_step(data, jnp.asarray(step, jnp.int32))
+        tokens = batch["tokens"]
+        if len(devices) > 1:
+            regs = update_sharded(regs, tokens, cfg, mesh,
+                                  pipelines=args.pipelines)
+        else:
+            regs = update(regs, tokens)
+        n += tokens.size
+    jax.block_until_ready(regs)
+    dt = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    est = hll.estimate(regs, cfg)  # constant-time finalization (paper: 203us)
+    fin = time.perf_counter() - t1
+
+    print(f"\nsustained: {n * 4 / dt / 1e9:.3f} GB/s  ({n / dt:,.0f} items/s)")
+    print(f"finalization: {fin * 1e6:.0f} us (volume-independent)")
+    print(f"estimated distinct: {est:,.0f} of {n:,} streamed")
+    if args.distribution == "unique":
+        print(f"true distinct = {n:,}; error = {abs(est - n) / n:.3%} "
+              f"(expected sigma {hll.standard_error(cfg):.3%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Sharded checkpoint/restart with async writes and elastic resharding."""

@@ -1,0 +1,123 @@
+"""Checkpoint/restart with async writes and elastic resharding on restore.
+
+Format: one directory per step — ``step_<n>/leaf_<i>.npy`` + manifest.json
+(leaf count, shapes, dtypes, keypaths).  Restore is template-based: the
+caller supplies the live state pytree (from init) and gets back arrays
+placed onto the requested shardings — which may belong to a *different*
+mesh than the one that wrote the checkpoint (elastic rescale: the host
+arrays are resharded by device_put; the HLL sketch registers merge by max
+if partials from a previous topology are replayed, so telemetry survives
+rescaling exactly — DESIGN.md §6).
+
+Fault-tolerance contract used by train/loop.py:
+  * save every N steps (async: the host copy is snapshotted synchronously,
+    the disk write happens on a worker thread; the step loop never blocks
+    on I/O),
+  * on (re)start, ``latest_step`` + ``restore`` resume params, optimizer,
+    data cursor and sketch — a preempted pod loses at most N steps,
+  * writes go to a temp dir renamed into place, so a crash mid-write can
+    never corrupt the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save(state, directory: str, step: int, async_write: bool = False):
+    """Checkpoint a pytree. Returns a join() handle when async."""
+    leaves_with_paths, _ = jax.tree_util.tree_flatten_with_path(state)
+    host_leaves = [
+        (_keystr(p), np.asarray(jax.device_get(l))) for p, l in leaves_with_paths
+    ]
+
+    def write():
+        tmp = os.path.join(directory, f".tmp_step_{step}")
+        final = os.path.join(directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (keypath, arr) in enumerate(host_leaves):
+            np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+            manifest["leaves"].append(
+                {"i": i, "key": keypath, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_write:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_", 1)[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and d.split("_", 1)[1].isdigit()
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    template, directory: str, step: int, shardings=None
+) -> Any:
+    """Load ``step`` into the structure of ``template``.
+
+    ``shardings``: optional matching pytree of jax.sharding.Sharding — the
+    elastic-resume path places each host array directly onto the (possibly
+    different) target mesh.
+    """
+    final = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    if len(manifest["leaves"]) != len(leaves_with_paths):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, template has "
+            f"{len(leaves_with_paths)} — incompatible structures"
+        )
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+
+    loaded = []
+    for path, tmpl_leaf in leaves_with_paths:
+        key = _keystr(path)
+        meta = by_key.get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(os.path.join(final, f"leaf_{meta['i']}.npy"))
+        if tuple(arr.shape) != tuple(np.shape(tmpl_leaf)):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != template "
+                f"{np.shape(tmpl_leaf)}"
+            )
+        loaded.append(arr)
+
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(shardings)
+        loaded = [
+            jax.device_put(a, s) for a, s in zip(loaded, shard_leaves)
+        ]
+    else:
+        loaded = [jax.device_put(a) for a in loaded]
+    return jax.tree_util.tree_unflatten(treedef, loaded)

@@ -1,0 +1,20 @@
+"""Core HLL library: the paper's contribution as composable JAX modules."""
+
+from repro.core.hll import (  # noqa: F401
+    HLLConfig,
+    alpha,
+    cardinality,
+    estimate,
+    estimate_device,
+    hash_index_rank,
+    init_registers,
+    merge,
+    standard_error,
+    update,
+)
+from repro.core.sketch import (  # noqa: F401
+    Sketch,
+    datapath_tap,
+    update_pipelined,
+    update_sharded,
+)

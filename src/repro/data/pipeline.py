@@ -1,0 +1,79 @@
+"""Deterministic synthetic token pipeline with an HLL tap on the datapath.
+
+Counter-based generation: batch ``step`` is a pure function of
+(seed, step, shape) via Murmur3 over flat counters — stateless, restartable
+from a checkpointed step index, identical across hosts (each host slices its
+shard), and cheap enough to run on-device.  This is the training-pod
+equivalent of the paper's NIC datapath: the stream is hashed *as it is
+produced*, so cardinality telemetry (vocabulary coverage, duplicate rates)
+is free relative to the step.
+
+Distributions:
+  * ``zipf``    — log-uniform over the vocab (natural-language-like head/tail)
+  * ``uniform`` — uniform over the vocab
+  * ``unique``  — globally unique ids (sketch stress / Fig. 1 benchmarks)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import murmur3
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    distribution: str = "zipf"  # zipf | uniform | unique
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def batch_at_step(cfg: DataConfig, step: jnp.ndarray) -> dict:
+    """Materialize the global batch for an arbitrary step index."""
+    n = cfg.global_batch * cfg.seq_len
+    base = step.astype(jnp.uint32) * jnp.uint32(n)
+    counters = base + jnp.arange(n + 1, dtype=jnp.uint32)
+    h = murmur3.murmur3_32(counters, seed=cfg.seed)
+
+    if cfg.distribution == "unique":
+        tokens_full = counters % jnp.uint32(cfg.vocab_size)
+    elif cfg.distribution == "uniform":
+        tokens_full = h % jnp.uint32(cfg.vocab_size)
+    else:  # zipf-ish: log-uniform inverse CDF
+        u = h.astype(jnp.float32) / jnp.float32(2**32)
+        logv = u * jnp.log(jnp.float32(cfg.vocab_size))
+        tokens_full = jnp.minimum(
+            jnp.exp(logv).astype(jnp.uint32), jnp.uint32(cfg.vocab_size - 1)
+        )
+
+    tokens_full = tokens_full.astype(jnp.int32)
+    tokens = tokens_full[:n].reshape(cfg.global_batch, cfg.seq_len)
+    # next-token targets; the +1 counter continues the stream
+    targets = tokens_full[1 : n + 1].reshape(cfg.global_batch, cfg.seq_len)
+    return {"tokens": tokens, "targets": targets}
+
+
+def host_shard(batch: dict, host_id: int, n_hosts: int) -> dict:
+    """Slice the per-host batch shard (disjoint across hosts by batch dim)."""
+    def slc(x):
+        per = x.shape[0] // n_hosts
+        return x[host_id * per : (host_id + 1) * per]
+
+    return jax.tree.map(slc, batch)
+
+
+def stream_chunks(
+    cfg: DataConfig, n_chunks: int, start_step: int = 0
+):
+    """Iterator of (step, batch) — the streaming feed for sketch benchmarks."""
+    for s in range(start_step, start_step + n_chunks):
+        yield s, batch_at_step(cfg, jnp.asarray(s, jnp.int32))

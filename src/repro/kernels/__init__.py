@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ jnp oracles)."""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: the paper's "Merge buckets" module.
+
+Folds k partial sketches (one per pipeline / lane-group / device) into one
+register array by bucket-wise max — the complexity "of a fold" (paper §V-B).
+Registers are streamed through VMEM in (k, block_m) tiles; the k-way max is
+one VPU reduction per tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_M = 2048
+
+
+def _fold_kernel(partials_ref, out_ref):
+    out_ref[...] = jnp.max(partials_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def bucket_fold(
+    partials: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fold (k, m) int32 partial registers into (m,) by element-wise max.
+
+    m must be a multiple of min(block_m, m); the block is clamped for small
+    sketches.
+    """
+    if partials.ndim != 2:
+        raise ValueError(f"partials must be (k, m), got {partials.shape}")
+    k, m = partials.shape
+    bm = min(block_m, m)
+    if m % bm != 0:
+        raise ValueError(f"m ({m}) must divide block_m ({bm})")
+
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _fold_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bm), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), partials.dtype),
+        interpret=interpret,
+    )(partials)

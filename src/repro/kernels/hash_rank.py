@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused Murmur3 hash + index/rank extraction.
+
+The paper's pipeline front end (hash function -> index extractor -> leading
+zero detector, Fig. 2) as one VPU kernel.  Hashes are never materialized to
+HBM — each tile of input words is hashed in VMEM/VREGs and only the (idx,
+rank) pair the aggregation needs is written back, the same locality the FPGA
+dataflow gets from its stream handshake.
+
+64-bit hashing uses the uint32-limb math from core/u64.py: TPU has no native
+u64, so the 64-bit multiplies decompose into 16-bit partial products — the
+DSP-slice mapping of the paper, re-expressed for 32-bit vector lanes.
+
+Tiling: items are shaped (rows, 128); each grid step processes a
+(block_rows, 128) tile.  128 lanes is the VPU vector width; block_rows is a
+multiple of 8 (sublanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hll, u64 as u64lib
+from repro.core.hll import HLLConfig
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 64  # 64 x 128 = 8192 items / grid step
+
+
+def _hash_rank_kernel(items_ref, idx_ref, rank_ref, *, cfg: HLLConfig):
+    """One tile: murmur3 -> split -> clz, all element-wise in VREGs."""
+    items = items_ref[...]
+    idx, rank = hll.hash_index_rank(items, cfg)
+    idx_ref[...] = idx.astype(jnp.int32)
+    rank_ref[...] = rank.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "block_rows", "interpret")
+)
+def hash_rank(
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Hash a (rows, 128) uint32/int32 array into (idx, rank) int32 arrays.
+
+    rows must be a multiple of block_rows; use kernels.ops.hash_rank for the
+    padding/reshaping convenience wrapper over flat streams.
+    """
+    if items.ndim != 2 or items.shape[1] != LANES:
+        raise ValueError(f"items must be (rows, {LANES}), got {items.shape}")
+    rows = items.shape[0]
+    if rows % block_rows != 0:
+        raise ValueError(f"rows ({rows}) must divide block_rows ({block_rows})")
+
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((rows, LANES), jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_hash_rank_kernel, cfg=cfg),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[spec, spec],
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+    )(items.astype(jnp.uint32))

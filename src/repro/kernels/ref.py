@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each function computes exactly what the corresponding kernel computes, with
+no Pallas, no tiling, no padding — used by tests/test_kernels.py sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hll
+from repro.core.hll import HLLConfig
+
+
+def hash_rank_ref(items: jnp.ndarray, cfg: HLLConfig):
+    """Oracle for kernels.hash_rank: (idx int32, rank int32), shape of items."""
+    idx, rank = hll.hash_index_rank(items.reshape(-1), cfg)
+    return idx.reshape(items.shape), rank.reshape(items.shape)
+
+
+def bucket_fold_ref(partials: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.bucket_fold: max over the pipeline axis (k, m)->(m,)."""
+    return jnp.max(partials, axis=0)
+
+
+def hll_update_fused_ref(
+    registers: jnp.ndarray, items: jnp.ndarray, cfg: HLLConfig
+) -> jnp.ndarray:
+    """Oracle for kernels.hll_update_fused: full aggregation phase."""
+    return hll.update(registers, items, cfg)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: RWKV6 intra-chunk attention-like quadratic form.
+
+After the chunked reformulation (models/rwkv6.py::time_mix_chunked), the
+dominant remaining HBM traffic in the rwkv train cells is the intra-chunk
+pairwise tensor: XLA materializes exp(Lex_t - L_s) as a (B, C, C, H, N)
+f32 array per chunk (EXPERIMENTS.md §Perf A iter 2/3).  On TPU this kernel
+keeps the whole quadratic form in VMEM per (batch-chunk, head) grid cell:
+
+    A[t,s] = sum_n r[t,n] k[s,n] exp(Lex[t,n] - L[s,n])     (s < t)
+    diag[t] = sum_n r[t,n] u[n] k[t,n]
+    y[t]   = sum_{s<t} A[t,s] v[s] + diag[t] v[t]
+
+VMEM footprint per cell: 5 x (C,N) inputs + one (C,C,N) transient + (C,C)
+scores + (C,N) output — ~1.2 MiB at C=N=64, far under the 16 MiB budget.
+HBM traffic drops to the (C,N) inputs/outputs only: 6*C*N*4 bytes per cell
+vs the XLA path's additional 3*C*C*N*4 transient round-trip (a ~22x
+reduction of the intra term at C=64).
+
+Exponents are relative decays (<= 0) — numerically safe for arbitrarily
+strong data-dependent decay, same as the jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _intra_kernel(r_ref, k_ref, v_ref, lex_ref, l_ref, u_ref, y_ref):
+    r = r_ref[0]  # (C, N) f32
+    k = k_ref[0]
+    v = v_ref[0]
+    lex = lex_ref[0]
+    lcum = l_ref[0]
+    u = u_ref[...]  # (1, N)
+
+    c = r.shape[0]
+    # pairwise relative decay, strictly-lower-triangular mask
+    pair = lex[:, None, :] - lcum[None, :, :]  # (C, C, N), all <= 0 for s < t
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    mask = (s_idx < t_idx)[:, :, None]
+    prod = jnp.where(mask, r[:, None, :] * k[None, :, :] * jnp.exp(pair), 0.0)
+    a = jnp.sum(prod, axis=-1)  # (C, C)
+    diag = jnp.sum(r * u * k, axis=-1)  # (C,)
+    y = jax.lax.dot(a, v, preferred_element_type=jnp.float32)
+    y_ref[0] = y + diag[:, None] * v
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rwkv_intra(
+    r: jnp.ndarray,  # (G, C, N) f32 — G = batch*chunks*heads grid cells
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lex: jnp.ndarray,
+    lcum: jnp.ndarray,
+    u: jnp.ndarray,  # (G, N) per-cell bonus (head-dependent)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Intra-chunk output (G, C, N); grid over G, everything else in VMEM."""
+    g, c, n = r.shape
+    spec = pl.BlockSpec((1, c, n), lambda i: (i, 0, 0))
+    uspec = pl.BlockSpec((1, n), lambda i: (i, 0))
+    f32 = lambda t: t.astype(jnp.float32)
+    return pl.pallas_call(
+        _intra_kernel,
+        grid=(g,),
+        in_specs=[spec, spec, spec, spec, spec, uspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((g, c, n), jnp.float32),
+        interpret=interpret,
+    )(f32(r), f32(k), f32(v), f32(lex), f32(lcum), f32(u))
+
+
+def rwkv_intra_ref(r, k, v, lex, lcum, u):
+    """Pure-jnp oracle (the math time_mix_chunked computes inline)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    pair = lex[:, :, None, :] - lcum[:, None, :, :]  # (G, C, C, N)
+    c = r.shape[1]
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)[None, :, :, None]
+    a = jnp.sum(
+        jnp.where(mask, rf[:, :, None] * kf[:, None, :] * jnp.exp(pair), 0.0),
+        axis=-1,
+    )
+    diag = jnp.einsum("gtn,gn,gtn->gt", rf, u.astype(jnp.float32), kf)
+    return jnp.einsum("gts,gsn->gtn", a, vf) + diag[..., None] * vf

@@ -1,0 +1,325 @@
+"""Scan-aware roofline accounting from optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of its
+trip count (verified in EXPERIMENTS.md §Dry-run), which silently drops
+~n_layers x the FLOPs of any scan-over-layers model and every chunked-
+attention / recurrence inner loop.  This module re-derives the three
+roofline quantities directly from ``compiled.as_text()``:
+
+  * flops            — dot/convolution FLOPs from operand/output shapes
+  * bytes            — per-instruction operand+output HBM traffic (post-
+                       fusion approximation: fused interiors are free)
+  * collective bytes — operand sizes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute,
+                       bucketed by kind
+
+with every quantity multiplied through the call graph: fusions/calls x1,
+while bodies x trip count (extracted from the loop-condition constant —
+XLA lowers lax.scan/fori to ``induction < constant(N)``).  Nested loops
+multiply.  Validated against cost_analysis on loop-free graphs and against
+analytic 6ND in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# name = <everything>; opcode found as the first word directly followed by '('
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([a-zA-Z][\w\-]*)\(")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "", []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape: str  # output shape string
+    opcode: str
+    rest: str  # full text after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    is_entry: bool = False
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        if current is None:
+            if stripped.endswith("{") and ("(" in stripped or stripped.startswith("ENTRY")):
+                m = _COMP_START_RE.match(stripped)
+                if m:
+                    current = Computation(
+                        name=m.group(1),
+                        instructions=[],
+                        is_entry=stripped.startswith("ENTRY"),
+                    )
+            continue
+        if stripped == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        mn = _NAME_RE.match(stripped)
+        if mn:
+            name, body = mn.groups()
+            mo = _OPCODE_RE.search(body)
+            if mo:
+                shape = body[: mo.start()].strip()
+                opcode = mo.group(1)
+                rest = body[mo.end() :]
+                current.instructions.append(Instruction(name, shape, opcode, rest))
+    return comps
+
+
+def _dot_flops(instr: Instruction, symbols: Dict[str, str]) -> int:
+    """2 * prod(output) * contracted_size for dot ops."""
+    _, out_dims = _shape_dims(instr.shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    operands = _OPERAND_RE.findall(instr.rest.split(")", 1)[0])
+    if not operands:
+        return 0
+    lhs_shape = symbols.get(operands[0], "")
+    _, lhs_dims = _shape_dims(lhs_shape)
+    contracted = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contracted *= lhs_dims[int(idx)]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2 * out * contracted
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+}
+
+
+def _instr_bytes(instr: Instruction, symbols: Dict[str, str]) -> int:
+    if instr.opcode in _SKIP_BYTES_OPS:
+        return 0
+    total = _shape_bytes(instr.shape)  # output write
+    operand_str = instr.rest.split("), ")[0]
+    for op in _OPERAND_RE.findall(operand_str):
+        total += _shape_bytes(symbols.get(op, ""))
+    return total
+
+
+def _collective_bytes(instr: Instruction, symbols: Dict[str, str]) -> int:
+    operand_str = instr.rest.split("), ")[0]
+    total = 0
+    for op in _OPERAND_RE.findall(operand_str):
+        total += _shape_bytes(symbols.get(op, ""))
+    return total
+
+
+def _trip_count(cond: Computation, comps: Dict[str, "Computation"]) -> int:
+    """Max integer constant in the loop condition (XLA: induction < N).
+
+    Constants may live directly in the condition or inside a fusion it
+    calls (wrapped_compare); search one level deep.
+    """
+    best = 1
+
+    def scan_comp(c: Computation):
+        nonlocal best
+        for instr in c.instructions:
+            if instr.opcode == "constant":
+                m = re.match(r"(\d+)\)", instr.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+            for sub in re.findall(r"(?:calls=|to_apply=)%?([\w\.\-]+)", instr.rest):
+                subc = comps.get(sub)
+                if subc is not None:
+                    for si in subc.instructions:
+                        if si.opcode == "constant":
+                            m = re.match(r"(\d+)\)", si.rest)
+                            if m:
+                                best = max(best, int(m.group(1)))
+
+    scan_comp(cond)
+    return best
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collectives_by_kind: Dict[str, float]
+    n_while_loops: int
+    trip_counts: Dict[str, int]
+
+
+def analyze(hlo_text: str, trip_hints: Optional[Dict[str, int]] = None) -> Analysis:
+    comps = parse_computations(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    trip_hints = trip_hints or {}
+    trips: Dict[str, int] = {}
+    n_while = 0
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def walk(comp: Computation):
+        nonlocal n_while
+        if comp.name in memo:
+            return memo[comp.name]
+        flops = 0.0
+        byts = 0.0
+        coll = 0.0
+        by_kind: Dict[str, float] = {}
+        symbols = {i.name: i.shape for i in comp.instructions}
+        # parameters appear as instructions with opcode 'parameter' — covered.
+        for instr in comp.instructions:
+            op = instr.opcode
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                b = _collective_bytes(instr, symbols)
+                coll += b
+                by_kind[base] = by_kind.get(base, 0.0) + b
+                byts += _instr_bytes(instr, symbols)
+                continue
+            if op in ("dot", "convolution"):
+                flops += _dot_flops(instr, symbols)
+                byts += _instr_bytes(instr, symbols)
+                continue
+            if op == "while":
+                n_while += 1
+                mb = re.search(r"body=%?([\w\.\-]+)", instr.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", instr.rest)
+                body = comps.get(mb.group(1)) if mb else None
+                cond = comps.get(mc.group(1)) if mc else None
+                trip = trip_hints.get(
+                    mb.group(1) if mb else "",
+                    _trip_count(cond, comps) if cond else 1,
+                )
+                trips[mb.group(1) if mb else instr.name] = trip
+                if body is not None:
+                    bf, bb, bc, bk = walk(body)
+                    flops += trip * bf
+                    byts += trip * bb
+                    coll += trip * bc
+                    for k, v in bk.items():
+                        by_kind[k] = by_kind.get(k, 0.0) + trip * v
+                if cond is not None:
+                    cf, cb, cc, _ = walk(cond)
+                    flops += trip * cf
+                    byts += trip * cb
+                continue
+            # nested calls: fusion / call / conditional / custom-call
+            called = re.findall(r"(?:calls=|to_apply=)%?([\w\.\-]+)", instr.rest)
+            for cname in called:
+                sub = comps.get(cname)
+                if sub is not None and sub.name != comp.name:
+                    sf, _, sc, sk = walk(sub)
+                    flops += sf  # inner dots count; inner bytes are fused
+                    coll += sc
+                    for k, v in sk.items():
+                        by_kind[k] = by_kind.get(k, 0.0) + v
+            byts += _instr_bytes(instr, symbols)
+        memo[comp.name] = (flops, byts, coll, by_kind)
+        return memo[comp.name]
+
+    flops, byts, coll, by_kind = walk(entry)
+    return Analysis(
+        flops=flops,
+        bytes=byts,
+        collective_bytes=coll,
+        collectives_by_kind=by_kind,
+        n_while_loops=n_while,
+        trip_counts=trips,
+    )
+
+
+# ----------------------------------------------------------------------------
+# roofline terms (TPU v5e constants from the assignment)
+# ----------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def roofline_terms(
+    analysis: Analysis, n_chips: int, model_flops: Optional[float] = None
+) -> dict:
+    """The three §Roofline terms (seconds) + dominant + usefulness ratio.
+
+    flops/bytes from the analyzer are whole-program (all chips); the
+    per-chip roofline divides by the chip count.
+    """
+    compute_s = analysis.flops / (n_chips * PEAK_FLOPS_BF16)
+    memory_s = analysis.bytes / (n_chips * HBM_BW)
+    collective_s = analysis.collective_bytes / (n_chips * ICI_BW)
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    out = {
+        **terms,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "collectives_by_kind": analysis.collectives_by_kind,
+        "hlo_flops": analysis.flops,
+        "hlo_bytes": analysis.bytes,
+        "collective_bytes": analysis.collective_bytes,
+    }
+    if model_flops is not None:
+        out["model_flops"] = model_flops
+        out["useful_flop_ratio"] = (
+            model_flops / analysis.flops if analysis.flops else float("nan")
+        )
+        # fraction of the roofline actually achieved if the dominant term
+        # were the runtime: useful work time / bound time
+        ideal_s = model_flops / (n_chips * PEAK_FLOPS_BF16)
+        out["roofline_fraction"] = ideal_s / terms[dominant] if terms[dominant] else 0.0
+    return out

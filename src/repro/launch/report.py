@@ -1,0 +1,104 @@
+"""Assemble EXPERIMENTS.md tables from the dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+
+def load(dir_: str) -> List[dict]:
+    return [json.load(open(f)) for f in sorted(glob.glob(os.path.join(dir_, "*.json")))]
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}GiB"
+
+
+def roofline_table(recs: List[dict], mesh: str = "pod16x16") -> str:
+    rows = [
+        "| arch | shape | status | compute_s | memory_s | collective_s | "
+        "dominant | MODEL/HLO | roofline frac | bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | skipped (full attention @500k) "
+                "| - | - | - | - | - | - | - |"
+            )
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory_analysis", {}).get("peak_bytes_per_device_est")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant'].replace('_s','')} "
+            f"| {rf.get('useful_flop_ratio', float('nan')):.3f} "
+            f"| {rf.get('roofline_fraction', float('nan')):.4f} "
+            f"| {fmt_bytes(mem)} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs: List[dict]) -> str:
+    rows = [
+        "| arch | shape | 16x16 | 2x16x16 | compile_s (single/multi) |",
+        "|---|---|---|---|---|",
+    ]
+    by_key = {}
+    for r in recs:
+        by_key.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    for (a, s), pair in sorted(by_key.items()):
+        s1 = pair.get("pod16x16", {})
+        s2 = pair.get("pod2x16x16", {})
+        c1 = s1.get("compile_s", "-")
+        c2 = s2.get("compile_s", "-")
+        rows.append(
+            f"| {a} | {s} | {s1.get('status','-')} | {s2.get('status','-')} "
+            f"| {c1}/{c2} |"
+        )
+    return "\n".join(rows)
+
+
+def interesting_cells(recs: List[dict]) -> dict:
+    """Pick hillclimb candidates: worst roofline frac, most collective-bound."""
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "pod16x16"]
+    worst = min(ok, key=lambda r: r["roofline"].get("roofline_fraction", 1))
+    coll = max(
+        ok,
+        key=lambda r: r["roofline"]["collective_s"]
+        / max(r["roofline"]["bound_s"], 1e-12),
+    )
+    return {"worst_fraction": worst, "most_collective": coll}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Dry-run status (both meshes)\n")
+    print(dryrun_table(recs))
+    print(f"\n## Roofline ({args.mesh})\n")
+    print(roofline_table(recs, args.mesh))
+    picks = interesting_cells(recs)
+    print("\n## Hillclimb candidates")
+    for k, r in picks.items():
+        print(f"- {k}: {r['arch']} {r['shape']} "
+              f"(frac={r['roofline'].get('roofline_fraction'):.4f}, "
+              f"dominant={r['roofline']['dominant']})")
+
+
+if __name__ == "__main__":
+    main()

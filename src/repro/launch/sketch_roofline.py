@@ -1,0 +1,114 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline of the paper's own pipeline: HLL sketch update on the pod mesh.
+
+The paper's Fig. 4 measures sketch throughput against an I/O bound (PCIe /
+100 GbE).  On the pod the corresponding bound is HBM: a perfect sketch
+engine reads the token stream once (4 bytes/item) and touches nothing else,
+so ideal memory term = N*4 / (chips * 819 GB/s).  This driver lowers the
+sharded update on the production mesh, runs the scan-aware HLO analyzer and
+reports how close each variant gets to that ideal:
+
+    PYTHONPATH=src python -m repro.launch.sketch_roofline
+
+Variants (the §Perf iteration axis for the paper-representative cell):
+  scatter     one segment_max per device (CPU-baseline structure)
+  pipelined4/8/16  k per-device sub-sketches + max-fold (paper Fig. 3)
+  hash32      32-bit hash (paper Fig. 4b: width-insensitive off CPU)
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import hll, sketch as sketchlib
+from repro.core.hll import HLLConfig
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, n_chips
+
+N_ITEMS = 1 << 28  # 268M tokens/step across the pod (~1 GiB stream)
+
+
+def lower_variant(name: str, mesh, cfg: HLLConfig, pipelines: int):
+    chips = n_chips(mesh)
+    items = jax.ShapeDtypeStruct((N_ITEMS,), jnp.int32)
+    regs = jax.ShapeDtypeStruct((cfg.m,), hll.REGISTER_DTYPE)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def fn(r, x):
+        return sketchlib.update_sharded(
+            r, x, cfg, mesh, data_axes=dp + (("model",) if True else ()),
+            pipelines=pipelines,
+        )
+
+    # shard the stream over EVERY mesh axis — the sketch has no TP dimension,
+    # all 256 chips are stream lanes (the paper's k pipelines, k=chips*k_loc)
+    all_axes = tuple(mesh.axis_names)
+
+    def fn_all(r, x):
+        return sketchlib.update_sharded(
+            r, x, cfg, mesh, data_axes=all_axes, pipelines=pipelines
+        )
+
+    with mesh:
+        lowered = jax.jit(
+            fn_all,
+            in_shardings=(
+                NamedSharding(mesh, P()),
+                NamedSharding(mesh, P(all_axes)),
+            ),
+            out_shardings=NamedSharding(mesh, P()),
+        ).lower(regs, items)
+    compiled = lowered.compile()
+    an = hlo_analysis.analyze(compiled.as_text())
+    ideal_s = (N_ITEMS * 4 / chips) / hlo_analysis.HBM_BW
+    terms = hlo_analysis.roofline_terms(an, n_chips=1)
+    frac = ideal_s / max(terms[terms["dominant"]], 1e-12)
+    return {
+        "variant": name,
+        "pipelines": pipelines,
+        "hash_bits": cfg.hash_bits,
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": terms["dominant"],
+        "ideal_memory_s": ideal_s,
+        "roofline_fraction": frac,
+        "collectives_by_kind": terms["collectives_by_kind"],
+        "hlo_bytes_per_item_per_chip": an.bytes / (N_ITEMS / n_chips(mesh)),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/perf/sketch_roofline.json")
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=False)
+    results = []
+    for name, cfg, k in [
+        ("scatter", HLLConfig(p=16, hash_bits=64), 1),
+        ("pipelined4", HLLConfig(p=16, hash_bits=64), 4),
+        ("pipelined8", HLLConfig(p=16, hash_bits=64), 8),
+        ("pipelined16", HLLConfig(p=16, hash_bits=64), 16),
+        ("hash32", HLLConfig(p=16, hash_bits=32), 1),
+    ]:
+        r = lower_variant(name, mesh, cfg, k)
+        results.append(r)
+        print(
+            f"[sketch] {name:12s} dominant={r['dominant']:12s} "
+            f"bound={r[r['dominant']]:.6f}s ideal={r['ideal_memory_s']:.6f}s "
+            f"frac={r['roofline_fraction']:.3f} "
+            f"bytes/item={r['hlo_bytes_per_item_per_chip']:.1f}",
+            flush=True,
+        )
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Training launcher: --arch/--shape selection, mesh-aware, restartable.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \\
+        --steps 100 --ckpt-dir /tmp/ck [--reduced] [--tp 4] [--compress-grads]
+
+On this CPU container use --reduced (default).  On a real pod, drop
+--reduced and the FSDP/TP shardings from sharding/specs.py apply through
+the same step function the dry-run compiles; the launcher is identical —
+only the device fleet differs (jax.distributed.initialize is invoked when
+JAX_COORDINATOR is set, one process per host).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+import jax
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.core.hll import HLLConfig
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import OptimizerConfig
+from repro.train.loop import LoopConfig, train
+from repro.train.step import TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--sketch-p", type=int, default=14)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full-config", dest="reduced", action="store_false")
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()  # multi-host pod entry
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+
+    cfg = TrainConfig(
+        optimizer=OptimizerConfig(
+            lr=args.lr,
+            warmup_steps=max(1, args.steps // 10),
+            total_steps=args.steps,
+            compress_grads=args.compress_grads,
+        ),
+        sketch=HLLConfig(p=args.sketch_p, hash_bits=64),
+        grad_accum=args.grad_accum,
+    )
+    data = DataConfig(
+        vocab_size=arch.vocab_size,
+        global_batch=args.global_batch,
+        seq_len=args.seq_len,
+    )
+    loop = LoopConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+    )
+    train(arch, cfg, data, loop)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: 10-arch decoder backbone + mixers."""

@@ -1,0 +1,210 @@
+"""GQA attention: chunked online-softmax (flash-style) in pure jnp.
+
+Scores are never materialized at (S, S): a lax.scan over KV blocks carries
+the running (max, sum-exp, accumulator) triple, so peak memory is
+O(S * kv_block * heads_per_device) — this is what lets the 32k-sequence
+cells fit the dry-run memory budget.  The scan body is checkpointed so the
+backward pass recomputes block scores instead of stacking them.
+
+Causal masking baseline computes all KV blocks and masks (predictable HLO
+FLOPs, ~2x the useful triangle); the block-skipping variant is a §Perf
+hillclimb (see EXPERIMENTS.md).
+
+GQA: queries (B, S, H, D) grouped as (B, S, Hkv, G, D) against (B, S, Hkv, D)
+keys/values — any H/Hkv ratio, including MQA (Hkv=1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.sharding import ctx as shardctx
+
+NEG_INF = -1e30
+
+
+def init_params(key, arch: ArchConfig):
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    d, hd = arch.d_model, arch.head_dim
+    p = {
+        "wq": common.dense_init(kq, d, arch.n_heads * hd),
+        "wk": common.dense_init(kk, d, arch.n_kv_heads * hd),
+        "wv": common.dense_init(kv, d, arch.n_kv_heads * hd),
+        "wo": common.dense_init(ko, arch.n_heads * hd, d),
+    }
+    if arch.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), common.PARAM_DTYPE)
+        p["k_norm"] = jnp.ones((hd,), common.PARAM_DTYPE)
+    return p
+
+
+def _block_mask(
+    q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: Optional[int]
+) -> jnp.ndarray:
+    """(..., Sq, Sk) bool: True where q may attend k (causal [+ window])."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    q_pos: jnp.ndarray,  # (B, Sq) int32
+    k_pos: jnp.ndarray,  # (B, Sk) int32
+    *,
+    window: Optional[int] = None,
+    kv_block: int = 512,
+) -> jnp.ndarray:
+    """Chunked causal(+windowed) attention; returns (B, Sq, H, D).
+
+    GQA keys/values are repeated up to the full head count before the score
+    einsum (Megatron-style KV replication within the TP group): the head
+    axis then shards cleanly over 'model' for ANY head count, where the
+    grouped (Hkv, G) formulation defeats SPMD propagation at the uneven
+    reshape and silently replicates the whole mixer (§Perf iteration 1).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    scale = 1.0 / np.sqrt(d)
+
+    kv_block = min(kv_block, sk)
+    if sk % kv_block != 0:
+        raise ValueError(f"seq_len {sk} must divide kv_block {kv_block}")
+    n_blocks = sk // kv_block
+
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    bsh = ("batch", None, "model", None)
+    q = shardctx.constrain(q, bsh)
+    k = shardctx.constrain(k, bsh)
+    v = shardctx.constrain(v, bsh)
+
+    kb = k.reshape(b, n_blocks, kv_block, h, d)
+    vb = v.reshape(b, n_blocks, kv_block, h, d)
+    kpb = k_pos.reshape(b, n_blocks, kv_block)
+
+    def body(carry, blk):
+        m_run, l_run, acc = carry
+        kj, vj, kp = blk  # (B, kvb, H, D), (B, kvb, H, D), (B, kvb)
+        s = jnp.einsum(
+            "bqhd,bkhd->bqhk", q, kj, preferred_element_type=jnp.float32
+        ) * scale  # (B, Sq, H, kvb) f32
+        mask = _block_mask(q_pos, kp, window)  # (B, Sq, kvb)
+        s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bqhk,bkhd->bqhd",
+            p.astype(q.dtype),
+            vj,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, sq, h), NEG_INF, jnp.float32),
+        jnp.zeros((b, sq, h), jnp.float32),
+        jnp.zeros((b, sq, h, d), jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(kb, 1, 0),
+        jnp.moveaxis(vb, 1, 0),
+        jnp.moveaxis(kpb, 1, 0),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(jax.checkpoint(body), init, xs)
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def qkv_project(params, x: jnp.ndarray, arch: ArchConfig):
+    """x (B, S, d) -> q (B,S,H,D), k/v (B,S,Hkv,D) with optional qk-norm."""
+    b, s, _ = x.shape
+    hd = arch.head_dim
+    dt = x.dtype
+    bsh = ("batch", None, "model", None)
+    q = shardctx.constrain(
+        (x @ params["wq"].astype(dt)).reshape(b, s, arch.n_heads, hd), bsh
+    )
+    k = shardctx.constrain(
+        (x @ params["wk"].astype(dt)).reshape(b, s, arch.n_kv_heads, hd), bsh
+    )
+    v = shardctx.constrain(
+        (x @ params["wv"].astype(dt)).reshape(b, s, arch.n_kv_heads, hd), bsh
+    )
+    if arch.qk_norm:
+        q = common.head_rms_norm(q, params["q_norm"], arch.norm_eps)
+        k = common.head_rms_norm(k, params["k_norm"], arch.norm_eps)
+    return q, k, v
+
+
+def apply_positions(q, k, positions, arch: ArchConfig):
+    """RoPE or M-RoPE on q and k.
+
+    positions: (B, S) for RoPE, (3, B, S) for M-RoPE.
+    """
+    if arch.mrope:
+        q = common.apply_mrope(q, positions, arch.rope_theta)
+        k = common.apply_mrope(k, positions, arch.rope_theta)
+    else:
+        q = common.apply_rope(q, positions, arch.rope_theta)
+        k = common.apply_rope(k, positions, arch.rope_theta)
+    return q, k
+
+
+def self_attention(
+    params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    arch: ArchConfig,
+    *,
+    window: Optional[int] = None,
+    kv_block: int = 512,
+) -> jnp.ndarray:
+    """Full-sequence causal self-attention (train / prefill path)."""
+    q, k, v = qkv_project(params, x, arch)
+    q, k = apply_positions(q, k, positions, arch)
+    flat_pos = positions[0] if arch.mrope else positions  # mask uses temporal
+    out = flash_attention(
+        q, k, v, flat_pos, flat_pos, window=window, kv_block=kv_block
+    )
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ params["wo"].astype(x.dtype)
+
+
+def reference_attention(
+    params, x, positions, arch: ArchConfig, *, window=None
+) -> jnp.ndarray:
+    """Naive O(S^2)-memory oracle used by tests to validate flash_attention."""
+    q, k, v = qkv_project(params, x, arch)
+    q, k = apply_positions(q, k, positions, arch)
+    flat_pos = positions[0] if arch.mrope else positions
+    b, s, h, d = q.shape
+    hkv = arch.n_kv_heads
+    qg = q.reshape(b, s, hkv, h // hkv, d)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bqhgk", qg, k, preferred_element_type=jnp.float32
+    ) / np.sqrt(d)
+    mask = _block_mask(flat_pos, flat_pos, window)
+    scores = jnp.where(mask[:, :, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bqhgk,bkhd->bqhgd", p.astype(x.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, s, h, d).astype(x.dtype)
+    return out.reshape(b, s, -1) @ params["wo"].astype(x.dtype)

@@ -1,0 +1,129 @@
+"""Shared building blocks: norms, rotary embeddings (RoPE / M-RoPE), SwiGLU.
+
+Everything is a pure function over parameter pytrees (plain dicts), bf16
+activations with f32 accumulation/norm statistics, shaped for scan-over-
+layers stacking (see models/transformer.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ACT_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), PARAM_DTYPE) * scale)
+
+
+def embed_init(key, vocab: int, dim: int):
+    return jax.random.normal(key, (vocab, dim), PARAM_DTYPE) * 0.02
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def head_rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6):
+    """qk-norm (qwen3): RMS over head_dim of (..., heads, head_dim)."""
+    return rms_norm(x, weight, eps)
+
+
+# ----------------------------------------------------------------------------
+# rotary embeddings
+# ----------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for standard RoPE; (head_dim/2,) f32."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """Rotate (..., S, H, D) by per-position angles; positions (..., S)."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float, sections=(2, 1, 1)
+) -> jnp.ndarray:
+    """M-RoPE (qwen2-vl): rotary split into (temporal, h, w) sections.
+
+    positions: (3, ..., S) int32 — one position stream per section.
+    ``sections`` are relative shares of the head_dim/2 frequency slots,
+    qwen2-vl uses (16, 24, 24)/64ths ~ here (2,1,1)/4ths of D/2.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    total = sum(sections)
+    splits = [half * s // total for s in sections]
+    splits[-1] = half - sum(splits[:-1])
+    inv = rope_frequencies(d, theta)  # (D/2,)
+
+    # build per-slot positions by section
+    pieces = []
+    start = 0
+    for sec_idx, width in enumerate(splits):
+        pos = positions[sec_idx]  # (..., S)
+        ang = pos[..., None].astype(jnp.float32) * inv[start : start + width]
+        pieces.append(ang)
+        start += width
+    angles = jnp.concatenate(pieces, axis=-1)  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff),
+        "up": dense_init(k2, d_model, d_ff),
+        "down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def swiglu(params, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    g = x @ params["gate"].astype(dt)
+    u = x @ params["up"].astype(dt)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u) @ params[
+        "down"
+    ].astype(dt)

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts channel mixer (olmoe 64e/top-8, mixtral 8e/top-2).
+
+TPU-native capacity-based dispatch: routing is expressed as two one-hot
+einsums (dispatch / combine tensors) so the expert FFNs run as dense batched
+matmuls on the MXU — no gather/scatter on the hot path.  Experts shard over
+the 'model' mesh axis when the expert count divides it (EP, olmoe), else the
+per-expert hidden dim shards (TP-within-expert, mixtral).  Aux load-balance
+loss follows Switch/ST-MoE.
+
+Router-collapse telemetry: the (token, expert) assignment stream is exposed
+for the HLL datapath tap (DESIGN.md §4) — distinct-pair cardinality dropping
+far below tokens*top_k indicates collapse.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+
+
+def init_params(key, arch: ArchConfig):
+    moe = arch.moe
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    d, e, f = arch.d_model, moe.num_experts, moe.d_expert
+    scale_in, scale_out = d ** -0.5, f ** -0.5
+    return {
+        "router": common.dense_init(kr, d, e),
+        "gate": jax.random.normal(kg, (e, d, f), common.PARAM_DTYPE) * scale_in,
+        "up": jax.random.normal(ku, (e, d, f), common.PARAM_DTYPE) * scale_in,
+        "down": jax.random.normal(kd, (e, f, d), common.PARAM_DTYPE) * scale_out,
+    }
+
+
+def moe_mixer(
+    params, x: jnp.ndarray, arch: ArchConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux_loss (), assignment (B,S,top_k) int32).
+
+    Grouped dispatch: routing/capacity runs independently per group (one
+    group per sequence), so the one-hot dispatch tensor is (G, Tg, E, Cg)
+    with Cg = capacity per group — total cost LINEAR in tokens.  A single
+    global capacity pool would make the dispatch einsum T*E*C ~ T^2
+    (measured: 2.1 TiB/device on mixtral train_4k — EXPERIMENTS.md §Perf
+    iteration 2); per-group capacity is the standard TPU MoE formulation
+    (Switch/GShard groups) and also shards cleanly: groups follow the batch
+    axes, experts follow 'model'.
+    """
+    moe = arch.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    e, k = moe.num_experts, moe.top_k
+    tg = min(s, 4096)  # tokens per routing group
+    n_groups = n_tok // tg
+    capacity = int(moe.capacity_factor * tg * k / e)
+    if tg <= 256:
+        capacity = tg * k  # tiny groups (decode/tests): drop-free routing
+    capacity = max(capacity, k)
+
+    xt = x.reshape(n_groups, tg, d)
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, choice) within its expert queue (per group)
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (G, Tg, k, E)
+    flat_onehot = onehot.reshape(n_groups, tg * k, e)
+    pos_in_expert = jnp.cumsum(flat_onehot, axis=1) - flat_onehot
+    pos_in_expert = jnp.sum(
+        pos_in_expert.reshape(n_groups, tg, k, e) * onehot, axis=-1
+    )  # (G, Tg, k)
+    keep = pos_in_expert < capacity
+
+    # dispatch (G, Tg, E, C) / combine weights
+    pos_oh = jax.nn.one_hot(
+        jnp.where(keep, pos_in_expert, capacity), capacity, dtype=x.dtype
+    )  # (G, Tg, k, C); dropped tokens map nowhere
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum(
+        "gtke,gtkc,gtk->gtec",
+        onehot.astype(jnp.float32),
+        pos_oh.astype(jnp.float32),
+        gate_vals,
+    ).astype(x.dtype)
+
+    # expert compute: (G, E, C, d) batched SwiGLU
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xt)
+    g = jnp.einsum("gecd,edf->gecf", xe, params["gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, params["up"].astype(x.dtype))
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("gecf,efd->gecd", act, params["down"].astype(x.dtype))
+    out = jnp.einsum("gtec,gecd->gtd", comb, ye)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(
+        onehot[:, :, 0].astype(jnp.float32), axis=(0, 1)
+    )  # top-1
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    return out.reshape(b, s, d), aux, expert_idx.reshape(b, s, k)
+
+
+def assignment_stream(token_ids: jnp.ndarray, expert_idx: jnp.ndarray) -> jnp.ndarray:
+    """(token, expert) pairs packed into int32 words for the HLL tap.
+
+    token_ids (B, S), expert_idx (B, S, k) -> (B*S*k,) int32 where the low 8
+    bits carry the expert and the rest the token id — distinct-pair
+    cardinality tracks router diversity.
+    """
+    t = token_ids[..., None].astype(jnp.int32)
+    pairs = (t << 8) | expert_idx.astype(jnp.int32)
+    return pairs.reshape(-1)

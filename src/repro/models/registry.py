@@ -1,0 +1,63 @@
+"""Model registry: param counting and arch-level helpers.
+
+Param counts are derived from ``jax.eval_shape`` over the real initializer —
+exact by construction, no hand-maintained formulas to drift.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+
+
+@functools.lru_cache(maxsize=64)
+def _param_shapes(arch: ArchConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda k: transformer.init_params(k, arch), key
+    )
+
+
+def param_count(arch: ArchConfig, active_only: bool = False) -> int:
+    shapes = _param_shapes(arch)
+    total = sum(
+        int(np.prod(leaf.shape)) for leaf in jax.tree_util.tree_leaves(shapes)
+    )
+    if active_only and arch.moe is not None:
+        moe = arch.moe
+        inactive_per_layer = (
+            3 * arch.d_model * moe.d_expert * (moe.num_experts - moe.top_k)
+        )
+        total -= inactive_per_layer * arch.n_layers
+    return total
+
+
+def embedding_params(arch: ArchConfig) -> int:
+    n = arch.vocab_size * arch.d_model
+    return n if arch.tie_embeddings else 2 * n
+
+
+def non_embedding_params(arch: ArchConfig, active_only: bool = False) -> int:
+    return param_count(arch, active_only) - embedding_params(arch)
+
+
+def model_flops_per_token(arch: ArchConfig, kind: str) -> float:
+    """MODEL_FLOPS term for §Roofline.
+
+    train: 6 * N (dense) or 6 * N_active (MoE) per token
+    prefill/decode: 2 * N(_active) per token (forward only).
+    Attention score FLOPs are excluded by convention (they are the
+    'overhead' the usefulness ratio exposes).
+    """
+    n = param_count(arch, active_only=True) - (
+        arch.vocab_size * arch.d_model  # input embedding gather is not a matmul
+    )
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n

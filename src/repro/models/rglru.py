@@ -1,0 +1,135 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: proj-in (x-branch + GeLU gate branch) -> causal depthwise conv1d
+(width 4) -> RG-LRU diagonal gated recurrence -> gated proj-out.
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) is a
+diagonal linear scan -> computed with jax.lax.associative_scan (parallel
+prefix) over the sequence: O(log S) depth, MXU/VPU friendly — the TPU-native
+choice Griffin itself makes.  a_t = exp(c * r_t * log sigmoid(lambda)) with
+c = 8 keeps log a_t <= 0 for stability.
+
+Decode keeps (conv window, h) as the recurrent cache — O(1) per token, which
+is what qualifies this arch for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.sharding import ctx as shardctx
+
+C_FACTOR = 8.0
+
+
+class RGLRUState(NamedTuple):
+    conv: jnp.ndarray  # (B, conv_width-1, d) trailing inputs
+    h: jnp.ndarray  # (B, d) recurrent state (f32)
+
+
+def init_params(key, arch: ArchConfig):
+    d = arch.d_model
+    keys = jax.random.split(key, 6)
+    return {
+        "w_x": common.dense_init(keys[0], d, d),
+        "w_gate": common.dense_init(keys[1], d, d),
+        "conv_w": jax.random.normal(keys[2], (arch.conv_width, d), common.PARAM_DTYPE)
+        * (1.0 / arch.conv_width),
+        "conv_b": jnp.zeros((d,), common.PARAM_DTYPE),
+        # recurrence gates
+        "w_a": common.dense_init(keys[3], d, d),
+        "w_i": common.dense_init(keys[4], d, d),
+        # lambda parameterized so sigmoid(lambda) ~ 0.9..0.999
+        "lam": jnp.linspace(2.0, 6.0, d).astype(common.PARAM_DTYPE),
+        "w_out": common.dense_init(keys[5], d, d),
+    }
+
+
+def _gates(params, xc: jnp.ndarray):
+    """Recurrence gate computation on conv output xc (..., d). f32."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32))
+    log_a = C_FACTOR * r * jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed via exp/log1p for stability near a ~ 1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, beta * i * xf
+
+
+def _causal_conv(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d over (B, S, d), width w (static unroll)."""
+    w = params["conv_w"].shape[0]
+    out = x * params["conv_w"][w - 1].astype(x.dtype)
+    shifted = x
+    for i in range(1, w):
+        shifted = jnp.pad(shifted, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        out = out + shifted * params["conv_w"][w - 1 - i].astype(x.dtype)
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t via associative parallel prefix over axis 1."""
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def block(params, x: jnp.ndarray, arch: ArchConfig, *, return_state: bool = False):
+    """Full-sequence recurrent block. x (B, S, d) -> (B, S, d).
+
+    With ``return_state`` also returns the decode-resumable RGLRUState
+    (trailing conv window + final hidden state).
+    """
+    dt = x.dtype
+    bsd = ("batch", None, "model")
+    gate = jax.nn.gelu(
+        shardctx.constrain(x @ params["w_gate"].astype(dt), bsd).astype(jnp.float32)
+    )
+    xb = shardctx.constrain(x @ params["w_x"].astype(dt), bsd)
+    xc = _causal_conv(params, xb)
+    a, b = _gates(params, xc)
+    a = shardctx.constrain(a, bsd)
+    b = shardctx.constrain(b, bsd)
+    h = rglru_scan(a, b)  # (B, S, d) f32
+    out = (h * gate).astype(dt) @ params["w_out"].astype(dt)
+    if not return_state:
+        return out
+    w = params["conv_w"].shape[0]
+    state = RGLRUState(conv=xb[:, -(w - 1) :].astype(common.ACT_DTYPE), h=h[:, -1])
+    return out, state
+
+
+def block_step(
+    params, x_t: jnp.ndarray, state: RGLRUState, arch: ArchConfig
+) -> Tuple[jnp.ndarray, RGLRUState]:
+    """Single-token decode step. x_t (B, d); returns (out, new_state)."""
+    dt = x_t.dtype
+    gate = jax.nn.gelu((x_t @ params["w_gate"].astype(dt)).astype(jnp.float32))
+    xb = x_t @ params["w_x"].astype(dt)
+    # conv over (state.conv ++ xb)
+    w = params["conv_w"].shape[0]
+    window = jnp.concatenate([state.conv, xb[:, None, :]], axis=1)  # (B, w, d)
+    xc = jnp.einsum("bwd,wd->bd", window.astype(dt), params["conv_w"].astype(dt))
+    xc = xc + params["conv_b"].astype(dt)
+    a, b = _gates(params, xc)
+    h = a * state.h + b  # (B, d) f32
+    out = (h * gate).astype(dt) @ params["w_out"].astype(dt)
+    return out, RGLRUState(conv=window[:, 1:], h=h)
+
+
+def init_state(batch: int, arch: ArchConfig) -> RGLRUState:
+    return RGLRUState(
+        conv=jnp.zeros((batch, arch.conv_width - 1, arch.d_model), common.ACT_DTYPE),
+        h=jnp.zeros((batch, arch.d_model), jnp.float32),
+    )

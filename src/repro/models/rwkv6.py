@@ -1,0 +1,305 @@
+"""RWKV6 "Finch" token mixer: attention-free, data-dependent diagonal decay.
+
+Structure follows arXiv:2404.05892: token-shift ddlerp with LoRA deltas,
+per-channel data-dependent decay w_t = exp(-exp(d_t)), bonus u for the
+current token, per-head state S in R^{N x N}, grouped head norm, and the
+squared-ReLU channel mix.
+
+The baseline prefill path is a per-token lax.scan over the recurrence
+(state (B, H, N, N) updated once per token) — numerically exact and the
+natural decode step, but HBM-bound at long sequence (the state is re-read
+and re-written every token).  The chunked GLA-style formulation is the
+§Perf hillclimb for this family (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.sharding import ctx as shardctx
+
+LORA_RANK = 32
+DECAY_RANK = 64
+MIX_NAMES = ("w", "k", "v", "r", "g")  # ddlerp targets
+
+
+def init_params(key, arch: ArchConfig):
+    d = arch.d_model
+    keys = jax.random.split(key, 12)
+    p = {
+        "mix_base": jnp.zeros((5, d), common.PARAM_DTYPE) + 0.5,
+        "mix_lora_a": jax.random.normal(keys[0], (5, d, LORA_RANK), common.PARAM_DTYPE)
+        * 0.01,
+        "mix_lora_b": jax.random.normal(keys[1], (5, LORA_RANK, d), common.PARAM_DTYPE)
+        * 0.01,
+        "wr": common.dense_init(keys[2], d, d),
+        "wk": common.dense_init(keys[3], d, d),
+        "wv": common.dense_init(keys[4], d, d),
+        "wg": common.dense_init(keys[5], d, d),
+        "wo": common.dense_init(keys[6], d, d),
+        # decay: softplus-ish parameterization around slow decay
+        "decay_base": jnp.zeros((d,), common.PARAM_DTYPE) - 0.5,
+        "decay_lora_a": jax.random.normal(keys[7], (d, DECAY_RANK), common.PARAM_DTYPE)
+        * 0.01,
+        "decay_lora_b": jax.random.normal(keys[8], (DECAY_RANK, d), common.PARAM_DTYPE)
+        * 0.01,
+        "u": jax.random.normal(keys[9], (d,), common.PARAM_DTYPE) * 0.1,
+        "ln_w": jnp.ones((d,), common.PARAM_DTYPE),
+        "ln_b": jnp.zeros((d,), common.PARAM_DTYPE),
+    }
+    return p
+
+
+def _ddlerp(params, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Data-dependent token-shift interpolation -> dict of 5 mixed inputs."""
+    sx = x_prev - x  # (B, S, d)
+    dt = x.dtype
+    base = params["mix_base"].astype(dt)  # (5, d)
+    # shared LoRA trunk on the base-mixed input
+    xxx = x + sx * base[0]
+    out = {}
+    for i, name in enumerate(MIX_NAMES):
+        delta = jnp.tanh(xxx @ params["mix_lora_a"][i].astype(dt)) @ params[
+            "mix_lora_b"
+        ][i].astype(dt)
+        out[name] = x + sx * (base[i] + delta)
+    return out
+
+
+def _projections(params, x: jnp.ndarray, arch: ArchConfig):
+    """Full-sequence r/k/v/g/decay projections (B, S, H, N) + gate (B, S, d)."""
+    b, s, d = x.shape
+    h, n = arch.n_heads, arch.rwkv_head_dim
+    dt = x.dtype
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mixed = _ddlerp(params, x, x_prev)
+    bshn = ("batch", None, "model", None)
+    r = shardctx.constrain(
+        (mixed["r"] @ params["wr"].astype(dt)).reshape(b, s, h, n), bshn
+    )
+    k = shardctx.constrain(
+        (mixed["k"] @ params["wk"].astype(dt)).reshape(b, s, h, n), bshn
+    )
+    v = shardctx.constrain(
+        (mixed["v"] @ params["wv"].astype(dt)).reshape(b, s, h, n), bshn
+    )
+    g = jax.nn.silu((mixed["g"] @ params["wg"].astype(dt)).astype(jnp.float32))
+    # data-dependent log-decay: lw = -exp(base + lora(x_w)) <= 0
+    dd = params["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(mixed["w"] @ params["decay_lora_a"].astype(dt))
+        @ params["decay_lora_b"].astype(dt)
+    ).astype(jnp.float32)
+    log_w = shardctx.constrain(
+        -jnp.exp(jnp.clip(dd, -8.0, 8.0)).reshape(b, s, h, n), bshn
+    )
+    return r, k, v, g.astype(dt), log_w
+
+
+def _head_norm(params, y: jnp.ndarray, arch: ArchConfig, eps: float = 64e-5):
+    """GroupNorm with one group per head over (B, S, H, N)."""
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + eps)
+    b, s, h, n = y.shape
+    yn = yn.reshape(b, s, h * n)
+    return yn * params["ln_w"].astype(jnp.float32) + params["ln_b"].astype(
+        jnp.float32
+    )
+
+
+def recurrence_step(
+    state: jnp.ndarray,  # (B, H, N, N) f32
+    r: jnp.ndarray,  # (B, H, N)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,  # (B, H, N)
+    u: jnp.ndarray,  # (H, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One token of the RWKV6 recurrence. Returns (new_state, out (B,H,N))."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]  # (B, H, N, N)
+    y = jnp.einsum("bhn,bhnv->bhv", rf, state + u[..., None] * kv)
+    new_state = jnp.exp(log_w.astype(jnp.float32))[..., None] * state + kv
+    return new_state, y
+
+
+def time_mix(
+    params, x: jnp.ndarray, arch: ArchConfig, state: jnp.ndarray = None
+):
+    """Full-sequence RWKV6 time mixing via per-token scan.
+
+    Returns (out (B, S, d), final_state (B, H, N, N)).
+    """
+    b, s, d = x.shape
+    h, n = arch.n_heads, arch.rwkv_head_dim
+    r, k, v, g, log_w = _projections(params, x, arch)
+    u = params["u"].astype(jnp.float32).reshape(h, n)
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    state = shardctx.constrain(state, ("batch", "model", None, None))
+
+    def body(st, inp):
+        rt, kt, vt, lwt = inp
+        st_new, y = recurrence_step(st, rt, kt, vt, lwt, u)
+        return st_new, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, log_w))
+    state, ys = jax.lax.scan(body, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, n)  # (B, S, H, N)
+    y = _head_norm(params, y, arch).astype(x.dtype) * g
+    return y @ params["wo"].astype(x.dtype), state
+
+
+def time_mix_chunked(
+    params, x: jnp.ndarray, arch: ArchConfig, state: jnp.ndarray = None,
+    chunk: int = 32,
+):
+    """Chunk-parallel RWKV6 (GLA-style) — §Perf hillclimb for this family.
+
+    The per-token scan re-reads/writes the (B, H, N, N) state every token:
+    HBM traffic ~2.6 MB/token/layer, measured 5119 s memory term on
+    train_4k.  Chunking touches the state once per C tokens and turns the
+    inner work into MXU matmuls:
+
+      y_t   = (r_t * exp(Lex_t)) @ S_0                      [inter-chunk]
+            + sum_{s<t} [sum_n r_t k_s exp(Lex_t - L_s)]_n v_s   [intra]
+            + (r_t . (u * k_t)) v_t                         [bonus diag]
+      S_C   = Diag(exp(L_C)) S_0 + sum_s (k_s * exp(L_C - L_s))^T v_s
+
+    where L is the inclusive log-decay cumsum within the chunk and
+    Lex = L - log_w the exclusive one.  Every exponent is a *relative*
+    decay (<= 0), so the computation is stable for arbitrarily strong
+    data-dependent decays — the pairwise exponent tensor (C, C, N) is
+    materialized per chunk rather than factorized (exp(-L_s) alone can
+    overflow).  Bit-compatible with time_mix (tests/test_rwkv_chunked.py).
+    """
+    b, s, d = x.shape
+    h, n = arch.n_heads, arch.rwkv_head_dim
+    c = min(chunk, s)
+    if s % c != 0:
+        return time_mix(params, x, arch, state)
+    nc = s // c
+    r, k, v, g, log_w = _projections(params, x, arch)
+    u = params["u"].astype(jnp.float32).reshape(h, n)
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    state = shardctx.constrain(state, ("batch", "model", None, None))
+
+    # (B, NC, C, H, N) f32 chunk views
+    def chunked(t):
+        return t.astype(jnp.float32).reshape(b, nc, c, h, n)
+
+    rc, kc, vc, lwc = chunked(r), chunked(k), chunked(v), chunked(log_w)
+    L = jnp.cumsum(lwc, axis=2)  # inclusive log-decay
+    Lex = L - lwc  # exclusive
+    Lend = L[:, :, -1:, :, :]  # (B, NC, 1, H, N)
+
+    r_in = rc * jnp.exp(Lex)  # weights against S_0
+    k_out = kc * jnp.exp(Lend - L)  # contribution weights into S_end
+    # intra-chunk work happens INSIDE the chunk scan: the pairwise tensor
+    # (B, C, C, H, N) is a per-step transient, never materialized across
+    # the whole sequence (full-seq materialization measured 38 GiB/device
+    # on train_4k — §Perf A iteration 4).
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)[None, :, :, None, None]
+
+    def body(st, inp):
+        rc_g, kc_g, v_g, r_in_g, k_out_g, wend_g, Lex_g, L_g = inp
+        y_inter = jnp.einsum("bthn,bhnv->bthv", r_in_g, st)
+        pair = Lex_g[:, :, None] - L_g[:, None, :]  # (B, C, C, H, N)
+        A = jnp.sum(
+            jnp.where(mask, rc_g[:, :, None] * kc_g[:, None, :] * jnp.exp(pair), 0.0),
+            axis=-1,
+        )  # (B, C, C, H)
+        diag = jnp.einsum("bthn,hn,bthn->bth", rc_g, u, kc_g)
+        y_intra = jnp.einsum("btsh,bshn->bthn", A, v_g) + diag[..., None] * v_g
+        kv = jnp.einsum("bthn,bthv->bhnv", k_out_g, v_g)
+        st_new = wend_g[:, 0, :, :, None] * st + kv
+        return st_new, y_inter + y_intra
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (rc, kc, vc, r_in, k_out, jnp.exp(Lend), Lex, L)
+    )
+    state, ys = jax.lax.scan(jax.checkpoint(body), state, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B, NC, C, H, N)
+    y = y.reshape(b, s, h, n)
+    y = _head_norm(params, y, arch).astype(x.dtype) * g
+    return y @ params["wo"].astype(x.dtype), state
+
+
+def time_mix_step(params, x_t, x_prev, state, arch: ArchConfig):
+    """Single-token decode step.
+
+    x_t: (B, d) current token activations; x_prev: (B, d) previous token
+    (token-shift state); state: (B, H, N, N).
+    Returns (out (B, d), new_state).
+    """
+    b, d = x_t.shape
+    h, n = arch.n_heads, arch.rwkv_head_dim
+    r, k, v, g, log_w = _projections_step(params, x_t, x_prev, arch)
+    u = params["u"].astype(jnp.float32).reshape(h, n)
+    state, y = recurrence_step(state, r, k, v, log_w, u)
+    y = _head_norm(params, y[:, None, :, :].reshape(b, 1, h, n), arch)
+    y = y.reshape(b, h * n).astype(x_t.dtype) * g
+    return y @ params["wo"].astype(x_t.dtype), state
+
+
+def _projections_step(params, x_t, x_prev, arch: ArchConfig):
+    """Single-token variant of _projections using explicit shift state."""
+    b, d = x_t.shape
+    h, n = arch.n_heads, arch.rwkv_head_dim
+    dt = x_t.dtype
+    sx = x_prev - x_t
+    base = params["mix_base"].astype(dt)
+    xxx = x_t + sx * base[0]
+    mixed = {}
+    for i, name in enumerate(MIX_NAMES):
+        delta = jnp.tanh(xxx @ params["mix_lora_a"][i].astype(dt)) @ params[
+            "mix_lora_b"
+        ][i].astype(dt)
+        mixed[name] = x_t + sx * (base[i] + delta)
+    r = (mixed["r"] @ params["wr"].astype(dt)).reshape(b, h, n)
+    k = (mixed["k"] @ params["wk"].astype(dt)).reshape(b, h, n)
+    v = (mixed["v"] @ params["wv"].astype(dt)).reshape(b, h, n)
+    g = jax.nn.silu((mixed["g"] @ params["wg"].astype(dt)).astype(jnp.float32))
+    dd = params["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(mixed["w"] @ params["decay_lora_a"].astype(dt))
+        @ params["decay_lora_b"].astype(dt)
+    ).astype(jnp.float32)
+    log_w = -jnp.exp(jnp.clip(dd, -8.0, 8.0)).reshape(b, h, n)
+    return r, k, v, g.astype(dt), log_w
+
+
+# ----------------------------------------------------------------------------
+# channel mix (squared-ReLU)
+# ----------------------------------------------------------------------------
+
+
+def init_channel_params(key, arch: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = arch.d_model, arch.d_ff
+    return {
+        "mix_k": jnp.zeros((d,), common.PARAM_DTYPE) + 0.5,
+        "mix_r": jnp.zeros((d,), common.PARAM_DTYPE) + 0.5,
+        "wk": common.dense_init(k1, d, f),
+        "wr": common.dense_init(k2, d, d),
+        "wv": common.dense_init(k3, f, d),
+    }
+
+
+def channel_mix(params, x: jnp.ndarray, x_prev: jnp.ndarray = None):
+    """RWKV channel mixing: r = sigmoid, k = relu^2. Shapes (B, S, d)."""
+    dt = x.dtype
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xk = x + (x_prev - x) * params["mix_k"].astype(dt)
+    xr = x + (x_prev - x) * params["mix_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ params["wk"].astype(dt)))
+    r = jax.nn.sigmoid((xr @ params["wr"].astype(dt)).astype(jnp.float32))
+    return r.astype(dt) * (k @ params["wv"].astype(dt))

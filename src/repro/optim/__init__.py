@@ -1,0 +1,1 @@
+"""Sharded AdamW, schedules, gradient compression."""

@@ -1,0 +1,1 @@
+"""Serving layer: prefill, KV/recurrent caches, batched decode."""

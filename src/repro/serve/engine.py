@@ -1,0 +1,290 @@
+"""Serving engine: prefill + single-token decode for every architecture.
+
+Cache layouts (per stage, stacked over the stage's layers for lax.scan):
+
+  attn : ring-buffered K/V of width W = min(kv_len, window) plus a global
+         slot->position map ``kv_pos`` (-1 = empty).  The ring makes SWA /
+         local-attention decode O(window) — this is what qualifies mixtral
+         and recurrentgemma for the long_500k cell: position p lives in slot
+         p % W, so the buffer always holds exactly the positions the window
+         may attend to.
+  rec  : RG-LRU hidden state + trailing conv window.
+  rwkv : per-head state matrix + the two token-shift activations.
+
+Decode attention materializes (B, H, W) scores — tiny — against the cache;
+under the production mesh the cache's W axis is sharded over 'model'
+(sequence-parallel flash-decode; the partial-softmax collectives are
+inserted by SPMD partitioning — see sharding/specs.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, common, moe as moe_lib, rglru, rwkv6
+from repro.models import transformer
+from repro.serve.kvquant import dequantize_kv, quantize_kv
+
+NEG_INF = attention.NEG_INF
+
+
+def cache_width(arch: ArchConfig, kind: str, kv_len: int) -> int:
+    window = transformer._sublayer_window(kind, arch)
+    return min(kv_len, window) if window else kv_len
+
+
+# ----------------------------------------------------------------------------
+# cache init
+# ----------------------------------------------------------------------------
+
+
+def init_cache(arch: ArchConfig, batch: int, kv_len: int):
+    """Zeroed decode cache for a maximum context of ``kv_len`` tokens."""
+    stages = []
+    hd, hkv = arch.head_dim, arch.n_kv_heads
+    h, n = arch.n_heads, arch.rwkv_head_dim
+    d = arch.d_model
+    for pattern, repeats in transformer.layer_stages(arch):
+        stage: Dict[str, Any] = {}
+        for j, kind in enumerate(pattern):
+            if kind == "attn":
+                w = cache_width(arch, kind, kv_len)
+                if arch.kv_quant:
+                    stage[f"sub{j}"] = {
+                        "k": jnp.zeros((repeats, batch, w, hkv, hd), jnp.int8),
+                        "v": jnp.zeros((repeats, batch, w, hkv, hd), jnp.int8),
+                        "k_scale": jnp.zeros(
+                            (repeats, batch, w, hkv, 1), jnp.bfloat16
+                        ),
+                        "v_scale": jnp.zeros(
+                            (repeats, batch, w, hkv, 1), jnp.bfloat16
+                        ),
+                    }
+                else:
+                    stage[f"sub{j}"] = {
+                        "k": jnp.zeros((repeats, batch, w, hkv, hd), common.ACT_DTYPE),
+                        "v": jnp.zeros((repeats, batch, w, hkv, hd), common.ACT_DTYPE),
+                    }
+            elif kind == "rec":
+                stage[f"sub{j}"] = {
+                    "conv": jnp.zeros(
+                        (repeats, batch, arch.conv_width - 1, d), common.ACT_DTYPE
+                    ),
+                    "h": jnp.zeros((repeats, batch, d), jnp.float32),
+                }
+            else:  # rwkv
+                stage[f"sub{j}"] = {
+                    "s": jnp.zeros((repeats, batch, h, n, n), jnp.float32),
+                    "x_prev": jnp.zeros((repeats, batch, d), common.ACT_DTYPE),
+                    "cm_x_prev": jnp.zeros((repeats, batch, d), common.ACT_DTYPE),
+                }
+        stages.append(stage)
+    # slot -> position maps, one per distinct ring width
+    pos_maps = {}
+    for pattern, _ in transformer.layer_stages(arch):
+        for kind in pattern:
+            if kind == "attn":
+                w = cache_width(arch, kind, kv_len)
+                pos_maps[f"kv_pos_{w}"] = jnp.full((w,), -1, jnp.int32)
+    return {"stages": stages, **pos_maps}
+
+
+# ----------------------------------------------------------------------------
+# prefill
+# ----------------------------------------------------------------------------
+
+
+def prefill(params, batch, arch: ArchConfig, kv_len: int):
+    """Run the full prompt, returning (logits (B,S,V), populated cache)."""
+    logits, _, states = transformer.forward(
+        params, batch, arch, collect_state=True
+    )
+    b, s = batch["tokens"].shape
+    cache = init_cache(arch, b, kv_len)
+
+    for si, (pattern, repeats) in enumerate(transformer.layer_stages(arch)):
+        for j, kind in enumerate(pattern):
+            st = states[si][f"sub{j}"]
+            tgt = cache["stages"][si][f"sub{j}"]
+            if kind == "attn":
+                w = cache_width(arch, kind, kv_len)
+                take = min(s, w)
+                pos = np.arange(s - take, s)
+                slots = pos % w
+                k_tail = st["k"][:, :, s - take :]
+                v_tail = st["v"][:, :, s - take :]
+                if arch.kv_quant:
+                    kq, ks = quantize_kv(k_tail)
+                    vq, vs = quantize_kv(v_tail)
+                    tgt["k"] = tgt["k"].at[:, :, slots].set(kq)
+                    tgt["v"] = tgt["v"].at[:, :, slots].set(vq)
+                    tgt["k_scale"] = tgt["k_scale"].at[:, :, slots].set(ks)
+                    tgt["v_scale"] = tgt["v_scale"].at[:, :, slots].set(vs)
+                else:
+                    tgt["k"] = tgt["k"].at[:, :, slots].set(k_tail)
+                    tgt["v"] = tgt["v"].at[:, :, slots].set(v_tail)
+                cache[f"kv_pos_{w}"] = cache[f"kv_pos_{w}"].at[slots].set(
+                    jnp.asarray(pos, jnp.int32)
+                )
+            elif kind == "rec":
+                tgt["conv"] = st["conv"]
+                tgt["h"] = st["h"]
+            else:
+                tgt["s"] = st["s"]
+                tgt["x_prev"] = st["x_prev"].astype(common.ACT_DTYPE)
+                tgt["cm_x_prev"] = st["cm_x_prev"].astype(common.ACT_DTYPE)
+    return logits, cache
+
+
+# ----------------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------------
+
+
+def _decode_attn(sub, cache, kv_pos, x, pos, arch: ArchConfig):
+    """Single-token attention vs the ring cache. x (B, d) -> (B, d)."""
+    b, d = x.shape
+    hd, hkv = arch.head_dim, arch.n_kv_heads
+    g = arch.n_heads // hkv
+    h1 = x[:, None, :]  # (B, 1, d)
+    q, k, v = attention.qkv_project(sub["mixer"], h1, arch)
+    if arch.mrope:
+        posvec = jnp.broadcast_to(pos[None, None], (3, b, 1)).astype(jnp.int32)
+    else:
+        posvec = jnp.broadcast_to(pos[None], (b, 1)).astype(jnp.int32)
+    q, k = attention.apply_positions(q, k, posvec, arch)
+
+    w = cache["k"].shape[1]
+    slot = (pos % w).astype(jnp.int32)
+    new_entries = {}
+    if arch.kv_quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        ckq = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        cvq = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0, 0))
+        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0, 0))
+        new_entries = {"k": ckq, "v": cvq, "k_scale": cks, "v_scale": cvs}
+        ck = dequantize_kv(ckq, cks, x.dtype)
+        cv = dequantize_kv(cvq, cvs, x.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_entries = {"k": ck, "v": cv}
+
+    qg = q.reshape(b, hkv, g, hd)
+    scores = jnp.einsum(
+        "bhgd,bwhd->bhgw", qg, ck, preferred_element_type=jnp.float32
+    ) / np.sqrt(hd)
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    valid = valid.at[slot].set(True)  # the token just written
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgw,bwhd->bhgd", p.astype(x.dtype), cv,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = out.reshape(b, arch.n_heads * hd) @ sub["mixer"]["wo"].astype(x.dtype)
+    return out, new_entries
+
+
+def _decode_sublayer(kind, sub, lcache, kv_pos_map, x, pos, arch):
+    """One sublayer of decode; x (B, d). Returns (x, new_lcache)."""
+    h = common.rms_norm(x, sub["norm1"], arch.norm_eps)
+    new_cache = dict(lcache)
+    if kind == "attn":
+        w = lcache["k"].shape[1]
+        mixed, kv_new = _decode_attn(sub, lcache, kv_pos_map[w], h, pos, arch)
+        new_cache.update(kv_new)
+    elif kind == "rec":
+        st = rglru.RGLRUState(conv=lcache["conv"], h=lcache["h"])
+        mixed, st_new = rglru.block_step(sub["mixer"], h, st, arch)
+        new_cache.update(conv=st_new.conv, h=st_new.h)
+    else:  # rwkv
+        mixed, s_new = rwkv6.time_mix_step(
+            sub["mixer"], h, lcache["x_prev"].astype(h.dtype), lcache["s"], arch
+        )
+        new_cache.update(s=s_new, x_prev=h.astype(common.ACT_DTYPE))
+    x = x + mixed
+
+    h2 = common.rms_norm(x, sub["norm2"], arch.norm_eps)
+    if arch.moe is not None:
+        ch, _, _ = moe_lib.moe_mixer(sub["channel"], h2[:, None, :], arch)
+        ch = ch[:, 0]
+    elif kind == "rwkv":
+        ch = rwkv6.channel_mix(
+            sub["channel"], h2[:, None, :],
+            lcache["cm_x_prev"].astype(h2.dtype)[:, None, :],
+        )[:, 0]
+        new_cache.update(cm_x_prev=h2.astype(common.ACT_DTYPE))
+    else:
+        ch = common.swiglu(sub["channel"], h2)
+    return x + ch, new_cache
+
+
+def decode_step(params, cache, token: jnp.ndarray, pos: jnp.ndarray, arch):
+    """One decode step. token (B,) int32, pos () int32 (batch-uniform).
+
+    Returns (logits (B, V), new cache).
+    """
+    x = jnp.take(params["embed"], token, axis=0).astype(common.ACT_DTYPE)
+    pos = pos.astype(jnp.int32)
+
+    # slot->position maps advance once per step (shared by all layers)
+    new_pos_maps = {}
+    kv_pos_map = {}
+    for key, arr in cache.items():
+        if key.startswith("kv_pos_"):
+            w = int(key.split("_")[-1])
+            kv_pos_map[w] = arr
+            new_pos_maps[key] = jax.lax.dynamic_update_slice(
+                arr, pos[None], ((pos % w).astype(jnp.int32),)
+            )
+
+    new_stages = []
+    for si, (pattern, repeats) in enumerate(transformer.layer_stages(arch)):
+        stage_params = params[f"stage{si}"]
+        stage_cache = cache["stages"][si]
+
+        def body(xc, inp, _pattern=pattern):
+            layer_params, layer_cache = inp
+            new_lc = {}
+            for j, kind in enumerate(_pattern):
+                xc, nc = _decode_sublayer(
+                    kind, layer_params[f"sub{j}"], layer_cache[f"sub{j}"],
+                    kv_pos_map, xc, pos, arch,
+                )
+                new_lc[f"sub{j}"] = nc
+            return xc, new_lc
+
+        x, new_stage_cache = jax.lax.scan(body, x, (stage_params, stage_cache))
+        new_stages.append(new_stage_cache)
+
+    x = common.rms_norm(x, params["final_norm"], arch.norm_eps)
+    head = (
+        params["embed"].T if arch.tie_embeddings else params["lm_head"]
+    ).astype(x.dtype)
+    logits = (x @ head).astype(jnp.float32)
+    return logits, {"stages": new_stages, **new_pos_maps}
+
+
+@functools.partial(jax.jit, static_argnames=("arch", "steps"))
+def decode_loop(params, cache, first_token, start_pos, arch, steps: int):
+    """Greedy multi-step decode (serving example / tests)."""
+
+    def body(carry, _):
+        tok, pos, cache = carry
+        logits, cache = decode_step(params, cache, tok, pos, arch)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, pos + 1, cache), nxt
+
+    (_, _, cache), toks = jax.lax.scan(
+        body, (first_token, start_pos, cache), None, length=steps
+    )
+    return jnp.moveaxis(toks, 0, 1), cache  # (B, steps)

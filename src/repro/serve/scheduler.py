@@ -1,0 +1,206 @@
+"""Continuous batching: per-slot decode positions + slot recycling.
+
+`engine.decode_step` is batch-uniform (one shared position) — fine for
+static batches, not for a serving system where requests arrive and finish
+at different times.  This module lifts it to per-slot state:
+
+  * ``decode_step_slots``: vmapped single-sequence decode — every batch
+    slot carries its own position and its own ring-buffer slot map, so a
+    slot can be at token 7 while its neighbour is at token 31000.
+  * ``ContinuousBatcher``: admits queued requests into free slots, steps
+    the whole batch at once, retires finished slots, recycles them for the
+    next queued request — vLLM-style iteration-level scheduling expressed
+    over the same jitted step.
+
+Correctness invariant (tested): a request decoded in a mixed batch yields
+exactly the logits it would get decoded alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.serve import engine
+
+
+# ----------------------------------------------------------------------------
+# per-slot decode (vmapped single-sequence step)
+# ----------------------------------------------------------------------------
+
+
+def _cache_batch_axes(cache):
+    """in_axes pytree: batch is axis 1 for stage leaves (L, B, ...), and the
+    kv_pos_* maps are per-slot (B, W) under the slotted layout -> axis 0."""
+
+    def axes_of(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if any(n.startswith("kv_pos_") for n in names):
+            return 0
+        return 1
+
+    return jax.tree_util.tree_map_with_path(axes_of, cache)
+
+
+def slotted_cache(arch: ArchConfig, batch: int, kv_len: int):
+    """Like engine.init_cache but with per-slot (B, W) position maps."""
+    cache = engine.init_cache(arch, batch, kv_len)
+    out = {}
+    for k, v in cache.items():
+        if k.startswith("kv_pos_"):
+            out[k] = jnp.broadcast_to(v, (batch,) + v.shape).copy()
+        else:
+            out[k] = v
+    return out
+
+
+@partial(jax.jit, static_argnames=("arch",))
+def decode_step_slots(params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
+                      arch: ArchConfig):
+    """Per-slot decode: tokens (B,), pos (B,) — independent positions.
+
+    Implemented as vmap of the single-sequence engine.decode_step: params
+    broadcast, every cache leaf mapped over its batch axis.  Returns
+    (logits (B, V), new cache).
+    """
+    axes = _cache_batch_axes(cache)
+
+    def single(cache_1, token_1, pos_1):
+        # re-add the singleton batch dim the engine expects
+        def add_b(path, leaf):
+            names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+            if any(n.startswith("kv_pos_") for n in names):
+                return leaf  # (W,) stays global for this slot
+            return leaf[:, None]
+
+        cache_b = jax.tree_util.tree_map_with_path(add_b, cache_1)
+        logits, new_cache = engine.decode_step(
+            params, cache_b, token_1[None], pos_1, arch
+        )
+
+        def drop_b(path, leaf):
+            names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+            if any(n.startswith("kv_pos_") for n in names):
+                return leaf
+            return leaf[:, 0]
+
+        return logits[0], jax.tree_util.tree_map_with_path(drop_b, new_cache)
+
+    out_axes = (0, _cache_batch_axes(cache))
+    return jax.vmap(single, in_axes=(axes, 0, 0), out_axes=out_axes)(
+        cache, tokens, pos
+    )
+
+
+# ----------------------------------------------------------------------------
+# iteration-level scheduler
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Admit/step/retire loop over a fixed slot count.
+
+    Prefill is per-request (single-sequence) on admission; decode advances
+    every live slot each iteration.  Token-budget variants (chunked prefill)
+    would slot in at `admit` — out of scope here.
+    """
+
+    def __init__(self, params, arch: ArchConfig, n_slots: int, kv_len: int):
+        self.params = params
+        self.arch = arch
+        self.n_slots = n_slots
+        self.kv_len = kv_len
+        self.cache = slotted_cache(arch, n_slots, kv_len)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.pos = np.zeros(n_slots, np.int32)
+        self.next_token = np.zeros(n_slots, np.int32)
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ---- internals ----------------------------------------------------------
+
+    def _write_slot(self, slot: int, cache_1, kv_pos, pos: int, token: int):
+        def write(path, dst, src):
+            names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+            if any(n.startswith("kv_pos_") for n in names):
+                return dst
+            return dst.at[:, slot].set(src[:, 0])
+
+        self.cache = {
+            k: (v.at[slot].set(kv_pos[k]) if k.startswith("kv_pos_") else v)
+            for k, v in self.cache.items()
+        }
+        self.cache = dict(
+            self.cache,
+            stages=jax.tree_util.tree_map_with_path(
+                write, self.cache["stages"], cache_1["stages"]
+            ),
+        )
+        self.pos[slot] = pos
+        self.next_token[slot] = token
+
+    def admit(self):
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                batch = {"tokens": jnp.asarray(req.prompt[None])}
+                logits, cache_1 = engine.prefill(
+                    self.params, batch, self.arch, kv_len=self.kv_len
+                )
+                first = int(jnp.argmax(logits[0, -1]))
+                kv_pos = {
+                    k: v for k, v in cache_1.items() if k.startswith("kv_pos_")
+                }
+                self._write_slot(
+                    slot, cache_1, kv_pos, pos=len(req.prompt), token=first
+                )
+                req.generated.append(first)
+                self.slot_req[slot] = req
+
+    def step(self):
+        """One decode iteration across all live slots."""
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return
+        logits, self.cache = decode_step_slots(
+            self.params, self.cache,
+            jnp.asarray(self.next_token), jnp.asarray(self.pos), self.arch,
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for slot in live:
+            req = self.slot_req[slot]
+            self.pos[slot] += 1
+            self.next_token[slot] = nxt[slot]
+            req.generated.append(int(nxt[slot]))
+            if len(req.generated) >= req.max_new or self.pos[slot] >= self.kv_len - 1:
+                req.done = True
+                self.slot_req[slot] = None  # retire -> slot recycled
+
+    def run(self, max_iters: int = 10_000) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        reqs = list(self.queue)
+        for _ in range(max_iters):
+            self.admit()
+            if not any(self.slot_req) and not self.queue:
+                break
+            self.step()
+        for r in reqs:
+            out[r.uid] = r.generated
+        return out

@@ -1,0 +1,1 @@
+"""Partition rules: FSDP/TP/EP/sequence-parallel specs."""

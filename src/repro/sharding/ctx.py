@@ -1,0 +1,82 @@
+"""Activation-sharding hints: explicit constraints where propagation fails.
+
+XLA's SPMD propagation loses the 'model' sharding at uneven reshapes
+(e.g. (B,S,960)@model -> (B,S,15,64): 60 channels/device cannot tile 15
+heads), silently *replicating* whole attention/RWKV mixers across the model
+axis — measured as a 20x HLO-vs-model FLOP blowup on smollm train_4k
+(EXPERIMENTS.md §Perf iteration 1).  Models therefore place
+with_sharding_constraint at the head/channel-forming reshapes, resolved
+through the hints below so the same model code runs unsharded on CPU tests
+(hints unset -> no-op) and on any mesh the launcher picks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationHints:
+    batch_axes: Tuple[str, ...]  # () to leave batch unsharded
+    model_axis: Optional[str]  # None to leave features unsharded
+    # Korthikanti-style sequence parallelism: the residual stream between
+    # layers is sharded over the model axis on its sequence dim, so the
+    # layer-boundary activations scan-grad stores shrink by the TP degree.
+    # XLA inserts the all-gather/reduce-scatter pair at the TP matmuls.
+    seq_parallel: bool = False
+
+
+_HINTS: Optional[ActivationHints] = None
+
+
+def set_hints(hints: Optional[ActivationHints]) -> None:
+    global _HINTS
+    _HINTS = hints
+
+
+def get_hints() -> Optional[ActivationHints]:
+    return _HINTS
+
+
+class use_hints:
+    """Context manager for scoped hints (used by the dry-run launcher)."""
+
+    def __init__(self, hints: Optional[ActivationHints]):
+        self.hints = hints
+        self.prev = None
+
+    def __enter__(self):
+        global _HINTS
+        self.prev = _HINTS
+        _HINTS = self.hints
+        return self.hints
+
+    def __exit__(self, *exc):
+        global _HINTS
+        _HINTS = self.prev
+        return False
+
+
+def constrain(x, dims: Tuple[Optional[str], ...]):
+    """Apply with_sharding_constraint resolved from hints.
+
+    dims entries: 'batch' | 'model' | None, one per array dim.
+    No-op when hints are unset (single-device tests) or when the requested
+    axis is absent from the hints.
+    """
+    h = _HINTS
+    if h is None:
+        return x
+    spec = []
+    for d in dims:
+        if d == "batch" and h.batch_axes:
+            spec.append(h.batch_axes if len(h.batch_axes) > 1 else h.batch_axes[0])
+        elif d == "model" and h.model_axis:
+            spec.append(h.model_axis)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

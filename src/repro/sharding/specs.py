@@ -1,0 +1,222 @@
+"""Partition rules: FSDP over 'data', TP over 'model', DP over 'pod'.
+
+Parameters
+  Stacked per-stage weights carry a leading layer axis — FSDP shards it over
+  'data' (ZeRO-3: every device holds 1/16 of every layer's weights and
+  optimizer state; all-gather on use, reduce-scatter on grads — inserted by
+  the SPMD partitioner).  Tensor-parallel 'model' sharding follows the
+  standard Megatron pattern: column-parallel in-projections, row-parallel
+  out-projections, experts over 'model' when the expert count divides it
+  (EP), expert-hidden otherwise.  Uneven head counts (smollm's 15, phi4's
+  24) are allowed — XLA pads the shard.
+
+Activations
+  Batch shards over ('pod','data'); heads / expert / vocab dims follow the
+  params via propagation.  Decode KV caches shard their *sequence* axis over
+  'model' (sequence-parallel flash-decode): any GQA ratio works, including
+  MQA, because heads stay local — see serve/engine.py.
+
+The HLL sketch registers are replicated (P()); the per-shard partial
+sketches merge through an all-reduce-MAX that SPMD inserts because
+segment_max's output is requested replicated — the paper's Fig. 3 fold.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+DATA_AXES = ("pod", "data")  # batch axes (pod may be absent on single-pod)
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+# ----------------------------------------------------------------------------
+# parameter specs
+# ----------------------------------------------------------------------------
+
+# leaf-name -> (tp_dim_from_right_of_unstacked, row_parallel)
+_TP_RULES = {
+    # attention
+    "wq": ("col",),
+    "wk": ("col",),
+    "wv": ("col",),
+    "wo": ("row",),
+    "wg": ("col",),
+    # swiglu / rwkv channel
+    "gate": ("col",),
+    "up": ("col",),
+    "down": ("row",),
+    "wk_cm": ("col",),
+    # rglru
+    "w_x": ("col",),
+    "w_gate": ("col",),
+    "w_a": ("col",),
+    "w_i": ("col",),
+    "w_out": ("row",),
+    # rwkv decay lora (d, rank)/(rank, d): keep replicated (tiny)
+}
+
+
+def _add_fsdp(dims: list, shape, data_size: int) -> list:
+    """Place the FSDP 'data' axis on the largest free dim it divides.
+
+    pjit in_shardings demand exact divisibility (a 22-layer stack cannot
+    shard over data=16), so the axis goes to the biggest divisible dim —
+    usually the stacked-layer dim, else a weight matrix dim — or nowhere.
+    """
+    candidates = sorted(
+        (i for i in range(len(dims)) if dims[i] is None),
+        key=lambda i: -shape[i],
+    )
+    for i in candidates:
+        if shape[i] % data_size == 0 and shape[i] >= data_size:
+            dims[i] = FSDP_AXIS
+            break
+    return dims
+
+
+def _param_spec(
+    path: Tuple, leaf, arch: ArchConfig, data_size: int, model_size: int
+) -> P:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    leaf_name = str(names[-1])
+    shape = tuple(leaf.shape)
+    ndim = leaf.ndim
+    dims: list = [None] * ndim
+
+    def tp(dim_idx: int):
+        """Apply TP to a dim if it divides the model axis."""
+        if shape[dim_idx] % model_size == 0 and shape[dim_idx] >= model_size:
+            dims[dim_idx] = TP_AXIS
+
+    if leaf_name == "embed":
+        tp(0)  # vocab-parallel
+        return P(*dims)
+    if leaf_name == "lm_head":
+        tp(1)
+        return P(*dims)
+    if ndim <= 1:
+        return P(*dims)
+
+    stacked = any(str(n).startswith("stage") for n in names)
+    off = 1 if stacked else 0
+    inner = ndim - off
+    moe = arch.moe
+    in_moe = moe is not None and leaf_name in ("gate", "up", "down", "router")
+
+    if in_moe and leaf_name != "router" and inner == 3:
+        if moe.sharding == "ep" and moe.num_experts % model_size == 0:
+            tp(off + 0)  # experts over 'model' (EP)
+        elif leaf_name == "down":  # (E, f, d): expert-hidden TP
+            tp(off + 1)
+        else:  # (E, d, f)
+            tp(off + 2)
+    elif not in_moe:
+        rule = _TP_RULES.get(leaf_name)
+        if rule and inner == 2:
+            tp(off + (1 if rule[0] == "col" else 0))
+
+    return P(*_add_fsdp(dims, shape, data_size))
+
+
+def param_specs(params_tree, arch: ArchConfig, data_size: int = 16,
+                model_size: int = 16):
+    """PartitionSpec pytree matching the model param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(path, leaf, arch, data_size, model_size),
+        params_tree,
+    )
+
+
+def param_shardings(params_tree, arch: ArchConfig, mesh: Mesh):
+    specs = param_specs(
+        params_tree, arch,
+        data_size=mesh.shape.get(FSDP_AXIS, 1),
+        model_size=mesh.shape.get(TP_AXIS, 1),
+    )
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ----------------------------------------------------------------------------
+# batch / cache specs
+# ----------------------------------------------------------------------------
+
+
+def batch_spec(arch: ArchConfig, mesh: Mesh, global_batch: int, key: str) -> P:
+    dp = data_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    bdim = dp if global_batch % n_dp == 0 else None  # tiny batches replicate
+    if key == "positions" and arch.mrope:
+        return P(None, bdim, None)
+    if key == "frontend_embeds":
+        return P(bdim, None, None)
+    if key in ("token", "pos_scalar"):
+        return P(bdim) if key == "token" else P()
+    return P(bdim, None)  # tokens / targets / positions (B, S)
+
+
+def batch_specs(arch: ArchConfig, mesh: Mesh, global_batch: int, batch_tree):
+    return {
+        k: batch_spec(arch, mesh, global_batch, k) for k in batch_tree
+    }
+
+
+def cache_specs(cache_tree, arch: ArchConfig, mesh: Mesh, global_batch: int):
+    """Decode-cache specs: batch over data axes, KV sequence over 'model'.
+
+    Every placement is divisibility-checked (pjit requirement); when a
+    preferred dim does not divide, the next candidate dim is tried, else
+    that dim stays replicated.
+    """
+    dp = data_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    bdim = dp if global_batch % n_dp == 0 else None
+    tp_size = mesh.shape.get(TP_AXIS, 1)
+
+    def spec(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        leaf_name = names[-1]
+        shape = tuple(leaf.shape)
+        if leaf_name.startswith("kv_pos"):
+            return P(None)
+
+        def tp_first(dims, candidates):
+            for c in candidates:
+                if shape[c] % tp_size == 0 and shape[c] >= tp_size:
+                    dims[c] = TP_AXIS
+                    return dims
+            return dims
+
+        if leaf_name in ("k", "v"):  # (L, B, W, Hkv, hd): seq over model
+            dims = [None, bdim, None, None, None]
+            return P(*tp_first(dims, [2, 4]))
+        if leaf_name in ("k_scale", "v_scale"):  # (L, B, W, Hkv, 1)
+            dims = [None, bdim, None, None, None]
+            return P(*tp_first(dims, [2]))
+        if leaf_name == "s":  # rwkv state (L, B, H, N, N)
+            dims = [None, bdim, None, None, None]
+            return P(*tp_first(dims, [2, 3]))  # heads, else key-dim
+        if leaf_name == "conv":  # (L, B, w-1, d)
+            dims = [None, bdim, None, None]
+            return P(*tp_first(dims, [3]))
+        if leaf_name == "h":  # (L, B, d)
+            dims = [None, bdim, None]
+            return P(*tp_first(dims, [2]))
+        if leaf_name in ("x_prev", "cm_x_prev"):  # (L, B, d) replicated d
+            return P(None, bdim, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

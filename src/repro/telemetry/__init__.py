@@ -1,0 +1,1 @@
+"""First-class streaming-statistics layer (the paper's sketch on the datapath)."""

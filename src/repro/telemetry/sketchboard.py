@@ -1,0 +1,59 @@
+"""StreamSketch: the paper's sketch as a first-class telemetry feature.
+
+Wraps HLL registers with named streams so a training/serving job can track
+several cardinalities at once (distinct tokens, distinct users/request ids,
+distinct (token, expert) routing pairs for MoE collapse detection) — each
+one is 48 KiB of state and one all-reduce-max per merge, regardless of
+stream size.  The exact host-side estimate (core.hll.estimate) finalizes a
+report, mirroring the paper's constant-time computation phase.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core import hll
+from repro.core.hll import HLLConfig
+
+
+@dataclasses.dataclass
+class StreamSketch:
+    cfg: HLLConfig
+    registers: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def stream(self, name: str) -> jnp.ndarray:
+        if name not in self.registers:
+            self.registers[name] = hll.init_registers(self.cfg)
+            self.counts[name] = 0
+        return self.registers[name]
+
+    def observe(self, name: str, items: jnp.ndarray) -> None:
+        regs = self.stream(name)
+        self.registers[name] = hll.update(regs, items, self.cfg)
+        self.counts[name] += int(items.size)
+
+    def merge_from(self, other: "StreamSketch") -> None:
+        for name, regs in other.registers.items():
+            mine = self.stream(name)
+            self.registers[name] = jnp.maximum(mine, regs)
+            self.counts[name] += other.counts.get(name, 0)
+
+    def estimate(self, name: str) -> float:
+        return hll.estimate(self.stream(name), self.cfg)
+
+    def report(self) -> Dict[str, dict]:
+        out = {}
+        for name in self.registers:
+            est = self.estimate(name)
+            seen = self.counts[name]
+            out[name] = {
+                "estimate": est,
+                "items_seen": seen,
+                "duplication": (seen / est) if est > 0 else float("nan"),
+                "stderr_expected": hll.standard_error(self.cfg),
+            }
+        return out

@@ -1,0 +1,91 @@
+"""Straggler / hang mitigation for synchronous SPMD training.
+
+In a synchronous-SPMD job one slow or wedged worker stalls every step
+(collectives block).  The framework's mitigation layers:
+
+  1. DETECT — ``StepWatchdog`` tracks a robust running estimate of step
+     time (median + MAD) and flags steps beyond ``k_mad`` deviations; a
+     hard ``timeout_factor`` classifies a wedge.
+  2. BOUND THE BLAST RADIUS — steps are small quanta (grad-accum keeps the
+     per-step wall time minutes, not hours) and checkpoints are cheap and
+     async (checkpoint/ckpt.py), so restart loses at most ckpt_every steps.
+  3. RECOVER — the driver-side policy object says what to do: keep going
+     (transient), snapshot now (degrading), or abort-for-restart (wedged;
+     the cluster manager restarts the job, train/loop.py resumes from the
+     latest checkpoint, and the step-indexed data pipeline replays exactly
+     the lost steps).  The HLL sketch is replay-immune by construction.
+
+Nothing here inspects other hosts — in SPMD every host observes the same
+stall because every host waits on the same collective, so local step-time
+is the globally-correct signal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import List, Optional
+
+
+class Verdict(enum.Enum):
+    OK = "ok"
+    SLOW = "slow"  # straggling: snapshot soon
+    WEDGED = "wedged"  # abort and restart from checkpoint
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    """Robust step-time anomaly detector (median + MAD)."""
+
+    warmup_steps: int = 5  # compile/first-steps excluded from stats
+    k_mad: float = 6.0  # SLOW threshold: median + k * MAD
+    timeout_factor: float = 10.0  # WEDGED threshold: factor over median
+    min_timeout_s: float = 1.0
+
+    _durations: List[float] = dataclasses.field(default_factory=list)
+    _t_start: Optional[float] = None
+    slow_count: int = 0
+    wedged_count: int = 0
+
+    def step_begin(self) -> None:
+        self._t_start = time.perf_counter()
+
+    def _stats(self):
+        xs = sorted(self._durations)
+        n = len(xs)
+        med = xs[n // 2]
+        mad = sorted(abs(x - med) for x in xs)[n // 2]
+        return med, max(mad, med * 0.01)
+
+    def step_end(self) -> Verdict:
+        assert self._t_start is not None, "step_begin not called"
+        dt = time.perf_counter() - self._t_start
+        self._t_start = None
+
+        if len(self._durations) < self.warmup_steps:
+            self._durations.append(dt)
+            return Verdict.OK
+
+        med, mad = self._stats()
+        verdict = Verdict.OK
+        if dt > max(self.timeout_factor * med, self.min_timeout_s):
+            self.wedged_count += 1
+            verdict = Verdict.WEDGED
+        elif dt > med + self.k_mad * mad:
+            self.slow_count += 1
+            verdict = Verdict.SLOW
+        else:
+            # only healthy steps update the baseline (stragglers must not
+            # poison the estimate)
+            self._durations.append(dt)
+            if len(self._durations) > 256:
+                self._durations.pop(0)
+        return verdict
+
+    def deadline_s(self) -> float:
+        """Current hard-timeout for external watchers (collective timeout)."""
+        if len(self._durations) < self.warmup_steps:
+            return float("inf")
+        med, _ = self._stats()
+        return max(self.timeout_factor * med, self.min_timeout_s)

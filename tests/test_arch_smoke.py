@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step on
+CPU, asserting output shapes and no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import transformer
+from repro.optim.adamw import OptimizerConfig
+from repro.train.step import TrainConfig, init_train_state, train_step
+from repro.core.hll import HLLConfig
+
+B, S = 2, 64
+
+
+def _batch(arch, key=1):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0, arch.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    if arch.mrope:
+        batch["positions"] = transformer.default_positions(arch, B, S)
+    if arch.frontend_stub_len:
+        batch["frontend_embeds"] = (
+            jax.random.normal(
+                jax.random.PRNGKey(key + 1),
+                (B, arch.frontend_stub_len, arch.d_model),
+            ).astype(jnp.bfloat16)
+            * 0.02
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_shapes_and_no_nans(arch_id):
+    arch = get_arch(arch_id).reduced()
+    params = transformer.init_params(jax.random.PRNGKey(0), arch)
+    batch = _batch(arch)
+    logits, aux, _ = transformer.forward(params, batch, arch)
+    assert logits.shape == (B, S, arch.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_one_train_step(arch_id):
+    arch = get_arch(arch_id).reduced()
+    cfg = TrainConfig(
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10),
+        sketch=HLLConfig(p=8, hash_bits=32),
+    )
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+    state, metrics = train_step(state, _batch(arch), arch, cfg)
+    assert int(state["step"]) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["distinct_tokens"]) > 0
+    # params actually moved
+    leaves0 = jax.tree_util.tree_leaves(state["params"])
+    assert all(np.all(np.isfinite(np.asarray(l, np.float32))) for l in leaves0)
+
+
+def test_full_configs_match_published_sizes():
+    """Guard against config drift: total params within 2% of published."""
+    from repro.models import registry
+
+    expect = {
+        "olmoe-1b-7b": 6.9e9,
+        "mixtral-8x7b": 46.7e9,
+        "rwkv6-3b": 3.1e9,
+        "tinyllama-1.1b": 1.1e9,
+        "phi4-mini-3.8b": 3.84e9,
+        "smollm-360m": 0.362e9,
+        "qwen3-32b": 32.8e9,
+        "musicgen-medium": 1.8e9,
+        "recurrentgemma-9b": 9.4e9,
+        "qwen2-vl-72b": 72.7e9,
+    }
+    for a, n in expect.items():
+        got = registry.param_count(get_arch(a))
+        assert abs(got - n) / n < 0.02, (a, got, n)
+
+
+def test_moe_active_params():
+    from repro.models import registry
+
+    olmoe = get_arch("olmoe-1b-7b")
+    assert abs(registry.param_count(olmoe, active_only=True) - 1.28e9) < 0.1e9
+    mix = get_arch("mixtral-8x7b")
+    assert abs(registry.param_count(mix, active_only=True) - 12.9e9) < 0.3e9
+
+
+def test_layer_stages_cover_all_layers():
+    from repro.models.transformer import layer_stages
+
+    for arch_id in ARCH_IDS:
+        arch = get_arch(arch_id)
+        total = sum(len(p) * r for p, r in layer_stages(arch))
+        assert total == arch.n_layers, arch_id
+    rg = get_arch("recurrentgemma-9b")
+    stages = layer_stages(rg)
+    assert stages[0] == (("rec", "rec", "attn"), 12)
+    assert stages[1] == (("rec", "rec"), 1)

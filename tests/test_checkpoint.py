@@ -1,0 +1,118 @@
+"""Checkpoint/restart + elastic resume + fault-tolerance invariants."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_arch
+from repro.core import hll
+from repro.core.hll import HLLConfig
+from repro.data.pipeline import DataConfig, batch_at_step
+from repro.optim.adamw import OptimizerConfig
+from repro.train.step import TrainConfig, init_train_state, make_jitted_step
+from repro.train.loop import LoopConfig, train
+
+
+def _tiny():
+    arch = get_arch("smollm-360m").reduced()
+    cfg = TrainConfig(
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=30),
+        sketch=HLLConfig(p=8, hash_bits=32),
+    )
+    data = DataConfig(vocab_size=arch.vocab_size, global_batch=2, seq_len=32)
+    return arch, cfg, data
+
+
+def test_save_restore_roundtrip(tmp_path):
+    arch, cfg, _ = _tiny()
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+    ckpt.save(state, str(tmp_path), 5)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    restored = ckpt.restore(state, str(tmp_path), 5)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save(tmp_path):
+    arch, cfg, _ = _tiny()
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+    handle = ckpt.save(state, str(tmp_path), 7, async_write=True)
+    handle.join()
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    ckpt.restore(state, str(tmp_path), 7)
+
+
+def test_restart_resumes_exactly(tmp_path):
+    """Train 10 steps with ckpt@5, kill, resume: must equal uninterrupted run."""
+    arch, cfg, data = _tiny()
+    loop_a = LoopConfig(total_steps=10, ckpt_every=100, ckpt_dir=None, log_every=100)
+    # uninterrupted 10 steps
+    state_full, _ = train(arch, cfg, data, loop_a, log_fn=lambda s: None)
+
+    # interrupted: 5 steps, checkpoint, then resume to 10
+    d = str(tmp_path / "ck")
+    loop_b = LoopConfig(total_steps=5, ckpt_every=5, ckpt_dir=d,
+                        async_ckpt=False, log_every=100)
+    train(arch, cfg, data, loop_b, log_fn=lambda s: None)
+    loop_c = LoopConfig(total_steps=10, ckpt_every=100, ckpt_dir=d,
+                        async_ckpt=False, log_every=100)
+    state_resumed, _ = train(arch, cfg, data, loop_c, log_fn=lambda s: None)
+
+    a = np.asarray(state_full["params"]["embed"], np.float32)
+    b = np.asarray(state_resumed["params"]["embed"], np.float32)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+    assert int(state_resumed["step"]) == 10
+
+
+def test_crash_safe_write(tmp_path):
+    """A temp dir from a crashed write must not be visible as a checkpoint."""
+    arch, cfg, _ = _tiny()
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+    os.makedirs(tmp_path / ".tmp_step_99")  # simulated crash debris
+    ckpt.save(state, str(tmp_path), 3)
+    assert ckpt.latest_step(str(tmp_path)) == 3  # 99 not visible
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    arch, cfg, _ = _tiny()
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+    ckpt.save(state, str(tmp_path), 1)
+    with pytest.raises((ValueError, KeyError)):
+        ckpt.restore({"just": jnp.zeros(3)}, str(tmp_path), 1)
+
+
+def test_elastic_resume_resharding(tmp_path):
+    """Restore onto a different device layout (elastic rescale path)."""
+    arch, cfg, _ = _tiny()
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+    ckpt.save(state, str(tmp_path), 2)
+    mesh = jax.make_mesh(
+        (jax.device_count(),), ("data",),
+        axis_types=(jax.sharding.AxisType.Auto,),
+    )
+    shardings = jax.tree.map(
+        lambda _: jax.NamedSharding(mesh, jax.sharding.PartitionSpec()), state
+    )
+    restored = ckpt.restore(state, str(tmp_path), 2, shardings=shardings)
+    np.testing.assert_array_equal(
+        np.asarray(restored["sketch"]), np.asarray(state["sketch"])
+    )
+
+
+def test_sketch_replay_immune():
+    """Fault-tolerance invariant: re-aggregating a replayed batch is a no-op
+    on the sketch (max-lattice idempotence) — the recovery path cannot skew
+    cardinality telemetry."""
+    cfg = HLLConfig(p=8, hash_bits=32)
+    data = DataConfig(vocab_size=5000, global_batch=2, seq_len=64)
+    regs = hll.init_registers(cfg)
+    batch = batch_at_step(data, jnp.asarray(3))
+    once = hll.update(regs, batch["tokens"], cfg)
+    replay = hll.update(once, batch["tokens"], cfg)  # crash/restart replay
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(replay))

@@ -1,0 +1,116 @@
+"""Dry-run machinery on a small faked-device mesh (subprocess-isolated).
+
+The production dry-run needs 512 placeholder devices, which must be
+configured before jax initializes — so these tests exec a fresh python with
+XLA_FLAGS set, proving the exact code path the launcher uses (reduced
+configs, 2x2 mesh) without polluting this process's device count.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_in_subprocess(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_reduced_cell_lowers_on_faked_mesh():
+    out = _run_in_subprocess("""
+        import jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.sharding import specs as shardspecs, ctx as shardctx
+        from repro.train.step import TrainConfig, init_train_state, train_step
+        from repro.core.hll import HLLConfig
+        from repro.launch import hlo_analysis
+
+        arch = get_arch("tinyllama-1.1b").reduced()
+        cfg = TrainConfig(sketch=HLLConfig(p=8, hash_bits=32))
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        state_avals = jax.eval_shape(
+            lambda k: init_train_state(k, arch, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        pspecs = shardspecs.param_specs(
+            state_avals["params"], arch, data_size=4, model_size=2)
+        named = lambda t: jax.tree.map(lambda sp: NamedSharding(mesh, sp), t)
+        state_sh = {"params": named(pspecs),
+                    "opt": {"mu": named(pspecs), "nu": named(pspecs),
+                            "count": NamedSharding(mesh, P()), "ef": None},
+                    "step": NamedSharding(mesh, P()),
+                    "sketch": NamedSharding(mesh, P())}
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+                 "targets": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+        batch_sh = {k: NamedSharding(mesh, P(("data",), None)) for k in batch}
+        hints = shardctx.ActivationHints(batch_axes=("data",), model_axis="model")
+        with mesh, shardctx.use_hints(hints):
+            lowered = jax.jit(partial(train_step, arch=arch, cfg=cfg),
+                              in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None),
+                              donate_argnums=(0,)).lower(state_avals, batch)
+        compiled = lowered.compile()
+        an = hlo_analysis.analyze(compiled.as_text())
+        assert an.flops > 0 and an.n_while_loops >= 1
+        assert an.collective_bytes > 0  # TP all-reduces must be present
+        print("OK", an.n_while_loops, int(an.collective_bytes))
+    """)
+    assert out.startswith("OK")
+
+
+@pytest.mark.slow
+def test_make_production_mesh_shapes():
+    out = _run_in_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.mesh import make_production_mesh, n_chips
+        m1 = make_production_mesh(multi_pod=False)
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m1.shape) == {"data": 16, "model": 16}, m1.shape
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}, m2.shape
+        assert n_chips(m1) == 256 and n_chips(m2) == 512
+        m3 = make_production_mesh(multi_pod=False, tp=4)
+        assert dict(m3.shape) == {"data": 64, "model": 4}
+        print("OK")
+    """)
+    assert out.startswith("OK")
+
+
+def test_dryrun_artifacts_complete():
+    """The committed sweep must cover every (arch x shape x mesh) cell."""
+    d = os.path.join(REPO, "experiments", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("sweep artifacts not present")
+    from repro.configs import ARCH_IDS, SHAPES
+
+    files = {f for f in os.listdir(d) if f.endswith(".json")}
+    missing, bad = [], []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                name = f"{a}__{s}__{mesh}.json"
+                if name not in files:
+                    missing.append(name)
+                    continue
+                rec = json.load(open(os.path.join(d, name)))
+                if rec["status"] == "error":
+                    bad.append(name)
+    assert not missing, missing
+    assert not bad, bad

@@ -1,0 +1,189 @@
+"""HLL Algorithm-1 behaviour: accuracy bands, corrections, lattice laws."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import exact as exactlib
+from repro.core import hll, sketch as sketchlib
+from repro.core.hll import HLLConfig
+
+CFG64 = HLLConfig(p=14, hash_bits=64)
+CFG32 = HLLConfig(p=14, hash_bits=32)
+
+
+def _rand_items(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 2**31, n, dtype=np.int32)
+
+
+# ----------------------------------------------------------------------------
+# accuracy
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p,H", [(14, 32), (14, 64), (16, 32), (16, 64)])
+def test_accuracy_within_band(p, H):
+    """Paper Fig. 1: error stays within a few sigma outside the LC transition."""
+    cfg = HLLConfig(p=p, hash_bits=H)
+    n = 40 * cfg.m  # well past the 5/2*m transition zone
+    items = _rand_items(n, seed=p * H)
+    est = hll.cardinality(jnp.asarray(items), cfg)
+    ex = exactlib.exact_distinct(items)
+    assert abs(est - ex) / ex < 5 * hll.standard_error(cfg)
+
+
+def test_small_range_uses_linear_counting():
+    """n << m: estimate must be the LC value and be very accurate."""
+    cfg = CFG64
+    items = _rand_items(500, seed=1)
+    regs = hll.update(hll.init_registers(cfg), jnp.asarray(items), cfg)
+    est = hll.estimate(regs, cfg)
+    v = int(np.count_nonzero(np.asarray(regs) == 0))
+    assert est == pytest.approx(cfg.m * math.log(cfg.m / v))
+    assert abs(est - 500) / 500 < 0.03
+
+
+def test_large_range_correction_32bit():
+    """H=32 with nearly-saturated registers triggers the 2^32 correction."""
+    cfg = HLLConfig(p=14, hash_bits=32)
+    # synthetic registers deep enough that E > 2^32/30
+    regs = np.full(cfg.m, 18, np.uint8)
+    e = hll.estimate(jnp.asarray(regs), cfg)
+    raw = hll.alpha(cfg.m) * cfg.m * cfg.m / (cfg.m * 2.0**-18)
+    assert raw > 2**32 / 30
+    assert e == pytest.approx(-(2.0**32) * math.log(1 - raw / 2**32))
+    # 64-bit hash: same registers, no large-range correction applied
+    cfg64 = HLLConfig(p=14, hash_bits=64)
+    assert hll.estimate(jnp.asarray(regs), cfg64) == pytest.approx(raw)
+
+
+def test_device_estimator_matches_host():
+    cfg = CFG64
+    for n in (100, 5_000, 300_000):
+        regs = hll.update(
+            hll.init_registers(cfg), jnp.asarray(_rand_items(n, seed=n)), cfg
+        )
+        host = hll.estimate(regs, cfg)
+        dev = float(hll.estimate_device(regs, cfg))
+        assert abs(dev - host) / host < 1e-4
+
+
+def test_memory_footprint_table2():
+    """Paper Tab. II: footprints for (p,H) in {14,16}x{32,64}."""
+    kib = lambda cfg: cfg.memory_footprint_bits / 8 / 1024
+    assert kib(HLLConfig(p=14, hash_bits=32)) == 10
+    assert kib(HLLConfig(p=14, hash_bits=64)) == 12
+    assert kib(HLLConfig(p=16, hash_bits=32)) == 40
+    assert kib(HLLConfig(p=16, hash_bits=64)) == 48
+    assert HLLConfig(p=14, hash_bits=32).register_bits == 5
+    assert HLLConfig(p=16, hash_bits=64).register_bits == 6
+
+
+def test_max_rank_eq2():
+    assert HLLConfig(p=16, hash_bits=64).max_rank == 49
+    assert HLLConfig(p=14, hash_bits=32).max_rank == 19
+
+
+# ----------------------------------------------------------------------------
+# lattice / merge laws (the basis for the paper's multi-pipeline fold)
+# ----------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200),
+    st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200),
+)
+def test_merge_equals_union(xs, ys):
+    cfg = HLLConfig(p=8, hash_bits=64)
+    a = hll.update(hll.init_registers(cfg), jnp.asarray(xs, jnp.int32), cfg)
+    b = hll.update(hll.init_registers(cfg), jnp.asarray(ys, jnp.int32), cfg)
+    both = hll.update(
+        hll.init_registers(cfg), jnp.asarray(xs + ys, jnp.int32), cfg
+    )
+    np.testing.assert_array_equal(np.asarray(hll.merge(a, b)), np.asarray(both))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200))
+def test_update_idempotent_and_permutation_invariant(xs):
+    cfg = HLLConfig(p=8, hash_bits=32)
+    arr = jnp.asarray(xs, jnp.int32)
+    once = hll.update(hll.init_registers(cfg), arr, cfg)
+    twice = hll.update(once, arr, cfg)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+    perm = jnp.asarray(list(reversed(xs)), jnp.int32)
+    p_regs = hll.update(hll.init_registers(cfg), perm, cfg)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(p_regs))
+
+
+def test_monotone_in_data():
+    cfg = CFG64
+    items = _rand_items(10_000, seed=5)
+    r1 = hll.update(hll.init_registers(cfg), jnp.asarray(items[:5000]), cfg)
+    r2 = hll.update(r1, jnp.asarray(items[5000:]), cfg)
+    assert (np.asarray(r2) >= np.asarray(r1)).all()
+
+
+# ----------------------------------------------------------------------------
+# multi-pipeline (paper Fig. 3)
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipelines", [1, 2, 4, 8, 16])
+def test_pipelined_equals_single(pipelines):
+    """k pipelines + merge-buckets fold == one pipeline, bit-for-bit."""
+    cfg = HLLConfig(p=12, hash_bits=64)
+    items = jnp.asarray(_rand_items(1 << 14, seed=9))
+    single = hll.update(hll.init_registers(cfg), items, cfg)
+    multi = sketchlib.update_pipelined(
+        hll.init_registers(cfg), items, cfg, pipelines=pipelines
+    )
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(multi))
+
+
+def test_sketch_carrier_merge():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    a = sketchlib.Sketch.init(cfg)
+    b = sketchlib.Sketch.init(cfg)
+    a = sketchlib.update(a, jnp.asarray(_rand_items(1000, 1)), cfg)
+    b = sketchlib.update(b, jnp.asarray(_rand_items(1000, 2)), cfg)
+    ab = sketchlib.merge(a, b)
+    assert int(ab.n_items) == 2000
+    assert (np.asarray(ab.registers) >= np.asarray(a.registers)).all()
+
+
+def test_update_sharded_matches_local():
+    """Device-merged sketch == single-device sketch on the same stream."""
+    cfg = HLLConfig(p=10, hash_bits=64)
+    items = jnp.asarray(_rand_items(1 << 12, seed=11))
+    devs = jax.devices()
+    mesh = jax.make_mesh((len(devs),), ("data",))
+    out = sketchlib.update_sharded(hll.init_registers(cfg), items, cfg, mesh)
+    ref = hll.update(hll.init_registers(cfg), items, cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ----------------------------------------------------------------------------
+# baselines
+# ----------------------------------------------------------------------------
+
+
+def test_linear_counting_standalone():
+    cfg = HLLConfig(p=14, hash_bits=32)
+    items = _rand_items(3000, seed=13)
+    bm = exactlib.linear_counting_registers(jnp.asarray(items), cfg)
+    est = exactlib.linear_counting_estimate(bm, cfg.m)
+    ex = exactlib.exact_distinct(items)
+    assert abs(est - ex) / ex < 0.05
+
+
+def test_sublinear_memory_motivation():
+    """Paper §I: sketch memory constant vs naive linear growth."""
+    cfg = HLLConfig(p=16, hash_bits=64)
+    assert cfg.memory_footprint_bits / 8 == 48 * 1024
+    assert exactlib.naive_distinct_mem_bytes(10**9) > 1000 * cfg.memory_footprint_bits

@@ -1,0 +1,123 @@
+"""Scan-aware HLO analyzer: validated against known-FLOP graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile()
+
+
+def test_plain_matmul_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, b)
+    an = H.analyze(c.as_text())
+    assert an.flops == 2 * 64 * 128 * 32
+    assert an.n_while_loops == 0
+
+
+def test_scan_trip_count_correction():
+    """The analyzer must recover the x8 the raw cost_analysis drops."""
+
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    c = _compile(scanned, x, ws)
+    an = H.analyze(c.as_text())
+    expected = 8 * 2 * 128 * 256 * 256
+    assert an.flops == expected
+    assert an.n_while_loops == 1
+    assert list(an.trip_counts.values()) == [8]
+    # and confirm the raw counter is indeed wrong (the reason this exists)
+    raw = c.cost_analysis()["flops"]
+    assert raw == pytest.approx(expected / 8, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def nested(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    c = _compile(nested, x, ws)
+    an = H.analyze(c.as_text())
+    assert an.flops == 5 * 4 * 2 * 32 * 64 * 64
+    assert sorted(an.trip_counts.values()) == [4, 5]
+
+
+def test_trip_hints_override():
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 16, 16), jnp.float32)
+    c = _compile(scanned, x, ws)
+    an = H.analyze(c.as_text())
+    body_name = list(an.trip_counts)[0]
+    an2 = H.analyze(c.as_text(), trip_hints={body_name: 100})
+    assert an2.flops == pytest.approx(an.flops * 100 / 3)
+
+
+def test_bytes_reasonable_for_copy():
+    """Memory accounting: a big elementwise op reads+writes its arrays."""
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = _compile(lambda x: x * 2.0 + 1.0, a)
+    an = H.analyze(c.as_text())
+    nbytes = 1024 * 1024 * 4
+    assert nbytes * 2 <= an.bytes <= nbytes * 6  # in + out (+fusion slack)
+
+
+def test_collective_detection_and_bytes():
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh(
+        (len(devs),), ("d",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    from jax.sharding import PartitionSpec as P
+
+    def f(x):
+        return jax.lax.psum(x, "d")
+
+    sharded = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
+                            check_vma=False)
+    x = jax.ShapeDtypeStruct((len(devs) * 8, 128), jnp.float32)
+    c = jax.jit(sharded).lower(x).compile()
+    an = H.analyze(c.as_text())
+    # single-device lowering may elide the collective; multi-device must not
+    if len(devs) > 1:
+        assert an.collective_bytes > 0
+        assert "all-reduce" in an.collectives_by_kind
+
+
+def test_roofline_terms_math():
+    an = H.Analysis(
+        flops=197e12, bytes=819e9, collective_bytes=100e9,
+        collectives_by_kind={"all-reduce": 100e9}, n_while_loops=0,
+        trip_counts={},
+    )
+    t = H.roofline_terms(an, n_chips=1, model_flops=197e12 / 2)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(2.0)
+    assert t["dominant"] == "collective_s"
+    assert t["useful_flop_ratio"] == pytest.approx(0.5)

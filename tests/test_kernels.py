@@ -1,0 +1,167 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles — shape/dtype sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hll
+from repro.core.hll import HLLConfig
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _items(n, dtype=np.uint32, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    hi = 2**31 if np.issubdtype(dtype, np.signedinteger) else 2**32
+    return jnp.asarray(rng.integers(0, hi, n, dtype=dtype))
+
+
+# ----------------------------------------------------------------------------
+# hash_rank
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 127, 128, 1024, 8192, 10_000])
+@pytest.mark.parametrize("hash_bits", [32, 64])
+def test_hash_rank_shape_sweep(n, hash_bits):
+    cfg = HLLConfig(p=16 if hash_bits == 64 else 14, hash_bits=hash_bits)
+    items = _items(n, seed=n * hash_bits)
+    idx, rank = ops.hash_rank(items, cfg, interpret=True)
+    ridx, rrank = ref.hash_rank_ref(items, cfg)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(rrank))
+
+
+@pytest.mark.parametrize("dtype", [np.uint32, np.int32])
+def test_hash_rank_dtype_sweep(dtype):
+    cfg = HLLConfig(p=14, hash_bits=64)
+    items = _items(2048, dtype=dtype, seed=7)
+    idx, rank = ops.hash_rank(items, cfg, interpret=True)
+    ridx, rrank = ref.hash_rank_ref(items, cfg)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(rrank))
+
+
+@pytest.mark.parametrize("block_rows", [8, 16, 64])
+def test_hash_rank_block_shape_sweep(block_rows):
+    cfg = HLLConfig(p=16, hash_bits=64)
+    items = _items(block_rows * 128 * 3 + 5, seed=block_rows)
+    idx, rank = ops.hash_rank(items, cfg, block_rows=block_rows, interpret=True)
+    ridx, rrank = ref.hash_rank_ref(items, cfg)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(rrank))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=300),
+    st.sampled_from([4, 8, 12, 16]),
+)
+def test_hash_rank_property(keys, p):
+    cfg = HLLConfig(p=p, hash_bits=64)
+    items = jnp.asarray(np.asarray(keys, np.uint32))
+    idx, rank = ops.hash_rank(items, cfg, interpret=True)
+    ridx, rrank = ref.hash_rank_ref(items, cfg)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(rrank))
+    assert (np.asarray(idx) >= 0).all() and (np.asarray(idx) < cfg.m).all()
+    assert (np.asarray(rank) >= 1).all() and (
+        np.asarray(rank) <= cfg.max_rank
+    ).all()
+
+
+# ----------------------------------------------------------------------------
+# bucket_fold
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 7, 16])
+@pytest.mark.parametrize("m", [256, 1024, 65536])
+def test_bucket_fold_sweep(k, m):
+    partials = jnp.asarray(RNG.integers(0, 50, (k, m), dtype=np.int32))
+    got = ops.bucket_fold(partials, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.bucket_fold_ref(partials))
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint8])
+def test_bucket_fold_dtypes(dtype):
+    partials = jnp.asarray(RNG.integers(0, 49, (4, 2048), dtype=dtype))
+    got = ops.bucket_fold(partials, interpret=True)
+    assert got.dtype == partials.dtype
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.bucket_fold_ref(partials))
+    )
+
+
+# ----------------------------------------------------------------------------
+# fused HLL update
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [4, 8, 10, 12])
+@pytest.mark.parametrize("n", [1, 100, 1024, 5000])
+def test_fused_update_sweep(p, n):
+    cfg = HLLConfig(p=p, hash_bits=64)
+    regs0 = jnp.zeros((cfg.m,), jnp.uint8)
+    items = _items(n, dtype=np.int32, seed=p * 1000 + n)
+    got = ops.hll_update(regs0, items, cfg, interpret=True)
+    want = ref.hll_update_fused_ref(regs0, items, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_update_accumulates_onto_existing():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    a, b = _items(2000, seed=1), _items(2000, seed=2)
+    r1 = ops.hll_update(jnp.zeros((cfg.m,), jnp.uint8), a, cfg, interpret=True)
+    r2 = ops.hll_update(r1, b, cfg, interpret=True)
+    both = hll.update(
+        hll.update(hll.init_registers(cfg), a, cfg), b, cfg
+    )
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(both))
+
+
+def test_fused_update_rejects_large_p():
+    cfg = HLLConfig(p=16, hash_bits=64)
+    with pytest.raises(ValueError, match="p <= 12"):
+        ops.hll_update(
+            jnp.zeros((cfg.m,), jnp.uint8), _items(128), cfg, interpret=True
+        )
+
+
+def test_fused_padding_is_neutral():
+    """Padding must never bump a register: sizes straddling tile boundaries."""
+    cfg = HLLConfig(p=8, hash_bits=32)
+    for n in (1, 1023, 1024, 1025):
+        items = _items(n, seed=n)
+        got = ops.hll_update(jnp.zeros((cfg.m,), jnp.uint8), items, cfg, interpret=True)
+        want = ref.hll_update_fused_ref(jnp.zeros((cfg.m,), jnp.uint8), items, cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------------------------
+# composed multi-pipeline engine (paper Fig. 3 from kernels)
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipelines", [1, 2, 4, 8])
+def test_pipelined_update_matches_scatter_path(pipelines):
+    cfg = HLLConfig(p=10, hash_bits=64)
+    items = _items(4096, dtype=np.int32, seed=pipelines)
+    got = ops.pipelined_update(
+        jnp.zeros((cfg.m,), jnp.uint8), items, cfg, pipelines, interpret=True
+    )
+    want = hll.update(hll.init_registers(cfg), items, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_estimates_from_kernel_registers_match_host():
+    cfg = HLLConfig(p=12, hash_bits=64)
+    items = _items(50_000, dtype=np.int32, seed=33)
+    regs = ops.hll_update(jnp.zeros((cfg.m,), jnp.uint8), items, cfg, interpret=True)
+    est = hll.estimate(regs, cfg)
+    ref_regs = hll.update(hll.init_registers(cfg), items, cfg)
+    assert est == hll.estimate(ref_regs, cfg)

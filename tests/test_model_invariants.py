@@ -1,0 +1,103 @@
+"""System-level model invariants (hypothesis property tests).
+
+These pin behaviours the serving engine and dry-run rely on: causality,
+position-shift consistency of windowed attention, determinism, and the
+batch-independence of per-sequence computation.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.models import transformer
+
+ARCH = get_arch("tinyllama-1.1b").reduced()
+PARAMS = transformer.init_params(jax.random.PRNGKey(0), ARCH)
+SWA = get_arch("mixtral-8x7b").reduced()
+SWA_PARAMS = transformer.init_params(jax.random.PRNGKey(0), SWA)
+
+
+def _logits(params, arch, tokens):
+    out, _, _ = transformer.forward(params, {"tokens": tokens}, arch)
+    return np.asarray(out.astype(jnp.float32))
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 30))
+def test_causality(seed, flip_pos):
+    """Changing token at position p must not change logits before p."""
+    B, S = 1, 32
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0, ARCH.vocab_size)
+    base = _logits(PARAMS, ARCH, toks)
+    flipped = toks.at[0, flip_pos].set((toks[0, flip_pos] + 7) % ARCH.vocab_size)
+    mod = _logits(PARAMS, ARCH, flipped)
+    np.testing.assert_allclose(
+        base[:, :flip_pos], mod[:, :flip_pos], atol=2e-2
+    )
+    # and the flipped position's own logits DO change
+    assert np.abs(base[0, flip_pos] - mod[0, flip_pos]).max() > 1e-3
+
+
+@settings(deadline=None, max_examples=5)
+@given(st.integers(0, 2**31 - 1))
+def test_batch_independence(seed):
+    """Each sequence's logits are independent of its batch neighbours."""
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (2, 32), 0, ARCH.vocab_size)
+    both = _logits(PARAMS, ARCH, toks)
+    solo = _logits(PARAMS, ARCH, toks[:1])
+    np.testing.assert_allclose(both[0], solo[0], atol=2e-2)
+
+
+def test_swa_locality():
+    """With window w, logits at p depend only on tokens in (p-w, p]."""
+    w = SWA.sliding_window
+    S = 4 * w
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, SWA.vocab_size)
+    base = _logits(SWA_PARAMS, SWA, toks)
+    # change a token far outside the window of the last position
+    far = S - 1 - (2 * w)
+    mod_toks = toks.at[0, far].set((toks[0, far] + 3) % SWA.vocab_size)
+    mod = _logits(SWA_PARAMS, SWA, mod_toks)
+    # NOTE: information still propagates through stacked layers (receptive
+    # field grows by w per layer), so only check a 1-layer-tight property:
+    # the change must affect positions >= far (it does) and positions < far
+    # must be identical (causality).
+    np.testing.assert_allclose(base[:, :far], mod[:, :far], atol=2e-2)
+    assert np.abs(base[0, far:] - mod[0, far:]).max() > 1e-3
+
+
+def test_determinism():
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 32), 0, ARCH.vocab_size)
+    a = _logits(PARAMS, ARCH, toks)
+    b = _logits(PARAMS, ARCH, toks)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_frontend_stub_only_affects_stub_region_inputs():
+    """VLM: patch embeddings replace the first stub_len embeddings exactly."""
+    arch = get_arch("qwen2-vl-72b").reduced()
+    params = transformer.init_params(jax.random.PRNGKey(0), arch)
+    B, S = 1, 32
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, arch.vocab_size)
+    fe = jax.random.normal(
+        jax.random.PRNGKey(5), (B, arch.frontend_stub_len, arch.d_model)
+    ).astype(jnp.bfloat16) * 0.02
+    batch = {
+        "tokens": toks,
+        "frontend_embeds": fe,
+        "positions": transformer.default_positions(arch, B, S),
+    }
+    x = transformer.embed_tokens(params, batch, arch)
+    # stub region equals the provided embeddings; the rest are token embeds
+    np.testing.assert_array_equal(
+        np.asarray(x[:, : arch.frontend_stub_len]), np.asarray(fe)
+    )
+    tok_embed = jnp.take(params["embed"], toks, axis=0).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(x[:, arch.frontend_stub_len :]),
+        np.asarray(tok_embed[:, arch.frontend_stub_len :]),
+    )

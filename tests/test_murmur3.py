@@ -1,0 +1,79 @@
+"""Murmur3 (32/64-bit) vs pure-python oracles + statistical sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import murmur3
+
+KEYS = st.integers(min_value=0, max_value=2**32 - 1)
+SEEDS = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(KEYS, min_size=1, max_size=64), SEEDS)
+def test_murmur3_32_matches_oracle(keys, seed):
+    k = np.asarray(keys, np.uint32)
+    got = np.asarray(murmur3.murmur3_32(jnp.asarray(k), seed))
+    exp = np.asarray([murmur3.murmur3_32_py(int(v), seed) for v in keys], np.uint32)
+    np.testing.assert_array_equal(got, exp)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(KEYS, min_size=1, max_size=64), SEEDS)
+def test_murmur3_64_matches_oracle(keys, seed):
+    k = np.asarray(keys, np.uint32)
+    h = murmur3.murmur3_64(jnp.asarray(k), seed)
+    got = (np.asarray(h.hi, np.uint64) << np.uint64(32)) | np.asarray(h.lo, np.uint64)
+    exp = np.asarray([murmur3.murmur3_64_py(int(v), seed) for v in keys], np.uint64)
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_known_vectors_32():
+    # Canonical Murmur3_x86_32 4-byte vectors (verified against smhasher).
+    # key bytes are the LE encoding of the uint32.
+    assert murmur3.murmur3_32_py(0, 0) == 0x2362F9DE
+    got = int(np.asarray(murmur3.murmur3_32(jnp.asarray([0], dtype=jnp.uint32), 0))[0])
+    assert got == 0x2362F9DE
+
+
+def test_determinism_and_seed_sensitivity():
+    k = jnp.arange(1024, dtype=jnp.uint32)
+    a = np.asarray(murmur3.murmur3_32(k, 1))
+    b = np.asarray(murmur3.murmur3_32(k, 1))
+    c = np.asarray(murmur3.murmur3_32(k, 2))
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).mean() > 0.99
+
+
+def test_uniformity_32():
+    """Top-bit and bucket-occupancy uniformity of the 32-bit hash."""
+    n = 1 << 16
+    h = np.asarray(murmur3.murmur3_32(jnp.arange(n, dtype=jnp.uint32), 0))
+    # each of the top 4 bits should be ~50/50
+    for bit in range(28, 32):
+        frac = ((h >> bit) & 1).mean()
+        assert 0.48 < frac < 0.52, (bit, frac)
+    # 256-bucket chi-square-ish occupancy bound
+    counts = np.bincount(h >> 24, minlength=256)
+    assert counts.min() > n / 256 * 0.8 and counts.max() < n / 256 * 1.2
+
+
+def test_uniformity_64_high_and_low_words():
+    n = 1 << 16
+    h = murmur3.murmur3_64(jnp.arange(n, dtype=jnp.uint32), 0)
+    for word in (np.asarray(h.hi), np.asarray(h.lo)):
+        counts = np.bincount(word >> 24, minlength=256)
+        # binomial(n, 1/256): mean 256, std ~16; allow +-4.5 sigma over 256 draws
+        assert counts.min() > n / 256 * 0.72 and counts.max() < n / 256 * 1.28
+
+
+def test_avalanche_32():
+    """Flipping one input bit flips ~half of the output bits."""
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 2**32, 512, dtype=np.uint32)
+    base = np.asarray(murmur3.murmur3_32(jnp.asarray(keys), 0))
+    for bit in (0, 7, 19, 31):
+        flipped = np.asarray(murmur3.murmur3_32(jnp.asarray(keys ^ (1 << bit)), 0))
+        ham = np.unpackbits((base ^ flipped).view(np.uint8)).mean()
+        assert 0.45 < ham < 0.55, (bit, ham)

@@ -1,0 +1,54 @@
+"""HLL set algebra: union/intersection/difference/jaccard accuracy."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hll, setops
+from repro.core.hll import HLLConfig
+
+CFG = HLLConfig(p=14, hash_bits=64)
+
+
+def _sketch(items):
+    return hll.update(hll.init_registers(CFG), jnp.asarray(items, jnp.int32), CFG)
+
+
+def test_union_intersection_difference():
+    rng = np.random.default_rng(0)
+    a_items = rng.permutation(600_000)[:300_000]  # 300k distinct
+    b_items = np.concatenate([a_items[:100_000], 600_000 + np.arange(200_000)])
+    a, b = _sketch(a_items), _sketch(b_items)
+
+    eu = setops.union_estimate(a, b, CFG)
+    assert abs(eu - 500_000) / 500_000 < 0.03
+
+    inter, err = setops.intersection_estimate(a, b, CFG)
+    assert abs(inter - 100_000) <= max(3 * err, 20_000)
+
+    diff = setops.difference_estimate(a, b, CFG)
+    assert abs(diff - 200_000) / 200_000 < 0.15
+
+    jac = setops.jaccard_estimate(a, b, CFG)
+    assert abs(jac - 0.2) < 0.05
+
+
+def test_disjoint_intersection_near_zero():
+    a = _sketch(np.arange(0, 50_000))
+    b = _sketch(np.arange(50_000, 100_000))
+    inter, err = setops.intersection_estimate(a, b, CFG)
+    assert inter <= 3 * err + 1500
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 3000), st.integers(1, 3000), st.integers(0, 1000))
+def test_union_bounds_property(na, nb, overlap):
+    """|A∪B| estimate must sit near max(|A|,|B|)..|A|+|B| (within sigma)."""
+    overlap = min(overlap, na, nb)
+    a_items = np.arange(na)
+    b_items = np.concatenate([np.arange(overlap), 10_000_000 + np.arange(nb - overlap)])
+    a, b = _sketch(a_items), _sketch(b_items)
+    eu = setops.union_estimate(a, b, CFG)
+    true_union = na + nb - overlap
+    assert abs(eu - true_union) / max(true_union, 1) < 0.1

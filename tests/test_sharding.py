@@ -1,0 +1,145 @@
+"""Partition specs: divisibility guarantees + sharded-execution equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import transformer
+from repro.optim.compress import compressed_psum, make_compressed_grad_reducer
+from repro.sharding import ctx as shardctx
+from repro.sharding import specs as shardspecs
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_specs_divisible(arch_id):
+    """Every sharded dim must divide the production axis sizes (pjit rule)."""
+    arch = get_arch(arch_id)
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(k, arch),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    specs = shardspecs.param_specs(shapes, arch, data_size=16, model_size=16)
+
+    def check(path, leaf, spec):
+        for dim, axis in enumerate(spec):
+            if axis is None:
+                continue
+            size = 16  # both axes are 16 in production
+            assert leaf.shape[dim] % size == 0, (
+                jax.tree_util.keystr(path), leaf.shape, spec
+            )
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-vl-72b", "mixtral-8x7b"])
+def test_fsdp_actually_shards_big_params(arch_id):
+    """Large weights must carry the FSDP axis (ZeRO memory requirement)."""
+    arch = get_arch(arch_id)
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(k, arch),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    specs = shardspecs.param_specs(shapes, arch, data_size=16, model_size=16)
+    big_unsharded = []
+
+    def check(path, leaf, spec):
+        n = int(np.prod(leaf.shape))
+        if n > 50e6 and all(a is None for a in spec):
+            big_unsharded.append((jax.tree_util.keystr(path), leaf.shape))
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)
+    assert not big_unsharded, big_unsharded
+
+
+def test_sharded_train_matches_single_device():
+    """Same step on a 1x1-device mesh with full spec machinery == unsharded."""
+    from repro.core.hll import HLLConfig
+    from repro.optim.adamw import OptimizerConfig
+    from repro.train.step import TrainConfig, init_train_state, train_step
+
+    arch = get_arch("smollm-360m").reduced()
+    cfg = TrainConfig(
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10),
+        sketch=HLLConfig(p=8, hash_bits=32),
+    )
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, arch.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+
+    s_plain, m_plain = jax.jit(
+        lambda s, b: train_step(s, b, arch, cfg)
+    )(state, batch)
+
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    hints = shardctx.ActivationHints(batch_axes=("data",), model_axis="model")
+    with mesh, shardctx.use_hints(hints):
+        s_shard, m_shard = jax.jit(
+            lambda s, b: train_step(s, b, arch, cfg)
+        )(state, batch)
+    assert float(m_plain["loss"]) == pytest.approx(
+        float(m_shard["loss"]), rel=1e-5
+    )
+
+
+def test_compressed_psum_matches_f32():
+    devs = jax.devices()
+    mesh = jax.make_mesh(
+        (len(devs),), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (len(devs), 64)),
+                    jnp.float32)
+
+    def local(xs):
+        return compressed_psum(xs, "data")
+
+    out = jax.jit(
+        jax.shard_map(local, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                      check_vma=False)
+    )(x)
+    want = np.sum(np.asarray(x), axis=0)
+    got = np.asarray(out)[0] if out.ndim == 2 else np.asarray(out)
+    np.testing.assert_allclose(got, want, atol=np.abs(want).max() * 0.02 + 1e-3)
+
+
+def test_cache_specs_divisible_for_all_decode_cells():
+    from repro.serve import engine
+    from repro.configs import SHAPES, is_cell_supported
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for arch_id in ARCH_IDS:
+        arch = get_arch(arch_id)
+        for shape_name in ("decode_32k", "long_500k"):
+            shape = SHAPES[shape_name]
+            if not is_cell_supported(arch, shape):
+                continue
+            cache = jax.eval_shape(
+                lambda a=arch, s=shape: engine.init_cache(
+                    a, s.global_batch, s.seq_len
+                )
+            )
+            specs = shardspecs.cache_specs(
+                cache, arch, FakeMesh(), shape.global_batch
+            )
+
+            def check(path, leaf, spec):
+                for dim, axis in enumerate(spec):
+                    if axis is None:
+                        continue
+                    axes = axis if isinstance(axis, tuple) else (axis,)
+                    size = int(np.prod([FakeMesh.shape[a] for a in axes]))
+                    assert leaf.shape[dim] % size == 0, (
+                        arch_id, shape_name,
+                        jax.tree_util.keystr(path), leaf.shape, spec,
+                    )
+
+            jax.tree_util.tree_map_with_path(check, cache, specs)

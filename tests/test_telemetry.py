@@ -1,0 +1,61 @@
+"""StreamSketch telemetry + MoE router-collapse detection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.hll import HLLConfig
+from repro.models import moe as moe_lib
+from repro.telemetry.sketchboard import StreamSketch
+
+
+def test_named_streams_and_report():
+    board = StreamSketch(HLLConfig(p=10, hash_bits=64))
+    rng = np.random.default_rng(0)
+    board.observe("tokens", jnp.asarray(rng.integers(0, 5000, 20_000, np.int32)))
+    board.observe("users", jnp.asarray(rng.integers(0, 37, 20_000, np.int32)))
+    rep = board.report()
+    assert set(rep) == {"tokens", "users"}
+    assert abs(rep["users"]["estimate"] - 37) < 5
+    assert rep["tokens"]["items_seen"] == 20_000
+    assert rep["tokens"]["duplication"] > 2  # 20k draws over <=5k values
+
+
+def test_merge_from_other_board():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    a, b = StreamSketch(cfg), StreamSketch(cfg)
+    a.observe("s", jnp.arange(0, 1000, dtype=jnp.int32))
+    b.observe("s", jnp.arange(500, 1500, dtype=jnp.int32))
+    a.merge_from(b)
+    est = a.estimate("s")
+    assert abs(est - 1500) / 1500 < 0.15
+
+
+def test_moe_assignment_stream_detects_collapse():
+    """Distinct (token,expert) pairs drop when the router collapses."""
+    cfg = HLLConfig(p=12, hash_bits=64)
+    arch = get_arch("olmoe-1b-7b").reduced()
+    rng = np.random.default_rng(1)
+    B, S, k = 4, 64, arch.moe.top_k
+    tokens = jnp.asarray(rng.integers(0, 400, (B, S), np.int32))
+
+    healthy = jnp.asarray(
+        rng.integers(0, arch.moe.num_experts, (B, S, k), np.int32)
+    )
+    collapsed = jnp.zeros((B, S, k), jnp.int32)  # everything -> expert 0
+
+    board = StreamSketch(cfg)
+    board.observe("healthy", moe_lib.assignment_stream(tokens, healthy))
+    board.observe("collapsed", moe_lib.assignment_stream(tokens, collapsed))
+    rep = board.report()
+    assert rep["healthy"]["estimate"] > 1.5 * rep["collapsed"]["estimate"]
+
+
+def test_assignment_stream_packing():
+    tokens = jnp.asarray([[1, 2]], jnp.int32)
+    experts = jnp.asarray([[[3, 4], [5, 6]]], jnp.int32)
+    pairs = np.asarray(moe_lib.assignment_stream(tokens, experts))
+    np.testing.assert_array_equal(
+        pairs, [(1 << 8) | 3, (1 << 8) | 4, (2 << 8) | 5, (2 << 8) | 6]
+    )

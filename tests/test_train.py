@@ -1,0 +1,132 @@
+"""Training substrate: loss decreases, optimizer, compression, data pipeline."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.core.hll import HLLConfig
+from repro.data.pipeline import DataConfig, batch_at_step, host_shard
+from repro.optim import adamw
+from repro.optim.adamw import OptimizerConfig
+from repro.train.step import TrainConfig, init_train_state, make_jitted_step
+
+
+def _cfg(**kw):
+    return TrainConfig(
+        optimizer=OptimizerConfig(
+            lr=3e-3, warmup_steps=2, total_steps=50, **kw
+        ),
+        sketch=HLLConfig(p=8, hash_bits=32),
+    )
+
+
+def test_loss_decreases_20_steps():
+    arch = get_arch("smollm-360m").reduced()
+    cfg = _cfg()
+    data = DataConfig(vocab_size=arch.vocab_size, global_batch=4, seq_len=64)
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+    step_fn = make_jitted_step(arch, cfg)
+    losses = []
+    for step in range(20):
+        batch = batch_at_step(data, jnp.asarray(step, jnp.int32))
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_compressed_grads_training_still_converges():
+    arch = get_arch("smollm-360m").reduced()
+    cfg = _cfg(compress_grads=True)
+    data = DataConfig(vocab_size=arch.vocab_size, global_batch=4, seq_len=64)
+    state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
+    step_fn = make_jitted_step(arch, cfg)
+    losses = []
+    for step in range(20):
+        batch = batch_at_step(data, jnp.asarray(step, jnp.int32))
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_schedule_shape():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] < lrs[9] <= lrs[10]  # warmup
+    assert abs(lrs[10] - 1e-3) < 1e-4  # peak
+    assert lrs[100] == pytest.approx(1e-4, rel=0.05)  # min_lr_ratio * lr
+
+
+def test_grad_clip():
+    grads = {"a": jnp.full((4,), 100.0), "b": jnp.full((2, 2), -50.0)}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+    assert float(norm) > 100
+
+
+def test_int8_quantization_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 3, (256,)), jnp.float32)
+    q, scale = adamw.quantize_int8(x)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(adamw.dequantize_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """EF must carry the quantization error so the bias vanishes over steps."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(0, 1, (512,)), jnp.float32)
+    total_raw = np.zeros(512, np.float32)
+    total_comp = np.zeros(512, np.float32)
+    ef = None
+    for _ in range(50):
+        comp, ef = adamw.compress_with_error_feedback({"g": g}, ef)
+        total_comp += np.asarray(comp["g"])
+        total_raw += np.asarray(g)
+    # accumulated compressed sum converges to the true sum (EF property)
+    rel = np.abs(total_comp - total_raw).max() / np.abs(total_raw).max()
+    assert rel < 0.01, rel
+
+
+# ----------------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_step_indexed():
+    cfg = DataConfig(vocab_size=1000, global_batch=4, seq_len=32)
+    b1 = batch_at_step(cfg, jnp.asarray(7))
+    b2 = batch_at_step(cfg, jnp.asarray(7))
+    b3 = batch_at_step(cfg, jnp.asarray(8))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    # targets are the one-shifted stream
+    flat_t = np.asarray(b1["tokens"]).reshape(-1)
+    flat_y = np.asarray(b1["targets"]).reshape(-1)
+    np.testing.assert_array_equal(flat_y[:-1], flat_t[1:])
+
+
+def test_host_shards_disjoint():
+    cfg = DataConfig(vocab_size=1000, global_batch=8, seq_len=16)
+    b = batch_at_step(cfg, jnp.asarray(0))
+    s0 = host_shard(b, 0, 4)["tokens"]
+    s1 = host_shard(b, 1, 4)["tokens"]
+    assert s0.shape == (2, 16)
+    assert not np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_distributions():
+    for dist, check in [
+        ("uniform", lambda t: 560 < len(np.unique(t)) < 720),
+        ("zipf", lambda t: np.bincount(t.reshape(-1), minlength=1000)[:10].sum()
+         > np.bincount(t.reshape(-1), minlength=1000)[-100:].sum()),
+        ("unique", lambda t: len(np.unique(t)) == t.size),
+    ]:
+        cfg = DataConfig(
+            vocab_size=100_000 if dist == "unique" else 1000,
+            global_batch=8, seq_len=128, distribution=dist,
+        )
+        t = np.asarray(batch_at_step(cfg, jnp.asarray(0))["tokens"])
+        assert check(t), dist

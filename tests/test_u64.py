@@ -1,0 +1,77 @@
+"""Property tests: uint32-limb 64-bit arithmetic vs numpy uint64 ground truth."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import u64 as u64lib
+
+U64S = st.integers(min_value=0, max_value=2**64 - 1)
+
+
+def _pack(vals):
+    a = np.asarray(vals, dtype=np.uint64)
+    return u64lib.U64(
+        jnp.asarray((a >> np.uint64(32)).astype(np.uint32)),
+        jnp.asarray((a & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+    )
+
+
+def _unpack(x):
+    return (np.asarray(x.hi, dtype=np.uint64) << np.uint64(32)) | np.asarray(
+        x.lo, dtype=np.uint64
+    )
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(U64S, min_size=1, max_size=8), st.lists(U64S, min_size=1, max_size=8))
+def test_add_mul_xor_match_numpy(xs, ys):
+    n = min(len(xs), len(ys))
+    a, b = np.asarray(xs[:n], np.uint64), np.asarray(ys[:n], np.uint64)
+    A, B = _pack(a), _pack(b)
+    np.testing.assert_array_equal(_unpack(u64lib.add(A, B)), a + b)
+    np.testing.assert_array_equal(_unpack(u64lib.mul(A, B)), a * b)
+    np.testing.assert_array_equal(_unpack(u64lib.xor(A, B)), a ^ b)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(U64S, min_size=1, max_size=8), st.integers(min_value=1, max_value=63))
+def test_shifts_and_rot_match_numpy(xs, n):
+    a = np.asarray(xs, np.uint64)
+    A = _pack(a)
+    np.testing.assert_array_equal(_unpack(u64lib.shr(A, n)), a >> np.uint64(n))
+    np.testing.assert_array_equal(_unpack(u64lib.shl(A, n)), a << np.uint64(n))
+    rot = (a << np.uint64(n)) | (a >> np.uint64(64 - n))
+    np.testing.assert_array_equal(_unpack(u64lib.rotl(A, n)), rot)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.integers(min_value=0, max_value=2**32 - 1), min_size=1, max_size=32))
+def test_clz32_exact(xs):
+    x = np.asarray(xs, np.uint32)
+    got = np.asarray(u64lib.clz32(jnp.asarray(x)))
+    exp = np.asarray([32 if v == 0 else 32 - int(v).bit_length() for v in xs])
+    np.testing.assert_array_equal(got, exp)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(U64S, min_size=1, max_size=32))
+def test_clz64_exact(xs):
+    got = np.asarray(u64lib.clz(_pack(np.asarray(xs, np.uint64))))
+    exp = np.asarray([64 if v == 0 else 64 - int(v).bit_length() for v in xs])
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_clz_edge_cases():
+    xs = np.asarray([0, 1, 2, 0x7FFFFFFF, 0x80000000, 0xFFFFFFFF], np.uint32)
+    got = np.asarray(u64lib.clz32(jnp.asarray(xs)))
+    np.testing.assert_array_equal(got, [32, 31, 30, 1, 0, 0])
+
+
+def test_shift_bounds_raise():
+    A = _pack([1])
+    with pytest.raises(ValueError):
+        u64lib.shr(A, 0)
+    with pytest.raises(ValueError):
+        u64lib.shl(A, 64)

@@ -1,0 +1,119 @@
+"""Straggler watchdog: detection thresholds + loop integration."""
+
+import time
+
+import pytest
+
+from repro.train.watchdog import StepWatchdog, Verdict
+
+
+def _feed(wd, durations):
+    verdicts = []
+    for d in durations:
+        wd.step_begin()
+        wd._t_start -= d  # simulate a step of length d without sleeping
+        verdicts.append(wd.step_end())
+    return verdicts
+
+
+def test_warmup_steps_never_flag():
+    wd = StepWatchdog(warmup_steps=5)
+    v = _feed(wd, [10.0, 0.001, 5.0, 0.002, 0.001])
+    assert all(x is Verdict.OK for x in v)
+
+
+def test_steady_state_ok():
+    wd = StepWatchdog(warmup_steps=5, min_timeout_s=0.0)
+    v = _feed(wd, [0.10] * 20)
+    assert all(x is Verdict.OK for x in v)
+    assert wd.slow_count == 0 and wd.wedged_count == 0
+
+
+def test_straggler_flagged_slow():
+    wd = StepWatchdog(warmup_steps=5, k_mad=6.0, min_timeout_s=0.0,
+                      timeout_factor=50.0)
+    _feed(wd, [0.10] * 10)
+    (v,) = _feed(wd, [0.30])  # 3x median: beyond median + 6*MAD, below 50x
+    assert v is Verdict.SLOW
+    assert wd.slow_count == 1
+
+
+def test_wedge_flagged():
+    wd = StepWatchdog(warmup_steps=5, min_timeout_s=0.0, timeout_factor=10.0)
+    _feed(wd, [0.10] * 10)
+    (v,) = _feed(wd, [2.0])  # 20x median
+    assert v is Verdict.WEDGED
+
+
+def test_stragglers_do_not_poison_baseline():
+    wd = StepWatchdog(warmup_steps=5, min_timeout_s=0.0, timeout_factor=10.0)
+    _feed(wd, [0.10] * 10)
+    _feed(wd, [0.35] * 5)  # repeated stragglers
+    # baseline median must still be ~0.10, so a 0.35 step still flags
+    (v,) = _feed(wd, [0.35])
+    assert v is Verdict.SLOW
+
+
+def test_deadline_exported():
+    wd = StepWatchdog(warmup_steps=3, timeout_factor=10.0, min_timeout_s=0.0)
+    assert wd.deadline_s() == float("inf")
+    _feed(wd, [0.2] * 5)
+    assert wd.deadline_s() == pytest.approx(2.0, rel=0.2)
+
+
+def test_loop_integration_snapshot_on_straggle(tmp_path):
+    """An injected straggler step triggers an immediate checkpoint."""
+    import jax
+    from repro.checkpoint import ckpt
+    from repro.configs import get_arch
+    from repro.core.hll import HLLConfig
+    from repro.data.pipeline import DataConfig
+    from repro.optim.adamw import OptimizerConfig
+    from repro.train.loop import LoopConfig, train
+    from repro.train.step import TrainConfig
+    from repro.train import watchdog as wd_mod
+
+    # tighten the watchdog so a time.sleep straggler triggers reliably
+    orig_init = wd_mod.StepWatchdog.__init__
+
+    def tight_init(self, **kw):
+        orig_init(self, warmup_steps=3, k_mad=4.0, timeout_factor=1e9,
+                  min_timeout_s=1e9)
+
+    wd_mod.StepWatchdog.__init__ = tight_init
+    try:
+        arch = get_arch("smollm-360m").reduced()
+        cfg = TrainConfig(
+            optimizer=OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=12),
+            sketch=HLLConfig(p=8, hash_bits=32),
+        )
+        data = DataConfig(vocab_size=arch.vocab_size, global_batch=2, seq_len=32)
+
+        # monkey-patch the data fetch to inject one slow step
+        from repro.train import loop as loop_mod
+        real_batch = loop_mod.batch_at_step
+        def slow_batch(c, s):
+            if int(s) == 8:
+                time.sleep(1.0)
+            return real_batch(c, s)
+        loop_mod.batch_at_step = slow_batch
+        try:
+            d = str(tmp_path / "wd")
+            logs = []
+            train(arch, cfg, data,
+                  LoopConfig(total_steps=12, ckpt_every=1000, ckpt_dir=d,
+                             async_ckpt=False, log_every=100),
+                  log_fn=logs.append)
+            assert any("[watchdog]" in l for l in logs), logs
+            # the straggler snapshot exists (plus the final one)
+            assert ckpt.latest_step(d) == 12
+            assert any(
+                s != 12 for s in [
+                    int(x.split("_")[1]) for x in
+                    __import__("os").listdir(d) if x.startswith("step_")
+                ]
+            )
+        finally:
+            loop_mod.batch_at_step = real_batch
+    finally:
+        wd_mod.StepWatchdog.__init__ = orig_init
