@@ -13,8 +13,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import hll
-from repro.core.hll import HLLConfig
+from repro.sketch import hll
+from repro.sketch import HLLConfig
 
 
 CARDINALITIES = [1_000, 10_000, 40_000, 160_000, 640_000, 2_560_000]

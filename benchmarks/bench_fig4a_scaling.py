@@ -1,6 +1,6 @@
 """Paper Fig. 4(a): throughput vs #pipelines (the FPGA scaling figure).
 
-TPU analogue: k sub-sketch pipelines per device (update_pipelined).  We
+TPU analogue: k sub-sketch pipelines per device (ExecutionPlan(pipelines=k)).  We
 measure measured-vs-theoretical scaling exactly as the paper plots it: the
 theoretical line is k x single-pipeline rate; the measured line saturates at
 the platform's I/O bound (PCIe for the paper; here the host CPU's memory
@@ -14,8 +14,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import hll, sketch as sketchlib
-from repro.core.hll import HLLConfig
+from repro.sketch import ExecutionPlan, hll, update_registers
+from repro.sketch import HLLConfig
 
 N_ITEMS = 1 << 21  # 2M items, 8 MiB
 PIPELINES = (1, 2, 4, 8, 16)
@@ -31,7 +31,9 @@ def run(full: bool = False):
     base_sec = None
     rows = []
     for k in PIPELINES:
-        fn = lambda r, x, k=k: sketchlib.update_pipelined(r, x, cfg, pipelines=k)
+        fn = lambda r, x, k=k: update_registers(
+                r, x, cfg, ExecutionPlan(backend="jnp", pipelines=k)
+            )
         sec = time_fn(fn, regs, items)
         gbps = N_ITEMS * 4 / sec / 1e9
         if base_sec is None:

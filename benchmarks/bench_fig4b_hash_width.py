@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import hll, murmur3
-from repro.core.hll import HLLConfig
+from repro.sketch import hll, murmur3
+from repro.sketch import HLLConfig
 
 N = 1 << 21
 

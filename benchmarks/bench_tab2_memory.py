@@ -11,9 +11,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import hll
-from repro.core.exact import naive_distinct_mem_bytes
-from repro.core.hll import HLLConfig
+from repro.sketch import hll
+from repro.sketch.exact import naive_distinct_mem_bytes
+from repro.sketch import HLLConfig
 
 PAPER_KIB = {(14, 32): 10, (14, 64): 12, (16, 32): 40, (16, 64): 48}
 

@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core import hll, sketch as sketchlib
-from repro.core.hll import HLLConfig
+from repro.sketch import ExecutionPlan, hll, update_registers
+from repro.sketch import HLLConfig
 from repro.launch import hlo_analysis
 
 N = 327_680  # divisible by every pipeline count incl. the paper's 10
@@ -32,7 +32,9 @@ def run(full: bool = False):
     rows = []
     for k in PIPELINES:
         fn = jax.jit(
-            lambda r, x, k=k: sketchlib.update_pipelined(r, x, cfg, pipelines=k)
+            lambda r, x, k=k: update_registers(
+                r, x, cfg, ExecutionPlan(backend="jnp", pipelines=k)
+            )
         )
         compiled = fn.lower(
             jax.ShapeDtypeStruct((cfg.m,), jnp.uint8),

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core import hll, sketch as sketchlib
-from repro.core.hll import HLLConfig
+from repro.sketch import ExecutionPlan, hll, update_registers
+from repro.sketch import HLLConfig
 from repro.data.pipeline import DataConfig, batch_at_step
 
 CHUNKS = 8
@@ -35,7 +35,9 @@ def run(full: bool = False):
     rows = []
     for k in PIPELINES:
         update = jax.jit(
-            lambda r, x, k=k: sketchlib.update_pipelined(r, x, cfg, pipelines=k)
+            lambda r, x, k=k: update_registers(
+                r, x, cfg, ExecutionPlan(backend="jnp", pipelines=k)
+            )
         )
         regs = hll.init_registers(cfg)
         # warmup compile

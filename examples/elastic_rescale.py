@@ -18,9 +18,9 @@ import jax
 import numpy as np
 
 from repro.checkpoint import ckpt
+from repro.launch.mesh import make_auto_mesh
 from repro.configs import get_arch
-from repro.core import hll
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig, hll
 from repro.data.pipeline import DataConfig
 from repro.optim.adamw import OptimizerConfig
 from repro.train.loop import LoopConfig, train
@@ -44,10 +44,7 @@ def main():
 
         print("\n=== phase 2: fleet rescaled — resume from the checkpoint "
               "onto a different device layout, continue to step 40")
-        mesh = jax.make_mesh(
-            (jax.device_count(),), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,),
-        )
+        mesh = make_auto_mesh((jax.device_count(),), ("data",))
         # restore with explicit (re)shardings: the elastic path
         template = state1
         shardings = jax.tree.map(

@@ -1,15 +1,17 @@
 """Quickstart: the HLL sketch API in five minutes.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Everything goes through ``repro.sketch``: one ``HyperLogLog`` carrier, one
+``update()`` entry point, and an ``ExecutionPlan`` that picks the backend
+(jnp scatter / Pallas kernels), placement, and pipeline count.
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import hll
-from repro.core.exact import exact_distinct
-from repro.core.hll import HLLConfig
-from repro.core.sketch import update_pipelined
+from repro.sketch import ExecutionPlan, HLLConfig, HyperLogLog, standard_error
+from repro.sketch.exact import exact_distinct
 
 
 def main():
@@ -17,28 +19,39 @@ def main():
     cfg = HLLConfig(p=16, hash_bits=64)
     print(f"sketch: m=2^{cfg.p} buckets, H={cfg.hash_bits}-bit hash, "
           f"{cfg.memory_footprint_bits // 8 // 1024} KiB packed, "
-          f"expected stderr {hll.standard_error(cfg):.2%}")
+          f"expected stderr {standard_error(cfg):.2%}")
 
     # 1) one-shot cardinality of a 5M-item stream with ~3.3M distinct values
     rng = np.random.default_rng(0)
     items = jnp.asarray(rng.integers(0, 2**22, 5_000_000, dtype=np.int32))
-    est = hll.cardinality(items, cfg)
+    sk = HyperLogLog.of(items, cfg)
     exact = exact_distinct(items)
+    est = sk.estimate()
     print(f"\n5M items: exact={exact:,} estimate={est:,.0f} "
           f"error={abs(est - exact) / exact:.3%}")
 
-    # 2) incremental streaming + merge (the paper's multi-pipeline fold)
-    regs = hll.init_registers(cfg)
+    # 2) incremental streaming through k pipelines (the paper's Fig. 3 fold);
+    #    chunk sizes need not divide the pipeline count — padding is uniform
+    plan = ExecutionPlan(backend="jnp", pipelines=8)
+    streamed = HyperLogLog.empty(cfg)
     for chunk in np.split(np.asarray(items), 5):
-        regs = update_pipelined(regs, jnp.asarray(chunk), cfg, pipelines=8)
-    print(f"streamed in 5 chunks x 8 pipelines: {hll.estimate(regs, cfg):,.0f}")
+        streamed = streamed.update(jnp.asarray(chunk), plan)
+    print(f"streamed in 5 chunks x 8 pipelines: {streamed.estimate():,.0f} "
+          f"({streamed.count:,} items counted exactly)")
 
     # 3) sketches merge losslessly: union of two disjoint streams
-    a = hll.update(hll.init_registers(cfg), items[: 2_500_000], cfg)
-    b = hll.update(hll.init_registers(cfg), items[2_500_000:], cfg)
-    merged = hll.merge(a, b)
-    print(f"merge(a, b) estimate:        {hll.estimate(merged, cfg):,.0f}")
-    print("(bit-identical to sketching the union — see tests/test_hll.py)")
+    a = HyperLogLog.of(items[: 2_500_000], cfg)
+    b = HyperLogLog.of(items[2_500_000:], cfg)
+    merged = a | b
+    print(f"(a | b) estimate:            {merged.estimate():,.0f}")
+    print(f"jaccard(a, b):               {a.jaccard(b):.3f}")
+    print("(bit-identical to sketching the union — see tests/test_sketch_api.py)")
+
+    # 4) sketches serialize densely: checkpoint, ship, resume anywhere
+    blob = merged.to_bytes()
+    back = HyperLogLog.from_bytes(blob)
+    assert back.estimate() == merged.estimate()
+    print(f"serialized sketch: {len(blob):,} bytes, survives round-trip")
 
 
 if __name__ == "__main__":

@@ -16,11 +16,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import hll
-from repro.core.hll import HLLConfig
-from repro.core.sketch import update_pipelined, update_sharded
+from repro.sketch import ExecutionPlan, HLLConfig, hll, update_registers
 from repro.data.pipeline import DataConfig, batch_at_step
-from repro.telemetry.sketchboard import StreamSketch
+from repro.launch.mesh import make_auto_mesh
 
 
 def main():
@@ -39,16 +37,18 @@ def main():
         seq_len=args.chunk_items // 1024, distribution=args.distribution,
     )
     devices = jax.devices()
-    mesh = jax.make_mesh((len(devices),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_auto_mesh((len(devices),), ("data",))
     print(f"streaming {args.chunks} x {args.chunk_items:,} items "
           f"({args.distribution}) through {args.pipelines} pipelines "
           f"x {len(devices)} device(s)")
 
-    regs = hll.init_registers(cfg)
-    update = jax.jit(
-        lambda r, x: update_pipelined(r, x, cfg, pipelines=args.pipelines)
+    local_plan = ExecutionPlan(backend="jnp", pipelines=args.pipelines)
+    sharded_plan = ExecutionPlan(
+        backend="jnp", placement="mesh", mesh=mesh,
+        pipelines=args.pipelines,
     )
+    regs = hll.init_registers(cfg)
+    update = jax.jit(lambda r, x: update_registers(r, x, cfg, local_plan))
     # warmup/compile off the clock (the paper measures steady-state line rate)
     jax.block_until_ready(update(regs, batch_at_step(data, jnp.asarray(0))["tokens"]))
 
@@ -58,8 +58,7 @@ def main():
         batch = batch_at_step(data, jnp.asarray(step, jnp.int32))
         tokens = batch["tokens"]
         if len(devices) > 1:
-            regs = update_sharded(regs, tokens, cfg, mesh,
-                                  pipelines=args.pipelines)
+            regs = update_registers(regs, tokens, cfg, sharded_plan)
         else:
             regs = update(regs, tokens)
         n += tokens.size

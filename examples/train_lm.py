@@ -13,7 +13,7 @@ checkpoint (at most --ckpt-every steps lost).
 import argparse
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig
 from repro.data.pipeline import DataConfig
 from repro.optim.adamw import OptimizerConfig
 from repro.train.loop import LoopConfig, train

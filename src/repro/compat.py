@@ -1,0 +1,27 @@
+"""Version-compat shims for the installed jax.
+
+The repo targets current jax APIs but must run on older releases (this
+container ships 0.4.x): ``jax.shard_map`` and its ``check_vma`` kwarg landed
+after 0.4.x, where the same function lives under ``jax.experimental`` with a
+``check_rep`` kwarg.  Mesh axis-type compat lives in
+``repro.launch.mesh.make_auto_mesh``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map with the replication/VMA check disabled, on any jax."""
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **_SHARD_MAP_KW
+    )

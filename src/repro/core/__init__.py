@@ -1,4 +1,8 @@
-"""Core HLL library: the paper's contribution as composable JAX modules."""
+"""Deprecated shim package — the HLL library moved to ``repro.sketch``.
+
+Every submodule (hll, sketch, setops, murmur3, u64, exact) remains
+importable and re-exports from its new home with a DeprecationWarning.
+"""
 
 from repro.core.hll import (  # noqa: F401
     HLLConfig,

@@ -1,222 +1,28 @@
-"""HyperLogLog — faithful implementation of the paper's Algorithm 1.
+"""Deprecated shim — the HLL implementation moved to ``repro.sketch.hll``.
 
-Four phases (paper §III):
-  1. Hashing      — Murmur3, 32- or 64-bit (core/murmur3.py).
-  2. Initialization — alpha_m bias constant, m = 2^p zeroed registers.
-  3. Aggregation  — idx = top p hash bits, rank = CLZ(remaining bits)+1,
-                    M[idx] = max(M[idx], rank).
-  4. Computation  — harmonic-mean raw estimate + small/large-range correction.
-
-Aggregation is the streaming hot path and stays device-side (jnp; the Pallas
-kernels in repro/kernels accelerate it).  The computation phase is a one-shot
-finalization — the paper measures it at a constant 203 us — and is done
-host-side with *exact* python-int arithmetic, mirroring the paper's exact
-fixed-point harmonic-mean accumulator.  A float32 device-side estimator is
-also provided for in-step telemetry.
-
-Registers form a max-lattice: ``merge`` is element-wise max, which is the
-paper's "Merge buckets" fold and the basis for all distribution here.
+Kept importable so pre-redesign callers keep working; new code should use
+``repro.sketch`` (see DESIGN.md §1).
 """
 
-from __future__ import annotations
+import warnings
 
-import dataclasses
-import math
-from functools import partial
-from typing import Optional, Tuple
+warnings.warn(
+    "repro.core.hll is deprecated; import from repro.sketch instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import murmur3, u64 as u64lib
-
-REGISTER_DTYPE = jnp.uint8
-
-
-def alpha(m: int) -> float:
-    """Bias-correction constant (Algorithm 1, lines 2-3)."""
-    if m == 16:
-        return 0.673
-    if m == 32:
-        return 0.697
-    if m == 64:
-        return 0.709
-    return 0.7213 / (1.0 + 1.079 / m)
-
-
-@dataclasses.dataclass(frozen=True)
-class HLLConfig:
-    """Static sketch parameters; the paper explores (p,H) in {14,16}x{32,64}."""
-
-    p: int = 16  # precision: m = 2^p buckets
-    hash_bits: int = 64  # H: 32 or 64
-    seed: int = 0
-
-    def __post_init__(self):
-        if not 4 <= self.p <= 16:
-            raise ValueError(f"p must be in [4,16], got {self.p}")
-        if self.hash_bits not in (32, 64):
-            raise ValueError(f"hash_bits must be 32 or 64, got {self.hash_bits}")
-
-    @property
-    def m(self) -> int:
-        return 1 << self.p
-
-    @property
-    def max_rank(self) -> int:
-        # paper eq. (2): rank <= H - p + 1
-        return self.hash_bits - self.p + 1
-
-    @property
-    def register_bits(self) -> int:
-        # paper eq. (3): ceil(log2(H - p + 1)) bits per register
-        return math.ceil(math.log2(self.hash_bits - self.p + 1))
-
-    @property
-    def memory_footprint_bits(self) -> int:
-        # paper eq. (3): B = 2^p * ceil(log2(H - p + 1))
-        return self.m * self.register_bits
-
-
-def init_registers(cfg: HLLConfig) -> jnp.ndarray:
-    """Phase 2: m zeroed bucket counters."""
-    return jnp.zeros((cfg.m,), REGISTER_DTYPE)
-
-
-def hash_index_rank(
-    items: jnp.ndarray, cfg: HLLConfig
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Phases 1 + 3a: hash each item, split into (bucket index, rank).
-
-    idx  = first p bits of the hash (Algorithm 1 line 7)
-    rank = leading-zero count of the remaining H-p bits, + 1 (line 9),
-           capped at H - p + 1 when the remainder is all-zero.
-    Returns (idx int32 in [0, m), rank int32 in [1, H-p+1]).
-    """
-    p = cfg.p
-    if cfg.hash_bits == 32:
-        h = murmur3.murmur3_32(items, cfg.seed)
-        idx = (h >> (32 - p)).astype(jnp.int32)
-        w_shifted = (h << p).astype(jnp.uint32)  # remaining bits at the top
-        clz_w = u64lib.clz32(w_shifted)
-        rank = jnp.minimum(clz_w, 32 - p) + 1
-    else:
-        h = murmur3.murmur3_64(items, cfg.seed)
-        idx = (h.hi >> (32 - p)).astype(jnp.int32)
-        w_shifted = u64lib.shl(h, p)
-        clz_w = u64lib.clz(w_shifted)
-        rank = jnp.minimum(clz_w, 64 - p) + 1
-    return idx, rank.astype(jnp.int32)
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def update(registers: jnp.ndarray, items: jnp.ndarray, cfg: HLLConfig) -> jnp.ndarray:
-    """Phase 3: aggregate a batch of items into the registers (pure jnp ref).
-
-    Equivalent to the paper's read-max-write bucket pipeline; XLA lowers the
-    segment_max to a scatter-max.  Items may have any shape; they are
-    flattened.
-    """
-    idx, rank = hash_index_rank(items.reshape(-1), cfg)
-    # scatter-max directly on uint8 ranks: narrows the materialized operand
-    # 4x and makes the empty-segment fill value 0 (uint8 min) — no clamp
-    # needed.  §Perf sketch iteration 1: 25.3 -> fewer HLO bytes/item.
-    new = jax.ops.segment_max(
-        rank.astype(REGISTER_DTYPE), idx, num_segments=cfg.m,
-        indices_are_sorted=False,
-    )
-    return jnp.maximum(registers, new)
-
-
-def merge(*register_arrays: jnp.ndarray) -> jnp.ndarray:
-    """The paper's 'Merge buckets' fold: element-wise max across sketches."""
-    out = register_arrays[0]
-    for r in register_arrays[1:]:
-        out = jnp.maximum(out, r)
-    return out
-
-
-# ----------------------------------------------------------------------------
-# Phase 4 — computation (host-side, exact)
-# ----------------------------------------------------------------------------
-
-
-def _linear_counting(m: int, v: int) -> float:
-    """LinearCounting(m, V) = m * ln(m / V)   (Algorithm 1 line 25)."""
-    return m * math.log(m / v)
-
-
-def estimate(registers, cfg: HLLConfig) -> float:
-    """Phase 4: exact host-side cardinality estimate with corrections.
-
-    The harmonic sum of 2^-M[j] is accumulated as the *integer*
-    S = sum_j 2^(max_rank - M[j]) using python bignums, so the raw estimate
-    E = alpha * m^2 * 2^max_rank / S is exact up to one final division —
-    the same exactness the paper buys with its fixed-point accumulator.
-    """
-    regs = np.asarray(registers, dtype=np.int64)
-    m = cfg.m
-    if regs.shape != (m,):
-        raise ValueError(f"expected {(m,)} registers, got {regs.shape}")
-
-    shift = cfg.max_rank - regs  # in [0, max_rank]
-    # integer harmonic accumulator: exact
-    s = 0
-    counts = np.bincount(shift, minlength=cfg.max_rank + 1)
-    for sh, c in enumerate(counts):
-        if c:
-            s += int(c) << int(sh)
-    e_raw = alpha(m) * m * m * (1 << cfg.max_rank) / s
-
-    v = int(np.count_nonzero(regs == 0))
-    if e_raw <= 2.5 * m:
-        if v != 0:
-            return _linear_counting(m, v)  # small range correction
-        return e_raw
-    if cfg.hash_bits == 32:
-        two32 = float(1 << 32)
-        if e_raw <= two32 / 30.0:
-            return e_raw
-        return -two32 * math.log(1.0 - e_raw / two32)  # large range correction
-    # 64-bit hash: large-range correction obsolete (paper §V-A.7)
-    return e_raw
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def estimate_device(registers: jnp.ndarray, cfg: HLLConfig) -> jnp.ndarray:
-    """Float32 on-device estimator for in-step telemetry.
-
-    Matches `estimate` to float32 precision for the small-range and raw
-    paths (the telemetry consumer; the exact host path is authoritative).
-    """
-    regs = registers.astype(jnp.float32)
-    m = float(cfg.m)
-    harm = jnp.sum(jnp.exp2(-regs))
-    e_raw = alpha(cfg.m) * m * m / harm
-    v = jnp.sum(registers == 0).astype(jnp.float32)
-    lc = m * jnp.log(m / jnp.maximum(v, 1.0))
-    use_lc = (e_raw <= 2.5 * m) & (v > 0)
-    out = jnp.where(use_lc, lc, e_raw)
-    if cfg.hash_bits == 32:
-        two32 = float(1 << 32)
-        large = -two32 * jnp.log1p(-(e_raw / two32))
-        out = jnp.where(e_raw > two32 / 30.0, large, out)
-    return out
-
-
-def standard_error(cfg: HLLConfig) -> float:
-    """Theoretical HLL standard error 1.04/sqrt(m) (paper §III)."""
-    return 1.04 / math.sqrt(cfg.m)
-
-
-# ----------------------------------------------------------------------------
-# Convenience one-shot API
-# ----------------------------------------------------------------------------
-
-
-def cardinality(items: jnp.ndarray, cfg: Optional[HLLConfig] = None) -> float:
-    """Sketch a whole array and return the exact-finalized estimate."""
-    cfg = cfg or HLLConfig()
-    regs = update(init_registers(cfg), items, cfg)
-    return estimate(regs, cfg)
+from repro.sketch.hll import *  # noqa: F401,F403,E402
+from repro.sketch.hll import (  # noqa: F401,E402
+    HLLConfig,
+    REGISTER_DTYPE,
+    alpha,
+    cardinality,
+    estimate,
+    estimate_device,
+    hash_index_rank,
+    init_registers,
+    merge,
+    standard_error,
+    update,
+)

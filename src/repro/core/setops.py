@@ -1,61 +1,21 @@
-"""Approximate set algebra over HLL sketches (beyond-paper extension).
+"""Deprecated shim — set algebra moved to ``repro.sketch.setops``.
 
-The paper stops at single-stream cardinality.  Production deployments
-(the BigQuery use-case it cites) routinely need set operations, and the
-max-lattice gives two of them almost for free:
-
-  union        exact at sketch level: |A ∪ B| = estimate(merge(A, B))
-  intersection inclusion-exclusion: |A ∩ B| = |A| + |B| - |A ∪ B|
-               (error grows with the Jaccard disparity — reported alongside)
-  difference   |A \\ B| = |A ∪ B| - |B|
-
-Each operation consumes only the 48 KiB register arrays — no re-streaming.
+The functions now also accept ``HyperLogLog`` carriers directly; prefer the
+methods on ``repro.sketch.HyperLogLog`` (union_estimate / jaccard / ...).
 """
 
-from __future__ import annotations
+import warnings
 
-import math
-from typing import Tuple
+warnings.warn(
+    "repro.core.setops is deprecated; use repro.sketch (HyperLogLog set "
+    "algebra) instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-import jax.numpy as jnp
-
-from repro.core import hll
-from repro.core.hll import HLLConfig
-
-
-def union_estimate(a: jnp.ndarray, b: jnp.ndarray, cfg: HLLConfig) -> float:
-    return hll.estimate(hll.merge(a, b), cfg)
-
-
-def intersection_estimate(
-    a: jnp.ndarray, b: jnp.ndarray, cfg: HLLConfig
-) -> Tuple[float, float]:
-    """Returns (|A ∩ B| estimate, standard-error bound of the estimate).
-
-    Inclusion-exclusion over three HLL estimates; the absolute error is
-    bounded by the sum of the three absolute errors, so the *relative*
-    error blows up for small intersections — the returned bound makes that
-    explicit so callers can reject unreliable readings.
-    """
-    ea = hll.estimate(a, cfg)
-    eb = hll.estimate(b, cfg)
-    eu = union_estimate(a, b, cfg)
-    inter = max(0.0, ea + eb - eu)
-    sigma = hll.standard_error(cfg)
-    err_abs = sigma * (ea + eb + eu)
-    return inter, err_abs
-
-
-def difference_estimate(
-    a: jnp.ndarray, b: jnp.ndarray, cfg: HLLConfig
-) -> float:
-    """|A \\ B| >= 0 via union."""
-    return max(0.0, union_estimate(a, b, cfg) - hll.estimate(b, cfg))
-
-
-def jaccard_estimate(a: jnp.ndarray, b: jnp.ndarray, cfg: HLLConfig) -> float:
-    eu = union_estimate(a, b, cfg)
-    if eu <= 0:
-        return float("nan")
-    inter, _ = intersection_estimate(a, b, cfg)
-    return inter / eu
+from repro.sketch.setops import (  # noqa: F401,E402
+    difference_estimate,
+    intersection_estimate,
+    jaccard_estimate,
+    union_estimate,
+)

@@ -1,43 +1,43 @@
-"""Multi-pipeline / multi-device sketch engine — the paper's Fig. 3 on a pod.
+"""Deprecated shim — the sketch engine moved to ``repro.sketch``.
 
-The paper scales throughput by slicing the input stream over k identical
-aggregation pipelines and folding the partial sketches bucket-by-bucket with
-max.  On TPU the same structure exists at three levels:
-
-  lane level    k sub-sketches per device updated from disjoint stream slices
-                (``update_pipelined``) — the literal analogue of Fig. 3;
-  device level  each device of the ('pod','data') axes sketches its own data
-                shard inside the jitted step (``update_sharded`` under
-                shard_map) and partials merge with an all-reduce-MAX;
-  pod level     the same all-reduce-max spans the 'pod' axis — a sketch is
-                mergeable across pods for free.
-
-Because max is associative, commutative and idempotent, replayed batches
-(fault recovery), duplicated shards (elastic re-scaling) and stragglers can
-never corrupt the sketch — see DESIGN.md §6.
+``update_pipelined`` / ``update_sharded`` / ``datapath_tap`` now route
+through the ExecutionPlan dispatch in ``repro.sketch.dispatch``; the old
+``Sketch`` carrier is superseded by ``repro.sketch.HyperLogLog`` (which adds
+the overflow-safe counter, set algebra and serialization).  One behavioral
+unification: streams that do not divide ``pipelines`` are padded uniformly
+instead of raising (DESIGN.md §3).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core import hll
-from repro.core.hll import HLLConfig
+warnings.warn(
+    "repro.core.sketch is deprecated; use repro.sketch (HyperLogLog / "
+    "ExecutionPlan) instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from repro.sketch import hll  # noqa: E402
+from repro.sketch.backends import update_pipelined  # noqa: F401,E402
+from repro.sketch.dispatch import datapath_tap, update_registers  # noqa: F401,E402
+from repro.sketch.hll import HLLConfig  # noqa: F401,E402
+from repro.sketch.plan import ExecutionPlan  # noqa: E402
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class Sketch:
-    """Carrier pytree: registers + item counter (counter is exact, cheap)."""
+    """Legacy carrier (int32 counter) — use repro.sketch.HyperLogLog."""
 
     registers: jnp.ndarray  # (m,) uint8
-    n_items: jnp.ndarray  # () int64-ish counter (int32 pair avoided: f64-free)
+    n_items: jnp.ndarray  # () int32 counter; overflows at 2.1e9 items
 
     @staticmethod
     def init(cfg: HLLConfig) -> "Sketch":
@@ -53,40 +53,6 @@ def merge(a: Sketch, b: Sketch) -> Sketch:
     return Sketch(jnp.maximum(a.registers, b.registers), a.n_items + b.n_items)
 
 
-@partial(jax.jit, static_argnames=("cfg", "pipelines"))
-def update_pipelined(
-    registers: jnp.ndarray, items: jnp.ndarray, cfg: HLLConfig, pipelines: int = 8
-) -> jnp.ndarray:
-    """Fig. 3 on one device: slice the stream over k pipelines, fold with max.
-
-    Items are sliced blockwise ("processed where they arrive, no active
-    reassignment"); each slice aggregates into its own register array and the
-    k partials fold bucket-by-bucket.  Functionally identical to a single
-    pipeline — property-tested in tests/test_hll.py.
-    """
-    flat = items.reshape(-1)
-    n = flat.shape[0]
-    if n % pipelines != 0:
-        raise ValueError(f"items ({n}) must divide pipelines ({pipelines})")
-    slices = flat.reshape(pipelines, n // pipelines)
-    idx, rank = hll.hash_index_rank(slices, cfg)
-    # per-pipeline partial sketches: offset bucket ids per pipeline then one
-    # segment_max over k*m segments (single fused scatter).
-    offsets = (jnp.arange(pipelines, dtype=jnp.int32) * cfg.m)[:, None]
-    seg = (idx + offsets).reshape(-1)
-    partial_regs = jax.ops.segment_max(
-        rank.reshape(-1), seg, num_segments=pipelines * cfg.m
-    )
-    partial_regs = jnp.maximum(partial_regs, 0).astype(hll.REGISTER_DTYPE)
-    folded = jnp.max(partial_regs.reshape(pipelines, cfg.m), axis=0)
-    return jnp.maximum(registers, folded)
-
-
-# ----------------------------------------------------------------------------
-# Device-parallel sketching (shard_map)
-# ----------------------------------------------------------------------------
-
-
 def update_sharded(
     registers: jnp.ndarray,
     items: jnp.ndarray,
@@ -95,37 +61,9 @@ def update_sharded(
     data_axes: Sequence[str] = ("data",),
     pipelines: int = 1,
 ) -> jnp.ndarray:
-    """Sketch a device-sharded stream; merge partials with all-reduce-max.
-
-    ``items`` is sharded along its leading dim over ``data_axes``; every
-    device aggregates its local shard (optionally with k local pipelines)
-    and a single lax.pmax over the data axes folds the partial sketches —
-    the paper's Merge-buckets module expressed as one collective.
-    Registers come back replicated.
-    """
-    axes = tuple(data_axes)
-
-    def local(regs: jnp.ndarray, local_items: jnp.ndarray) -> jnp.ndarray:
-        if pipelines > 1:
-            out = update_pipelined(regs, local_items, cfg, pipelines)
-        else:
-            out = hll.update(regs, local_items, cfg)
-        return jax.lax.pmax(out, axes)
-
-    in_specs = (P(), P(axes))
-    return jax.shard_map(
-        local, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False
-    )(registers, items)
-
-
-def datapath_tap(
-    registers: jnp.ndarray, token_ids: jnp.ndarray, cfg: HLLConfig
-) -> jnp.ndarray:
-    """Sketch-on-the-datapath inside a jitted step (NIC analogue, DESIGN §2).
-
-    Called from train_step/serve_step on tokens already resident on device;
-    under pjit the segment_max partials and the replicated-output max-reduce
-    are inserted by SPMD partitioning automatically.  Costs O(tokens) VPU
-    ops + one (m,)-sized all-reduce — negligible next to model FLOPs.
-    """
-    return hll.update(registers, token_ids, cfg)
+    """Sketch a device-sharded stream; merge partials with all-reduce-max."""
+    plan = ExecutionPlan(
+        backend="jnp", placement="mesh", mesh=mesh,
+        data_axes=tuple(data_axes), pipelines=pipelines,
+    )
+    return update_registers(registers, items, cfg, plan)

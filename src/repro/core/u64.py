@@ -1,166 +1,12 @@
-"""TPU-native 64-bit unsigned arithmetic on uint32 limb pairs.
+"""Deprecated shim — moved to ``repro.sketch.u64``."""
 
-TPUs have no native 64-bit integer datapath (XLA emulates ``u64`` poorly on
-TPU and Pallas/Mosaic rejects it outright), and the VPU exposes no ``umulhi``.
-The paper's Murmur3-64 pipeline therefore cannot be ported with ``jnp.uint64``
-— instead every 64-bit quantity is carried as a ``(hi, lo)`` pair of uint32
-arrays and multiplication is decomposed into 16-bit partial products, all of
-which fit a 32-bit lane exactly.  This mirrors how the FPGA design maps the
-64-bit multiply onto multiple DSP slices.
+import warnings
 
-All functions are shape-polymorphic and jit/Pallas friendly (pure jnp ops,
-no control flow on values).
-"""
+warnings.warn(
+    "repro.core.u64 is deprecated; import repro.sketch.u64 instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-from __future__ import annotations
-
-from typing import NamedTuple, Tuple
-
-import jax.numpy as jnp
-import numpy as np
-
-MASK32 = np.uint32(0xFFFFFFFF)
-MASK16 = np.uint32(0xFFFF)
-
-
-class U64(NamedTuple):
-    """A 64-bit unsigned integer as two uint32 limbs."""
-
-    hi: jnp.ndarray
-    lo: jnp.ndarray
-
-
-def u64(hi: int, lo: int) -> U64:
-    """Build a scalar U64 constant from python ints."""
-    return U64(np.uint32(hi & 0xFFFFFFFF), np.uint32(lo & 0xFFFFFFFF))
-
-
-def from_py(value: int) -> U64:
-    """Build a scalar U64 constant from a python int < 2**64."""
-    value &= (1 << 64) - 1
-    return u64(value >> 32, value & 0xFFFFFFFF)
-
-
-def from_u32(x: jnp.ndarray) -> U64:
-    """Zero-extend a uint32 array into a U64."""
-    x = x.astype(jnp.uint32)
-    return U64(jnp.zeros_like(x), x)
-
-
-def to_py(x: U64) -> int:
-    """Collapse a scalar U64 back to a python int (test helper)."""
-    return (int(x.hi) << 32) | int(x.lo)
-
-
-def xor(a: U64, b: U64) -> U64:
-    return U64(a.hi ^ b.hi, a.lo ^ b.lo)
-
-
-def add(a: U64, b: U64) -> U64:
-    """64-bit add modulo 2**64 with carry propagation."""
-    lo = (a.lo + b.lo).astype(jnp.uint32)
-    carry = (lo < a.lo).astype(jnp.uint32)
-    hi = (a.hi + b.hi + carry).astype(jnp.uint32)
-    return U64(hi, lo)
-
-
-def _mul32_full(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Full 32x32 -> 64 bit product via 16-bit partial products.
-
-    Every partial product is <= (2^16-1)^2 < 2^32, so each fits uint32
-    exactly; the carry chain is assembled explicitly.  Returns (hi, lo).
-    """
-    a0 = a & MASK16
-    a1 = a >> 16
-    b0 = b & MASK16
-    b1 = b >> 16
-
-    p00 = a0 * b0  # bits [0, 32)
-    p01 = a0 * b1  # bits [16, 48)
-    p10 = a1 * b0  # bits [16, 48)
-    p11 = a1 * b1  # bits [32, 64)
-
-    # middle = p01 + p10 could overflow 32 bits -> track its carry.
-    mid = (p01 + p10).astype(jnp.uint32)
-    mid_carry = (mid < p01).astype(jnp.uint32)  # 1 iff the 2^32 bit was set
-
-    lo = (p00 + ((mid & MASK16) << 16)).astype(jnp.uint32)
-    lo_carry = (lo < p00).astype(jnp.uint32)
-
-    hi = (p11 + (mid >> 16) + (mid_carry << 16) + lo_carry).astype(jnp.uint32)
-    return hi, lo
-
-
-def mul(a: U64, b: U64) -> U64:
-    """64-bit multiply modulo 2**64.
-
-    (a.hi*2^32 + a.lo) * (b.hi*2^32 + b.lo) mod 2^64
-      = (a.lo*b.lo)  +  ((a.lo*b.hi + a.hi*b.lo) << 32)
-    """
-    hi, lo = _mul32_full(a.lo, b.lo)
-    cross = (a.lo * b.hi + a.hi * b.lo).astype(jnp.uint32)  # mod 2^32 is fine
-    return U64((hi + cross).astype(jnp.uint32), lo)
-
-
-def shr(a: U64, n: int) -> U64:
-    """Logical right shift by a static amount 0 < n < 64."""
-    if not 0 < n < 64:
-        raise ValueError(f"shift must be in (0, 64), got {n}")
-    if n < 32:
-        lo = (a.lo >> n) | (a.hi << (32 - n))
-        hi = a.hi >> n
-    elif n == 32:
-        lo, hi = a.hi, jnp.zeros_like(a.hi)
-    else:
-        lo = a.hi >> (n - 32)
-        hi = jnp.zeros_like(a.hi)
-    return U64(hi.astype(jnp.uint32), lo.astype(jnp.uint32))
-
-
-def shl(a: U64, n: int) -> U64:
-    """Left shift by a static amount 0 < n < 64."""
-    if not 0 < n < 64:
-        raise ValueError(f"shift must be in (0, 64), got {n}")
-    if n < 32:
-        hi = (a.hi << n) | (a.lo >> (32 - n))
-        lo = a.lo << n
-    elif n == 32:
-        hi, lo = a.lo, jnp.zeros_like(a.lo)
-    else:
-        hi = a.lo << (n - 32)
-        lo = jnp.zeros_like(a.lo)
-    return U64(hi.astype(jnp.uint32), lo.astype(jnp.uint32))
-
-
-def rotl(a: U64, n: int) -> U64:
-    """Rotate left by a static amount 0 < n < 64 (Murmur3's ROTL64)."""
-    n %= 64
-    if n == 0:
-        return a
-    left = shl(a, n)
-    right = shr(a, 64 - n)
-    return U64(left.hi | right.hi, left.lo | right.lo)
-
-
-def clz32(x: jnp.ndarray) -> jnp.ndarray:
-    """Branch-free count-leading-zeros of a uint32 array.
-
-    TPU's VPU has no clz instruction; a 5-step binary search of select ops is
-    exact for every input (unlike float-exponent tricks which round above
-    2^24).  Returns int32 in [0, 32].
-    """
-    x = x.astype(jnp.uint32)
-    n = jnp.zeros(x.shape, jnp.int32)
-    for shift_amount in (16, 8, 4, 2, 1):
-        mask_high = x >= jnp.uint32(1 << (32 - shift_amount))
-        n = jnp.where(mask_high, n, n + shift_amount)
-        x = jnp.where(mask_high, x, x << shift_amount)
-    # all-zero input: the loop above counted 31, fix to 32.
-    return jnp.where(x == 0, jnp.int32(32), n)
-
-
-def clz(a: U64) -> jnp.ndarray:
-    """Count leading zeros of a U64; int32 in [0, 64]."""
-    hi_clz = clz32(a.hi)
-    lo_clz = clz32(a.lo)
-    return jnp.where(a.hi != 0, hi_clz, 32 + lo_clz)
+from repro.sketch.u64 import *  # noqa: F401,F403,E402
+from repro.sketch.u64 import MASK16, MASK32, U64  # noqa: F401,E402

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import murmur3
+from repro.sketch import murmur3
 
 
 @dataclasses.dataclass(frozen=True)

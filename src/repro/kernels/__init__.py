@@ -1,3 +1,15 @@
-"""Pallas TPU kernels for the paper's compute hot-spots (+ jnp oracles)."""
+"""Pallas TPU kernels for the paper's compute hot-spots (+ jnp oracles).
 
-from repro.kernels import ops, ref  # noqa: F401
+``repro.kernels.ops`` is a deprecated shim over ``repro.sketch.backends``;
+it is resolved lazily here so that importing the kernel primitives
+(hash_rank / hll_fused / bucket_fold / ref) never triggers its
+DeprecationWarning or a circular import through repro.sketch.
+"""
+
+import importlib
+
+
+def __getattr__(name):
+    if name in ("ops", "ref"):
+        return importlib.import_module(f"repro.kernels.{name}")
+    raise AttributeError(f"module 'repro.kernels' has no attribute {name!r}")

@@ -23,8 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import hll, u64 as u64lib
-from repro.core.hll import HLLConfig
+from repro.sketch import hll, u64 as u64lib
+from repro.sketch.hll import HLLConfig
 
 LANES = 128
 DEFAULT_BLOCK_ROWS = 64  # 64 x 128 = 8192 items / grid step
@@ -50,7 +50,7 @@ def hash_rank(
 ):
     """Hash a (rows, 128) uint32/int32 array into (idx, rank) int32 arrays.
 
-    rows must be a multiple of block_rows; use kernels.ops.hash_rank for the
+    rows must be a multiple of block_rows; use repro.sketch.backends.hash_rank for the
     padding/reshaping convenience wrapper over flat streams.
     """
     if items.ndim != 2 or items.shape[1] != LANES:

@@ -14,7 +14,7 @@ the chunk axis merges the chunk — "updates to the same counter arriving
 during the read-modify-write cycle are merged" (paper §V-A.4), except here
 the merge window is the whole chunk.  Cost is O(items * m) VPU compares,
 which is the right trade only for small m; for p=16 the scatter-based path
-in core/hll.py is used instead (see DESIGN.md §2).
+in sketch/hll.py is used instead (see DESIGN.md §2).
 
 Padding items are neutralized by forcing their rank to 0: registers are
 non-negative and max(r, 0) is the identity, so a rank-0 update is a no-op
@@ -30,8 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import hll
-from repro.core.hll import HLLConfig
+from repro.sketch import hll
+from repro.sketch.hll import HLLConfig
 
 LANES = 128
 DEFAULT_BLOCK_ROWS = 8

@@ -1,125 +1,24 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Deprecated shim — the kernel wrappers moved to ``repro.sketch.backends``.
 
-These absorb the tiling details (padding flat streams to (rows, 128) tiles,
-dtype casts, small-sketch block clamping) so callers see the same API shape
-as the pure-jnp reference path in repro.core.
-
-``interpret`` defaults to True on CPU (this container) and False on TPU,
-where the Mosaic-compiled kernel runs.
+Use ``repro.sketch.update_registers`` with ``ExecutionPlan(backend="pallas")``
+or ``backend="pallas_pipelined"`` instead of calling these directly.  One
+behavioral unification: ``pipelined_update`` now defaults to the package-wide
+``DEFAULT_PIPELINES`` (8) rather than 4.
 """
 
-from __future__ import annotations
+import warnings
 
-import functools
-from typing import Optional, Tuple
+warnings.warn(
+    "repro.kernels.ops is deprecated; use repro.sketch (ExecutionPlan "
+    "backends 'pallas' / 'pallas_pipelined') instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import hll
-from repro.core.hll import HLLConfig
-from repro.kernels import bucket_fold as _fold
-from repro.kernels import hash_rank as _hash
-from repro.kernels import hll_fused as _fused
-
-LANES = _hash.LANES
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad_to_tiles(flat: jnp.ndarray, tile_items: int) -> Tuple[jnp.ndarray, int]:
-    """Pad a flat stream up to a whole number of (block_rows, 128) tiles."""
-    n = flat.shape[0]
-    padded = -(-n // tile_items) * tile_items
-    if padded != n:
-        flat = jnp.pad(flat, (0, padded - n))
-    return flat.reshape(padded // LANES, LANES), n
-
-
-def hash_rank(
-    items: jnp.ndarray,
-    cfg: HLLConfig,
-    *,
-    block_rows: int = _hash.DEFAULT_BLOCK_ROWS,
-    interpret: Optional[bool] = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused murmur3+rank of a flat item stream -> (idx, rank) int32 arrays."""
-    interpret = _default_interpret() if interpret is None else interpret
-    flat = items.reshape(-1)
-    tiled, n = _pad_to_tiles(flat, block_rows * LANES)
-    idx, rank = _hash.hash_rank(
-        tiled, cfg, block_rows=block_rows, interpret=interpret
-    )
-    return idx.reshape(-1)[:n], rank.reshape(-1)[:n]
-
-
-def bucket_fold(
-    partials: jnp.ndarray,
-    *,
-    block_m: int = _fold.DEFAULT_BLOCK_M,
-    interpret: Optional[bool] = None,
-) -> jnp.ndarray:
-    """Fold (k, m) partial registers (any int dtype) -> (m,) by max."""
-    interpret = _default_interpret() if interpret is None else interpret
-    out = _fold.bucket_fold(
-        partials.astype(jnp.int32), block_m=block_m, interpret=interpret
-    )
-    return out.astype(partials.dtype)
-
-
-def hll_update(
-    registers: jnp.ndarray,
-    items: jnp.ndarray,
-    cfg: HLLConfig,
-    *,
-    block_rows: int = _fused.DEFAULT_BLOCK_ROWS,
-    interpret: Optional[bool] = None,
-) -> jnp.ndarray:
-    """Fully-fused aggregation of a flat stream into (m,) uint8 registers.
-
-    Small-p sketches only (p <= 12); the p=16 production sketch uses the
-    scatter path in core/hll.py — see the kernel docstring for why.
-    """
-    interpret = _default_interpret() if interpret is None else interpret
-    flat = items.reshape(-1)
-    tiled, n = _pad_to_tiles(flat, block_rows * LANES)
-    n_valid = jnp.full((1, 1), n, jnp.int32)
-    regs2d = registers.astype(jnp.int32).reshape(1, cfg.m)
-    out = _fused.hll_update_fused(
-        regs2d, tiled, n_valid, cfg, block_rows=block_rows, interpret=interpret
-    )
-    return out.reshape(cfg.m).astype(hll.REGISTER_DTYPE)
-
-
-def pipelined_update(
-    registers: jnp.ndarray,
-    items: jnp.ndarray,
-    cfg: HLLConfig,
-    pipelines: int = 4,
-    *,
-    interpret: Optional[bool] = None,
-) -> jnp.ndarray:
-    """Paper Fig. 3 built from the kernels: k fused pipelines + fold kernel.
-
-    Slices the stream across ``pipelines`` sub-sketches, aggregates each with
-    the fused kernel, folds partials with the bucket_fold kernel, and merges
-    into the running registers.
-    """
-    interpret = _default_interpret() if interpret is None else interpret
-    flat = items.reshape(-1)
-    n = flat.shape[0]
-    per = -(-n // pipelines)
-    partials = []
-    for k in range(pipelines):
-        part = flat[k * per : (k + 1) * per]  # static slice; last may be short
-        partials.append(
-            hll_update(
-                jnp.zeros((cfg.m,), hll.REGISTER_DTYPE), part, cfg,
-                interpret=interpret,
-            )
-        )
-    folded = bucket_fold(jnp.stack(partials), interpret=interpret)
-    return jnp.maximum(registers, folded)
+from repro.sketch.backends import (  # noqa: F401,E402
+    LANES,
+    bucket_fold,
+    hash_rank,
+    hll_update,
+    pipelined_update,
+)

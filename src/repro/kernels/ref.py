@@ -9,8 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import hll
-from repro.core.hll import HLLConfig
+from repro.sketch import hll
+from repro.sketch.hll import HLLConfig
 
 
 def hash_rank_ref(items: jnp.ndarray, cfg: HLLConfig):

@@ -279,6 +279,8 @@ def run_cell(
         record["memory_analysis"] = _memory_dict(compiled)
         try:
             ca = compiled.cost_analysis()
+            if isinstance(ca, list):  # older jax returns [per-device dict]
+                ca = ca[0]
             record["cost_analysis_raw"] = {
                 "flops": float(ca.get("flops", -1)),
                 "bytes_accessed": float(ca.get("bytes accessed", -1)),

@@ -14,22 +14,28 @@ from __future__ import annotations
 import jax
 
 
+def make_auto_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where the installed jax
+    supports them (jax.sharding.AxisType landed after 0.4.x; on older
+    releases every axis is Auto already, so the kwarg is simply dropped)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False, tp: int = 16):
     """tp != 16 is a §Perf variant: same 256 chips/pod, different DP x TP
     factorization (data = 256 // tp).  The assignment baseline is tp=16."""
     data = 256 // tp
     shape = (2, data, tp) if multi_pod else (data, tp)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many devices the test process has."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def n_chips(mesh) -> int:

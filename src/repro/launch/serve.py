@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig
 from repro.models import transformer
 from repro.serve import engine
 from repro.telemetry.sketchboard import StreamSketch

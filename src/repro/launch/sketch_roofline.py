@@ -25,8 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import hll, sketch as sketchlib
-from repro.core.hll import HLLConfig
+from repro.sketch import ExecutionPlan, HLLConfig, hll, update_registers
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh, n_chips
 
@@ -37,22 +36,17 @@ def lower_variant(name: str, mesh, cfg: HLLConfig, pipelines: int):
     chips = n_chips(mesh)
     items = jax.ShapeDtypeStruct((N_ITEMS,), jnp.int32)
     regs = jax.ShapeDtypeStruct((cfg.m,), hll.REGISTER_DTYPE)
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-
-    def fn(r, x):
-        return sketchlib.update_sharded(
-            r, x, cfg, mesh, data_axes=dp + (("model",) if True else ()),
-            pipelines=pipelines,
-        )
 
     # shard the stream over EVERY mesh axis — the sketch has no TP dimension,
     # all 256 chips are stream lanes (the paper's k pipelines, k=chips*k_loc)
     all_axes = tuple(mesh.axis_names)
+    plan = ExecutionPlan(
+        backend="jnp", placement="mesh", mesh=mesh, data_axes=all_axes,
+        pipelines=pipelines,
+    )
 
     def fn_all(r, x):
-        return sketchlib.update_sharded(
-            r, x, cfg, mesh, data_axes=all_axes, pipelines=pipelines
-        )
+        return update_registers(r, x, cfg, plan)
 
     with mesh:
         lowered = jax.jit(

@@ -19,7 +19,7 @@ import os
 import jax
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig
 from repro.data.pipeline import DataConfig
 from repro.optim.adamw import OptimizerConfig
 from repro.train.loop import LoopConfig, train

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.optim.adamw import dequantize_int8, quantize_int8
 
 
@@ -56,12 +57,8 @@ def make_compressed_grad_reducer(mesh, axes: Sequence[str]):
 
             return jax.tree.map(one, g)
 
-        return jax.shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(P(),),
-            out_specs=P(),
-            check_vma=False,
+        return shard_map(
+            local, mesh=mesh, in_specs=(P(),), out_specs=P()
         )(grads)
 
     return reduce_tree

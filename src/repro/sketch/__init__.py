@@ -1,0 +1,59 @@
+"""repro.sketch — the single public API for the paper's HLL engine.
+
+Object API (preferred):
+
+    from repro.sketch import HyperLogLog, HLLConfig, ExecutionPlan
+
+    sk = HyperLogLog.empty(HLLConfig(p=16, hash_bits=64))
+    sk = sk.update(items)                                # default jnp plan
+    sk = sk.update(items, ExecutionPlan(backend="pallas_pipelined"))
+    est = sk.estimate()
+    ab = a | b                                           # Merge-buckets fold
+    blob = sk.to_bytes(); back = HyperLogLog.from_bytes(blob)
+
+Functional register-level API (for jitted datapaths that carry raw (m,)
+arrays in their state pytrees): init_registers / update_registers /
+datapath_tap / merge / estimate / estimate_device.
+
+Every (backend, placement, pipelines) ExecutionPlan produces bit-identical
+registers on the same stream — property-tested in tests/test_sketch_api.py.
+The legacy surfaces (repro.core.hll, repro.core.sketch, repro.core.setops,
+repro.kernels.ops) remain importable as deprecated shims over this package.
+See DESIGN.md for the layout and dispatch rules.
+"""
+
+from repro.sketch.hll import (  # noqa: F401
+    HLLConfig,
+    REGISTER_DTYPE,
+    alpha,
+    cardinality,
+    estimate,
+    estimate_device,
+    hash_index_rank,
+    init_registers,
+    merge,
+    standard_error,
+    update,
+)
+from repro.sketch.plan import (  # noqa: F401
+    DEFAULT_PIPELINES,
+    DEFAULT_PLAN,
+    ExecutionPlan,
+    available_backends,
+    example_plans,
+    get_backend,
+    reference_plan,
+    register_backend,
+)
+
+# importing backends registers the built-in "jnp"/"pallas"/"pallas_pipelined"
+# entries; it must come after .plan (registry) and .hll (primitives).
+from repro.sketch import backends  # noqa: F401  (registration side effect)
+from repro.sketch.dispatch import datapath_tap, update_registers  # noqa: F401
+from repro.sketch.carrier import HyperLogLog  # noqa: F401
+from repro.sketch.setops import (  # noqa: F401
+    difference_estimate,
+    intersection_estimate,
+    jaccard_estimate,
+    union_estimate,
+)

@@ -1,0 +1,228 @@
+"""Aggregation backends behind the ExecutionPlan registry.
+
+Three backends ship by default, all bit-identical on the same stream (the
+max-lattice makes slicing/padding invisible — DESIGN.md §6):
+
+  jnp              XLA scatter-max; ``pipelines`` k slices the stream into k
+                   sub-sketches folded by one fused segment-max (Fig. 3)
+  pallas           fully-fused Pallas kernel, registers VMEM-resident for the
+                   whole sweep (small-p sketches, p <= 12 — DESIGN.md §2)
+  pallas_pipelined k fused Pallas pipelines + the bucket-fold kernel
+
+This module also owns the tiling/padding wrappers that used to live in
+``repro.kernels.ops`` (now a deprecated shim).  Non-divisible streams are
+always padded, never rejected: padded positions get rank 0, and a rank-0
+update is the identity of the bucket max.
+
+``interpret`` defaults to True off-TPU (this container) and False on TPU,
+where the Mosaic-compiled kernel runs.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch import hll
+from repro.sketch.hll import HLLConfig
+from repro.sketch.plan import DEFAULT_PIPELINES, ExecutionPlan, register_backend
+
+# The kernel modules themselves import repro.sketch.hll, so they are loaded
+# lazily (first wrapper call) rather than at module import — this keeps
+# `import repro.kernels.hash_rank` (a documented, non-deprecated entry)
+# working as a process's very first import instead of dying in the cycle
+# repro.kernels.* -> repro.sketch -> backends -> repro.kernels.*.
+LANES = 128  # pltpu lane width; asserted against the kernel modules on load
+
+
+def _kernels():
+    from repro.kernels import bucket_fold as _fold
+    from repro.kernels import hash_rank as _hash
+    from repro.kernels import hll_fused as _fused
+
+    assert _hash.LANES == _fold.LANES == _fused.LANES == LANES
+    return _hash, _fold, _fused
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to_tiles(flat: jnp.ndarray, tile_items: int) -> Tuple[jnp.ndarray, int]:
+    """Pad a flat stream up to a whole number of (block_rows, 128) tiles.
+
+    Always at least one tile, so empty streams/slices (e.g. a short last
+    pipeline when n < k) lower cleanly; the kernels' n_valid masking turns
+    the all-padding tile into a no-op.
+    """
+    n = flat.shape[0]
+    padded = max(1, -(-n // tile_items)) * tile_items
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(padded // LANES, LANES), n
+
+
+# ----------------------------------------------------------------------------
+# jnp backend (reference scatter path + lane-pipelined variant)
+# ----------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg", "pipelines"))
+def update_pipelined(
+    registers: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+    pipelines: int = DEFAULT_PIPELINES,
+) -> jnp.ndarray:
+    """Fig. 3 on one device: slice the stream over k pipelines, fold with max.
+
+    Streams that do not divide ``pipelines`` are zero-padded and the padded
+    positions' ranks masked to 0 (the bucket-max identity), so any length is
+    accepted and the result stays bit-identical to the single-pipeline path.
+    """
+    flat = items.reshape(-1)
+    n = flat.shape[0]
+    if pipelines <= 1 or n == 0:
+        return hll.update(registers, flat, cfg)
+    padded = -(-n // pipelines) * pipelines
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    slices = flat.reshape(pipelines, padded // pipelines)
+    idx, rank = hll.hash_index_rank(slices, cfg)
+    if padded != n:
+        pos = jnp.arange(padded, dtype=jnp.int32).reshape(slices.shape)
+        rank = jnp.where(pos < n, rank, 0)
+    # per-pipeline partial sketches: offset bucket ids per pipeline then one
+    # segment_max over k*m segments (single fused scatter).
+    offsets = (jnp.arange(pipelines, dtype=jnp.int32) * cfg.m)[:, None]
+    seg = (idx + offsets).reshape(-1)
+    partial_regs = jax.ops.segment_max(
+        rank.reshape(-1), seg, num_segments=pipelines * cfg.m
+    )
+    partial_regs = jnp.maximum(partial_regs, 0).astype(hll.REGISTER_DTYPE)
+    folded = jnp.max(partial_regs.reshape(pipelines, cfg.m), axis=0)
+    return jnp.maximum(registers, folded)
+
+
+# ----------------------------------------------------------------------------
+# Pallas kernel wrappers (absorb tiling, dtype casts, block clamping)
+# ----------------------------------------------------------------------------
+
+
+def hash_rank(
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+    *,
+    block_rows: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused murmur3+rank of a flat item stream -> (idx, rank) int32 arrays."""
+    _hash, _, _ = _kernels()
+    block_rows = _hash.DEFAULT_BLOCK_ROWS if block_rows is None else block_rows
+    interpret = _default_interpret() if interpret is None else interpret
+    flat = items.reshape(-1)
+    tiled, n = _pad_to_tiles(flat, block_rows * LANES)
+    idx, rank = _hash.hash_rank(
+        tiled, cfg, block_rows=block_rows, interpret=interpret
+    )
+    return idx.reshape(-1)[:n], rank.reshape(-1)[:n]
+
+
+def bucket_fold(
+    partials: jnp.ndarray,
+    *,
+    block_m: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fold (k, m) partial registers (any int dtype) -> (m,) by max."""
+    _, _fold, _ = _kernels()
+    block_m = _fold.DEFAULT_BLOCK_M if block_m is None else block_m
+    interpret = _default_interpret() if interpret is None else interpret
+    out = _fold.bucket_fold(
+        partials.astype(jnp.int32), block_m=block_m, interpret=interpret
+    )
+    return out.astype(partials.dtype)
+
+
+def hll_update(
+    registers: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+    *,
+    block_rows: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fully-fused aggregation of a flat stream into (m,) uint8 registers.
+
+    Small-p sketches only (p <= 12); the p=16 production sketch uses the
+    scatter path in sketch/hll.py — see the kernel docstring for why.
+    """
+    _, _, _fused = _kernels()
+    block_rows = _fused.DEFAULT_BLOCK_ROWS if block_rows is None else block_rows
+    interpret = _default_interpret() if interpret is None else interpret
+    flat = items.reshape(-1)
+    tiled, n = _pad_to_tiles(flat, block_rows * LANES)
+    n_valid = jnp.full((1, 1), n, jnp.int32)
+    regs2d = registers.astype(jnp.int32).reshape(1, cfg.m)
+    out = _fused.hll_update_fused(
+        regs2d, tiled, n_valid, cfg, block_rows=block_rows, interpret=interpret
+    )
+    return out.reshape(cfg.m).astype(hll.REGISTER_DTYPE)
+
+
+def pipelined_update(
+    registers: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+    pipelines: int = DEFAULT_PIPELINES,
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Paper Fig. 3 built from the kernels: k fused pipelines + fold kernel.
+
+    Slices the stream across ``pipelines`` sub-sketches, aggregates each with
+    the fused kernel, folds partials with the bucket_fold kernel, and merges
+    into the running registers.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    flat = items.reshape(-1)
+    n = flat.shape[0]
+    per = -(-n // pipelines)
+    partials = []
+    for k in range(pipelines):
+        part = flat[k * per : (k + 1) * per]  # static slice; last may be short
+        partials.append(
+            hll_update(
+                jnp.zeros((cfg.m,), hll.REGISTER_DTYPE), part, cfg,
+                interpret=interpret,
+            )
+        )
+    folded = bucket_fold(jnp.stack(partials), interpret=interpret)
+    return jnp.maximum(registers, folded)
+
+
+# ----------------------------------------------------------------------------
+# registry entries: fn(registers, items, cfg, plan) -> registers
+# ----------------------------------------------------------------------------
+
+
+@register_backend("jnp")
+def _jnp_backend(registers, items, cfg: HLLConfig, plan: ExecutionPlan):
+    return update_pipelined(registers, items, cfg, plan.pipelines)
+
+
+@register_backend("pallas")
+def _pallas_backend(registers, items, cfg: HLLConfig, plan: ExecutionPlan):
+    # the fused kernel is one hardware pipeline; k>1 belongs to
+    # "pallas_pipelined", so `pipelines` is intentionally not consulted here.
+    return hll_update(registers, items, cfg, interpret=plan.interpret)
+
+
+@register_backend("pallas_pipelined")
+def _pallas_pipelined_backend(registers, items, cfg: HLLConfig, plan: ExecutionPlan):
+    return pipelined_update(
+        registers, items, cfg, plan.pipelines, interpret=plan.interpret
+    )

@@ -1,0 +1,80 @@
+"""The single aggregation entry point: update_registers(regs, items, cfg, plan).
+
+One call replaces the five historical surfaces (core.hll.update,
+core.sketch.update_pipelined / update_sharded / datapath_tap and
+kernels.ops.hll_update / pipelined_update): the ``ExecutionPlan`` chooses the
+backend and placement, and every plan yields bit-identical registers on the
+same stream (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.sketch import hll
+from repro.sketch.hll import HLLConfig
+from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, get_backend
+
+
+def update_registers(
+    registers: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+    plan: Optional[ExecutionPlan] = None,
+) -> jnp.ndarray:
+    """Aggregate ``items`` into ``registers`` under ``plan`` (Phase 3).
+
+    placement="local": the backend runs on the caller's device(s) as-is.
+    placement="mesh":  ``items`` is flattened and sharded over
+    ``plan.data_axes``; every device aggregates its shard with the selected
+    backend and one lax.pmax folds the partial sketches — the paper's
+    Merge-buckets module as a single collective.  Registers come back
+    replicated.  Streams that do not divide the mesh axes are edge-padded
+    (repeating an existing item is a no-op on the max-lattice, DESIGN.md §6),
+    so no plan ever raises on stream length.
+    """
+    plan = (DEFAULT_PLAN if plan is None else plan).validate()
+    backend = get_backend(plan.backend)
+    if plan.placement == "local":
+        return backend(registers, items, cfg, plan)
+
+    axes = plan.data_axes
+    flat = items.reshape(-1)
+    n = flat.shape[0]
+    if n == 0:
+        return registers
+    shards = 1
+    for a in axes:
+        shards *= plan.mesh.shape[a]
+    padded = -(-n // shards) * shards
+    if padded != n:
+        # zero-padding would sketch phantom items; repeating a real item
+        # cannot move any register (update is idempotent on the lattice)
+        flat = jnp.pad(flat, (0, padded - n), mode="edge")
+
+    def local(regs: jnp.ndarray, local_items: jnp.ndarray) -> jnp.ndarray:
+        return jax.lax.pmax(backend(regs, local_items, cfg, plan), axes)
+
+    in_specs = (P(), P(axes))
+    return shard_map(
+        local, mesh=plan.mesh, in_specs=in_specs, out_specs=P()
+    )(registers, flat)
+
+
+def datapath_tap(
+    registers: jnp.ndarray, token_ids: jnp.ndarray, cfg: HLLConfig
+) -> jnp.ndarray:
+    """Sketch-on-the-datapath inside a jitted step (NIC analogue, DESIGN.md §2).
+
+    Called from train_step/serve_step on tokens already resident on device;
+    under pjit the segment_max partials and the replicated-output max-reduce
+    are inserted by SPMD partitioning automatically.  Costs O(tokens) VPU
+    ops + one (m,)-sized all-reduce — negligible next to model FLOPs.
+    Equivalent to ``update_registers`` with the single-pipeline jnp plan.
+    """
+    return hll.update(registers, token_ids, cfg)

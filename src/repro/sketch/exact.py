@@ -1,0 +1,47 @@
+"""Baselines the paper compares against / falls back to.
+
+* ``exact_distinct``     — ground-truth distinct count (host, sort-based).
+* ``linear_counting``    — the LC bitmap estimator HLL reverts to at small
+                           cardinalities (Algorithm 1 line 15), standalone.
+* ``naive_distinct_mem`` — memory a naive exact set would need (paper §I's
+                           motivation: linear in cardinality).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sketch import murmur3
+from repro.sketch.hll import HLLConfig
+
+
+def exact_distinct(items) -> int:
+    """Ground-truth cardinality (host-side)."""
+    return int(np.unique(np.asarray(items).reshape(-1)).size)
+
+
+def linear_counting_registers(items: jnp.ndarray, cfg: HLLConfig) -> jnp.ndarray:
+    """Occupancy bitmap over m = 2^p hash buckets (uint8 0/1)."""
+    h = murmur3.murmur3_32(items.reshape(-1), cfg.seed)
+    idx = (h >> (32 - cfg.p)).astype(jnp.int32)
+    seg = jax.ops.segment_max(
+        jnp.ones_like(idx), idx, num_segments=cfg.m, indices_are_sorted=False
+    )
+    return jnp.maximum(seg, 0).astype(jnp.uint8)
+
+
+def linear_counting_estimate(bitmap, m: int) -> float:
+    v = int(m - np.count_nonzero(np.asarray(bitmap)))
+    if v == 0:
+        return float("inf")  # bitmap saturated; LC undefined
+    return m * math.log(m / v)
+
+
+def naive_distinct_mem_bytes(cardinality: int, item_bytes: int = 4) -> int:
+    """Memory of an exact hash-set, the paper's strawman (linear in n)."""
+    # 2x load-factor overhead, item + bucket pointer
+    return int(cardinality * (item_bytes + 8) * 2)

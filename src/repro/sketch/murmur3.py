@@ -1,0 +1,165 @@
+"""Murmur3 hash functions, vectorized in jnp, TPU-lowerable.
+
+The paper hashes 32-bit input words with (a) Murmur3_x86_32 (the "32-bit
+hash") and (b) the x64 variant producing a 64-bit value (the "64-bit hash"
+used for p=16 / cardinalities beyond 1e8).  Both are reproduced bit-exactly:
+
+* ``murmur3_32``  — Murmur3_x86_32 of a 4-byte little-endian key.
+* ``murmur3_64``  — h1 of Murmur3_x64_128 of a 4-byte little-endian key,
+  computed entirely in uint32 limb arithmetic (see core/u64.py) so the very
+  same code path lowers on TPU and inside Pallas kernels.
+
+Both take an int32/uint32 array of data items and are fully element-wise —
+the TPU analogue of the paper's DSP-slice pipeline is that all lanes of the
+VPU compute independent hashes every cycle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sketch import u64 as u64lib
+from repro.sketch.u64 import U64
+
+# --- Murmur3_x86_32 constants -------------------------------------------------
+_C1_32 = np.uint32(0xCC9E2D51)
+_C2_32 = np.uint32(0x1B873593)
+_FMIX1_32 = np.uint32(0x85EBCA6B)
+_FMIX2_32 = np.uint32(0xC2B2AE35)
+
+# --- Murmur3_x64_128 constants ------------------------------------------------
+_C1_64 = u64lib.from_py(0x87C37B91114253D5)
+_C2_64 = u64lib.from_py(0x4CF5AD432745937F)
+_M5 = u64lib.from_py(5)
+_N1 = u64lib.from_py(0x52DCE729)
+_N2 = u64lib.from_py(0x38495AB5)
+_FMIX1_64 = u64lib.from_py(0xFF51AFD7ED558CCD)
+_FMIX2_64 = u64lib.from_py(0xC4CEB9FE1A85EC53)
+
+
+def _rotl32(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    return ((x << n) | (x >> (32 - n))).astype(jnp.uint32)
+
+
+def fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    h = h ^ (h >> 16)
+    h = (h * _FMIX1_32).astype(jnp.uint32)
+    h = h ^ (h >> 13)
+    h = (h * _FMIX2_32).astype(jnp.uint32)
+    return h ^ (h >> 16)
+
+
+def murmur3_32(keys: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
+    """Murmur3_x86_32 of each 32-bit item, treated as a 4-byte LE key."""
+    k = keys.astype(jnp.uint32)
+    h = jnp.full(k.shape, np.uint32(seed & 0xFFFFFFFF))
+
+    # single 4-byte body block
+    k = (k * _C1_32).astype(jnp.uint32)
+    k = _rotl32(k, 15)
+    k = (k * _C2_32).astype(jnp.uint32)
+    h = h ^ k
+    h = _rotl32(h, 13)
+    h = (h * np.uint32(5) + np.uint32(0xE6546B64)).astype(jnp.uint32)
+
+    # no tail; finalize with len=4
+    h = h ^ np.uint32(4)
+    return fmix32(h)
+
+
+def fmix64(k: U64) -> U64:
+    k = u64lib.xor(k, u64lib.shr(k, 33))
+    k = u64lib.mul(k, _FMIX1_64)
+    k = u64lib.xor(k, u64lib.shr(k, 33))
+    k = u64lib.mul(k, _FMIX2_64)
+    return u64lib.xor(k, u64lib.shr(k, 33))
+
+
+def murmur3_64(keys: jnp.ndarray, seed: int = 0) -> U64:
+    """h1 of Murmur3_x64_128 of each 32-bit item (4-byte LE key).
+
+    A 4-byte key takes the tail path of the x64_128 algorithm:
+      k1 = key; k1 *= c1; k1 = rotl(k1,31); k1 *= c2; h1 ^= k1
+    then finalization with len=4.  Returns the full 64-bit h1 as a U64.
+    """
+    seed64 = u64lib.from_py(seed & 0xFFFFFFFFFFFFFFFF)
+    k = keys.astype(jnp.uint32)
+    zeros = jnp.zeros_like(k)
+    h1 = U64(zeros + seed64.hi, zeros + seed64.lo)
+    h2 = U64(zeros + seed64.hi, zeros + seed64.lo)
+
+    # tail (len=4): k1 = uint64(key)
+    k1 = u64lib.from_u32(k)
+    k1 = u64lib.mul(k1, _C1_64)
+    k1 = u64lib.rotl(k1, 31)
+    k1 = u64lib.mul(k1, _C2_64)
+    h1 = u64lib.xor(h1, k1)
+
+    # finalization
+    length = u64lib.from_py(4)
+    h1 = u64lib.xor(h1, length)
+    h2 = u64lib.xor(h2, length)
+    h1 = u64lib.add(h1, h2)
+    h2 = u64lib.add(h2, h1)
+    h1 = fmix64(h1)
+    h2 = fmix64(h2)
+    h1 = u64lib.add(h1, h2)
+    # (h2 += h1 would complete the 128-bit digest; h1 alone is our hash)
+    return h1
+
+
+def murmur3_64_py(key: int, seed: int = 0) -> int:
+    """Pure-python oracle for murmur3_64 (test ground truth)."""
+    mask = (1 << 64) - 1
+
+    def rotl(x: int, n: int) -> int:
+        return ((x << n) | (x >> (64 - n))) & mask
+
+    def fmix(k: int) -> int:
+        k ^= k >> 33
+        k = (k * 0xFF51AFD7ED558CCD) & mask
+        k ^= k >> 33
+        k = (k * 0xC4CEB9FE1A85EC53) & mask
+        k ^= k >> 33
+        return k
+
+    h1 = seed & mask
+    h2 = seed & mask
+    k1 = key & 0xFFFFFFFF
+    k1 = (k1 * 0x87C37B91114253D5) & mask
+    k1 = rotl(k1, 31)
+    k1 = (k1 * 0x4CF5AD432745937F) & mask
+    h1 ^= k1
+    h1 = (h1 ^ 4) & mask
+    h2 = (h2 ^ 4) & mask
+    h1 = (h1 + h2) & mask
+    h2 = (h2 + h1) & mask
+    h1 = fmix(h1)
+    h2 = fmix(h2)
+    h1 = (h1 + h2) & mask
+    return h1
+
+
+def murmur3_32_py(key: int, seed: int = 0) -> int:
+    """Pure-python oracle for murmur3_32 (test ground truth)."""
+    mask = (1 << 32) - 1
+
+    def rotl(x: int, n: int) -> int:
+        return ((x << n) | (x >> (32 - n))) & mask
+
+    h = seed & mask
+    k = key & mask
+    k = (k * 0xCC9E2D51) & mask
+    k = rotl(k, 15)
+    k = (k * 0x1B873593) & mask
+    h ^= k
+    h = rotl(h, 13)
+    h = (h * 5 + 0xE6546B64) & mask
+    h ^= 4
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & mask
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & mask
+    h ^= h >> 16
+    return h

@@ -1,0 +1,131 @@
+"""ExecutionPlan: config-driven dispatch for the sketch aggregation phase.
+
+The paper's engine is one pipeline behind one interface; the repro grew five
+entry points (scatter update, lane-pipelined update, device-sharded update,
+datapath tap, and the two Pallas wrappers) with divergent defaults.  An
+``ExecutionPlan`` names the full execution space instead:
+
+  backend    "jnp"              XLA scatter-max reference (paper Algorithm 1)
+             "pallas"           fused Pallas kernel, registers resident in
+                                VMEM for the whole sweep (small-p sketches)
+             "pallas_pipelined" k fused Pallas pipelines + max-fold kernel
+                                (paper Fig. 3 built from kernels)
+  placement  "local"            one device
+             "mesh"             items sharded over ``data_axes`` of ``mesh``;
+                                partial sketches fold with one all-reduce-max
+  pipelines  k sub-sketch lanes per device (paper Fig. 3); every backend
+             produces registers bit-identical to the k=1 reference because
+             max is associative/commutative/idempotent (DESIGN.md §6).
+
+Streams whose length does not divide ``pipelines`` (or the kernel tile) are
+padded uniformly; padding is neutralized by rank-0 masking, never raising.
+
+New backends register through :func:`register_backend`, which is the seam
+future PRs (sparse registers, compressed HLLL representations, Ertl
+estimators with their own aggregation layouts) plug into.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+DEFAULT_PIPELINES = 8  # unified default (was 8 in core.sketch, 4 in kernels.ops)
+
+PLACEMENTS = ("local", "mesh")
+
+# backend name -> fn(registers, flat_items, cfg, plan) -> registers
+_BACKENDS: Dict[str, Callable] = {}
+
+
+def register_backend(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register an aggregation backend under ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _BACKENDS:
+            raise ValueError(f"backend {name!r} already registered")
+        _BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> Callable:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {sorted(_BACKENDS)}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Where and how one ``update()`` call runs.  Hashable (jit-static)."""
+
+    backend: str = "jnp"
+    placement: str = "local"
+    pipelines: int = DEFAULT_PIPELINES
+    mesh: Optional[jax.sharding.Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    # Pallas interpret mode: None = auto (interpret off-TPU, compiled on TPU)
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(
+                f"placement must be one of {PLACEMENTS}, got {self.placement!r}"
+            )
+        if self.pipelines < 1:
+            raise ValueError(f"pipelines must be >= 1, got {self.pipelines}")
+        if self.placement == "mesh" and self.mesh is None:
+            raise ValueError("placement='mesh' requires a mesh")
+        object.__setattr__(self, "data_axes", tuple(self.data_axes))
+
+    def validate(self) -> "ExecutionPlan":
+        """Check the backend exists (deferred so plans can be built early)."""
+        get_backend(self.backend)
+        if self.placement == "mesh":
+            missing = set(self.data_axes) - set(self.mesh.axis_names)
+            if missing:
+                raise ValueError(
+                    f"data_axes {sorted(missing)} not in mesh axes "
+                    f"{self.mesh.axis_names}"
+                )
+        return self
+
+    def with_mesh(self, mesh, data_axes=("data",)) -> "ExecutionPlan":
+        return dataclasses.replace(
+            self, placement="mesh", mesh=mesh, data_axes=tuple(data_axes)
+        )
+
+
+DEFAULT_PLAN = ExecutionPlan()
+
+
+def reference_plan() -> ExecutionPlan:
+    """The bit-exactness oracle: single-pipeline jnp scatter path."""
+    return ExecutionPlan(backend="jnp", placement="local", pipelines=1)
+
+
+def example_plans(mesh=None) -> Tuple[ExecutionPlan, ...]:
+    """One representative plan per registered backend (x placements).
+
+    The equivalence property tests iterate this, so any newly registered
+    backend is automatically held to bit-identity with the reference.
+    """
+    plans = []
+    for name in available_backends():
+        for k in (1, 4, DEFAULT_PIPELINES):
+            plans.append(ExecutionPlan(backend=name, pipelines=k))
+        if mesh is not None:
+            plans.append(
+                ExecutionPlan(backend=name, pipelines=2).with_mesh(mesh)
+            )
+    return tuple(plans)

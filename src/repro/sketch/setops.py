@@ -1,0 +1,63 @@
+"""Approximate set algebra over HLL sketches (beyond-paper extension).
+
+The paper stops at single-stream cardinality.  Production deployments
+(the BigQuery use-case it cites) routinely need set operations, and the
+max-lattice gives two of them almost for free:
+
+  union        exact at sketch level: |A ∪ B| = estimate(merge(A, B))
+  intersection inclusion-exclusion: |A ∩ B| = |A| + |B| - |A ∪ B|
+               (error grows with the Jaccard disparity — reported alongside)
+  difference   |A \\ B| = |A ∪ B| - |B|
+
+Each operation consumes only the 48 KiB register arrays — no re-streaming.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.sketch import hll
+from repro.sketch.hll import HLLConfig
+
+
+def _registers(x) -> jnp.ndarray:
+    """Accept either a raw (m,) register array or a HyperLogLog carrier."""
+    return getattr(x, "registers", x)
+
+
+def union_estimate(a, b, cfg: HLLConfig) -> float:
+    return hll.estimate(hll.merge(_registers(a), _registers(b)), cfg)
+
+
+def intersection_estimate(a, b, cfg: HLLConfig) -> Tuple[float, float]:
+    """Returns (|A ∩ B| estimate, standard-error bound of the estimate).
+
+    Inclusion-exclusion over three HLL estimates; the absolute error is
+    bounded by the sum of the three absolute errors, so the *relative*
+    error blows up for small intersections — the returned bound makes that
+    explicit so callers can reject unreliable readings.
+    """
+    a, b = _registers(a), _registers(b)
+    ea = hll.estimate(a, cfg)
+    eb = hll.estimate(b, cfg)
+    eu = union_estimate(a, b, cfg)
+    inter = max(0.0, ea + eb - eu)
+    sigma = hll.standard_error(cfg)
+    err_abs = sigma * (ea + eb + eu)
+    return inter, err_abs
+
+
+def difference_estimate(a, b, cfg: HLLConfig) -> float:
+    """|A \\ B| >= 0 via union."""
+    return max(0.0, union_estimate(a, b, cfg) - hll.estimate(_registers(b), cfg))
+
+
+def jaccard_estimate(a, b, cfg: HLLConfig) -> float:
+    eu = union_estimate(a, b, cfg)
+    if eu <= 0:
+        return float("nan")
+    inter, _ = intersection_estimate(a, b, cfg)
+    return inter / eu

@@ -1,11 +1,15 @@
 """StreamSketch: the paper's sketch as a first-class telemetry feature.
 
-Wraps HLL registers with named streams so a training/serving job can track
+Wraps named ``HyperLogLog`` carriers so a training/serving job can track
 several cardinalities at once (distinct tokens, distinct users/request ids,
-distinct (token, expert) routing pairs for MoE collapse detection) — each
-one is 48 KiB of state and one all-reduce-max per merge, regardless of
-stream size.  The exact host-side estimate (core.hll.estimate) finalizes a
-report, mirroring the paper's constant-time computation phase.
+distinct (token, expert) routing pairs for MoE collapse detection — DESIGN.md
+§4) — each one is 48 KiB of state and one all-reduce-max per merge,
+regardless of stream size.  The exact host-side estimate finalizes a report,
+mirroring the paper's constant-time computation phase.
+
+Every stream's updates run under one ``ExecutionPlan``, so a board can be
+switched from the local jnp path to Pallas pipelines or a device mesh
+without touching call sites.
 """
 
 from __future__ import annotations
@@ -15,45 +19,61 @@ from typing import Dict, Optional
 
 import jax.numpy as jnp
 
-from repro.core import hll
-from repro.core.hll import HLLConfig
+from repro.sketch import ExecutionPlan, HyperLogLog
+from repro.sketch.hll import HLLConfig
 
 
 @dataclasses.dataclass
 class StreamSketch:
     cfg: HLLConfig
-    registers: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
-    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    plan: Optional[ExecutionPlan] = None  # None = default jnp plan
+    sketches: Dict[str, HyperLogLog] = dataclasses.field(default_factory=dict)
 
-    def stream(self, name: str) -> jnp.ndarray:
-        if name not in self.registers:
-            self.registers[name] = hll.init_registers(self.cfg)
-            self.counts[name] = 0
-        return self.registers[name]
+    def stream(self, name: str) -> HyperLogLog:
+        if name not in self.sketches:
+            self.sketches[name] = HyperLogLog.empty(self.cfg)
+        return self.sketches[name]
 
     def observe(self, name: str, items: jnp.ndarray) -> None:
-        regs = self.stream(name)
-        self.registers[name] = hll.update(regs, items, self.cfg)
-        self.counts[name] += int(items.size)
+        self.sketches[name] = self.stream(name).update(items, self.plan)
 
     def merge_from(self, other: "StreamSketch") -> None:
-        for name, regs in other.registers.items():
-            mine = self.stream(name)
-            self.registers[name] = jnp.maximum(mine, regs)
-            self.counts[name] += other.counts.get(name, 0)
+        for name, sk in other.sketches.items():
+            self.sketches[name] = self.stream(name).merge(sk)
 
     def estimate(self, name: str) -> float:
-        return hll.estimate(self.stream(name), self.cfg)
+        return self.stream(name).estimate()
+
+    def serialize(self) -> Dict[str, bytes]:
+        """Dense per-stream blobs (HyperLogLog.to_bytes) for shipping."""
+        return {name: sk.to_bytes() for name, sk in self.sketches.items()}
+
+    @classmethod
+    def deserialize(
+        cls,
+        blobs: Dict[str, bytes],
+        cfg: Optional[HLLConfig] = None,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> "StreamSketch":
+        """Rebuild a board from serialize() output.
+
+        ``cfg`` is only required for a board serialized before its first
+        observe() (no streams to recover the config from).
+        """
+        sketches = {n: HyperLogLog.from_bytes(b) for n, b in blobs.items()}
+        if sketches:
+            cfg = next(iter(sketches.values())).cfg
+        elif cfg is None:
+            raise ValueError("empty board: pass cfg= to deserialize it")
+        return cls(cfg=cfg, plan=plan, sketches=sketches)
 
     def report(self) -> Dict[str, dict]:
-        out = {}
-        for name in self.registers:
-            est = self.estimate(name)
-            seen = self.counts[name]
-            out[name] = {
-                "estimate": est,
-                "items_seen": seen,
-                "duplication": (seen / est) if est > 0 else float("nan"),
-                "stderr_expected": hll.standard_error(self.cfg),
+        return {
+            name: {
+                "estimate": sk.estimate(),
+                "items_seen": sk.count,
+                "duplication": sk.duplication(),
+                "stderr_expected": sk.standard_error,
             }
-        return out
+            for name, sk in self.sketches.items()
+        }

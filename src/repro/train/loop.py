@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs.base import ArchConfig
-from repro.core import hll
+from repro.sketch import hll
 from repro.data.pipeline import DataConfig, batch_at_step
 from repro.train.step import TrainConfig, init_train_state, make_jitted_step
 from repro.train.watchdog import StepWatchdog, Verdict

@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import hll, sketch as sketchlib
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig, hll
+from repro.sketch.dispatch import datapath_tap
 from repro.models import transformer
 from repro.optim import adamw
 from repro.optim.adamw import OptimizerConfig
@@ -90,7 +90,7 @@ def train_step(
 
     regs = state["sketch"]
     if cfg.sketch_enabled:
-        regs = sketchlib.datapath_tap(regs, batch["tokens"], cfg.sketch)
+        regs = datapath_tap(regs, batch["tokens"], cfg.sketch)
     distinct = hll.estimate_device(regs, cfg.sketch)
 
     new_state = {

@@ -10,7 +10,7 @@ from repro.configs import ARCH_IDS, get_arch
 from repro.models import transformer
 from repro.optim.adamw import OptimizerConfig
 from repro.train.step import TrainConfig, init_train_state, train_step
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig
 
 B, S = 2, 64
 

@@ -9,8 +9,8 @@ import pytest
 
 from repro.checkpoint import ckpt
 from repro.configs import get_arch
-from repro.core import hll
-from repro.core.hll import HLLConfig
+from repro.sketch import hll
+from repro.sketch import HLLConfig
 from repro.data.pipeline import DataConfig, batch_at_step
 from repro.optim.adamw import OptimizerConfig
 from repro.train.step import TrainConfig, init_train_state, make_jitted_step
@@ -92,10 +92,8 @@ def test_elastic_resume_resharding(tmp_path):
     arch, cfg, _ = _tiny()
     state = init_train_state(jax.random.PRNGKey(0), arch, cfg)
     ckpt.save(state, str(tmp_path), 2)
-    mesh = jax.make_mesh(
-        (jax.device_count(),), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((jax.device_count(),), ("data",))
     shardings = jax.tree.map(
         lambda _: jax.NamedSharding(mesh, jax.sharding.PartitionSpec()), state
     )

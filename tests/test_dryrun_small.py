@@ -38,13 +38,13 @@ def test_reduced_cell_lowers_on_faked_mesh():
         from repro.configs import get_arch
         from repro.sharding import specs as shardspecs, ctx as shardctx
         from repro.train.step import TrainConfig, init_train_state, train_step
-        from repro.core.hll import HLLConfig
+        from repro.sketch import HLLConfig
         from repro.launch import hlo_analysis
 
         arch = get_arch("tinyllama-1.1b").reduced()
         cfg = TrainConfig(sketch=HLLConfig(p=8, hash_bits=32))
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_auto_mesh
+        mesh = make_auto_mesh((4, 2), ("data", "model"))
         state_avals = jax.eval_shape(
             lambda k: init_train_state(k, arch, cfg),
             jax.ShapeDtypeStruct((2,), jnp.uint32),

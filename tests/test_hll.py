@@ -6,11 +6,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
-from repro.core import exact as exactlib
-from repro.core import hll, sketch as sketchlib
-from repro.core.hll import HLLConfig
+from repro.sketch import ExecutionPlan, HyperLogLog, hll, update_registers
+from repro.sketch import exact as exactlib
+from repro.sketch.hll import HLLConfig
 
 CFG64 = HLLConfig(p=14, hash_bits=64)
 CFG32 = HLLConfig(p=14, hash_bits=32)
@@ -140,20 +140,19 @@ def test_pipelined_equals_single(pipelines):
     cfg = HLLConfig(p=12, hash_bits=64)
     items = jnp.asarray(_rand_items(1 << 14, seed=9))
     single = hll.update(hll.init_registers(cfg), items, cfg)
-    multi = sketchlib.update_pipelined(
-        hll.init_registers(cfg), items, cfg, pipelines=pipelines
+    multi = update_registers(
+        hll.init_registers(cfg), items, cfg,
+        ExecutionPlan(backend="jnp", pipelines=pipelines),
     )
     np.testing.assert_array_equal(np.asarray(single), np.asarray(multi))
 
 
 def test_sketch_carrier_merge():
     cfg = HLLConfig(p=10, hash_bits=64)
-    a = sketchlib.Sketch.init(cfg)
-    b = sketchlib.Sketch.init(cfg)
-    a = sketchlib.update(a, jnp.asarray(_rand_items(1000, 1)), cfg)
-    b = sketchlib.update(b, jnp.asarray(_rand_items(1000, 2)), cfg)
-    ab = sketchlib.merge(a, b)
-    assert int(ab.n_items) == 2000
+    a = HyperLogLog.empty(cfg).update(jnp.asarray(_rand_items(1000, 1)))
+    b = HyperLogLog.empty(cfg).update(jnp.asarray(_rand_items(1000, 2)))
+    ab = a | b
+    assert ab.count == 2000
     assert (np.asarray(ab.registers) >= np.asarray(a.registers)).all()
 
 
@@ -163,7 +162,8 @@ def test_update_sharded_matches_local():
     items = jnp.asarray(_rand_items(1 << 12, seed=11))
     devs = jax.devices()
     mesh = jax.make_mesh((len(devs),), ("data",))
-    out = sketchlib.update_sharded(hll.init_registers(cfg), items, cfg, mesh)
+    plan = ExecutionPlan(backend="jnp", placement="mesh", mesh=mesh, pipelines=1)
+    out = update_registers(hll.init_registers(cfg), items, cfg, plan)
     ref = hll.update(hll.init_registers(cfg), items, cfg)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 

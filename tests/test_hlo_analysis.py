@@ -39,7 +39,10 @@ def test_scan_trip_count_correction():
     assert an.n_while_loops == 1
     assert list(an.trip_counts.values()) == [8]
     # and confirm the raw counter is indeed wrong (the reason this exists)
-    raw = c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [per-device dict]
+        ca = ca[0]
+    raw = ca["flops"]
     assert raw == pytest.approx(expected / 8, rel=0.01)
 
 
@@ -90,16 +93,15 @@ def test_collective_detection_and_bytes():
     devs = jax.devices()
     if len(devs) < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh(
-        (len(devs),), ("d",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((len(devs),), ("d",))
     from jax.sharding import PartitionSpec as P
 
     def f(x):
         return jax.lax.psum(x, "d")
 
-    sharded = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
-                            check_vma=False)
+    from repro.compat import shard_map
+    sharded = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
     x = jax.ShapeDtypeStruct((len(devs) * 8, 128), jnp.float32)
     c = jax.jit(sharded).lower(x).compile()
     an = H.analyze(c.as_text())

@@ -3,11 +3,12 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
-from repro.core import hll
-from repro.core.hll import HLLConfig
-from repro.kernels import ops, ref
+from repro.kernels import ref
+from repro.sketch import backends as ops
+from repro.sketch import hll
+from repro.sketch.hll import HLLConfig
 
 RNG = np.random.default_rng(42)
 

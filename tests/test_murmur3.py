@@ -2,9 +2,9 @@
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
-from repro.core import murmur3
+from repro.sketch import murmur3
 
 KEYS = st.integers(min_value=0, max_value=2**32 - 1)
 SEEDS = st.integers(min_value=0, max_value=2**32 - 1)

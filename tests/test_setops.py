@@ -3,16 +3,15 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
-from repro.core import hll, setops
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig, HyperLogLog, setops
 
 CFG = HLLConfig(p=14, hash_bits=64)
 
 
 def _sketch(items):
-    return hll.update(hll.init_registers(CFG), jnp.asarray(items, jnp.int32), CFG)
+    return HyperLogLog.of(jnp.asarray(items, jnp.int32), CFG)
 
 
 def test_union_intersection_difference():
@@ -21,23 +20,23 @@ def test_union_intersection_difference():
     b_items = np.concatenate([a_items[:100_000], 600_000 + np.arange(200_000)])
     a, b = _sketch(a_items), _sketch(b_items)
 
-    eu = setops.union_estimate(a, b, CFG)
+    eu = a.union_estimate(b)
     assert abs(eu - 500_000) / 500_000 < 0.03
 
-    inter, err = setops.intersection_estimate(a, b, CFG)
+    inter, err = a.intersection_estimate(b)
     assert abs(inter - 100_000) <= max(3 * err, 20_000)
 
-    diff = setops.difference_estimate(a, b, CFG)
+    diff = a.difference_estimate(b)
     assert abs(diff - 200_000) / 200_000 < 0.15
 
-    jac = setops.jaccard_estimate(a, b, CFG)
+    jac = a.jaccard(b)
     assert abs(jac - 0.2) < 0.05
 
 
 def test_disjoint_intersection_near_zero():
     a = _sketch(np.arange(0, 50_000))
     b = _sketch(np.arange(50_000, 100_000))
-    inter, err = setops.intersection_estimate(a, b, CFG)
+    inter, err = a.intersection_estimate(b)
     assert inter <= 3 * err + 1500
 
 

@@ -57,7 +57,7 @@ def test_fsdp_actually_shards_big_params(arch_id):
 
 def test_sharded_train_matches_single_device():
     """Same step on a 1x1-device mesh with full spec machinery == unsharded."""
-    from repro.core.hll import HLLConfig
+    from repro.sketch import HLLConfig
     from repro.optim.adamw import OptimizerConfig
     from repro.train.step import TrainConfig, init_train_state, train_step
 
@@ -74,10 +74,8 @@ def test_sharded_train_matches_single_device():
         lambda s, b: train_step(s, b, arch, cfg)
     )(state, batch)
 
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     hints = shardctx.ActivationHints(batch_axes=("data",), model_axis="model")
     with mesh, shardctx.use_hints(hints):
         s_shard, m_shard = jax.jit(
@@ -90,18 +88,17 @@ def test_sharded_train_matches_single_device():
 
 def test_compressed_psum_matches_f32():
     devs = jax.devices()
-    mesh = jax.make_mesh(
-        (len(devs),), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((len(devs),), ("data",))
     x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (len(devs), 64)),
                     jnp.float32)
 
     def local(xs):
         return compressed_psum(xs, "data")
 
+    from repro.compat import shard_map
     out = jax.jit(
-        jax.shard_map(local, mesh=mesh, in_specs=P("data"), out_specs=P(),
-                      check_vma=False)
+        shard_map(local, mesh=mesh, in_specs=P("data"), out_specs=P())
     )(x)
     want = np.sum(np.asarray(x), axis=0)
     got = np.asarray(out)[0] if out.ndim == 2 else np.asarray(out)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig
 from repro.models import moe as moe_lib
 from repro.telemetry.sketchboard import StreamSketch
 
@@ -30,6 +30,17 @@ def test_merge_from_other_board():
     a.merge_from(b)
     est = a.estimate("s")
     assert abs(est - 1500) / 1500 < 0.15
+
+
+def test_board_serialize_roundtrip_including_empty():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    board = StreamSketch(cfg)
+    restored = StreamSketch.deserialize(board.serialize(), cfg=cfg)
+    assert restored.cfg == cfg and not restored.sketches
+    board.observe("s", jnp.arange(1000, dtype=jnp.int32))
+    back = StreamSketch.deserialize(board.serialize())
+    assert back.estimate("s") == board.estimate("s")
+    assert back.report()["s"]["items_seen"] == 1000
 
 
 def test_moe_assignment_stream_detects_collapse():

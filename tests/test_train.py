@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_arch
-from repro.core.hll import HLLConfig
+from repro.sketch import HLLConfig
 from repro.data.pipeline import DataConfig, batch_at_step, host_shard
 from repro.optim import adamw
 from repro.optim.adamw import OptimizerConfig

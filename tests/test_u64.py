@@ -3,9 +3,9 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
-from repro.core import u64 as u64lib
+from repro.sketch import u64 as u64lib
 
 U64S = st.integers(min_value=0, max_value=2**64 - 1)
 

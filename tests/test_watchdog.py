@@ -66,7 +66,7 @@ def test_loop_integration_snapshot_on_straggle(tmp_path):
     import jax
     from repro.checkpoint import ckpt
     from repro.configs import get_arch
-    from repro.core.hll import HLLConfig
+    from repro.sketch import HLLConfig
     from repro.data.pipeline import DataConfig
     from repro.optim.adamw import OptimizerConfig
     from repro.train.loop import LoopConfig, train
