@@ -1,0 +1,95 @@
+"""Estimator comparison: accuracy + finalization latency, single vs batched.
+
+The paper reports the computation phase as a constant 203 us (§V).  This
+bench sweeps every registered estimator over the same register banks and
+records, per estimator:
+
+  * relative error vs exact cardinality at small/mid/large ranges,
+  * exact host finalization latency (histogram + O(H-p) finalizer),
+  * float32 device finalization latency for one sketch,
+  * batched ``estimate_many`` latency over a 64-sketch bank, amortized
+    per sketch — the StreamSketch-board / serving-fleet path.
+
+Besides the usual CSV rows it writes ``BENCH_estimators.json`` so the
+perf trajectory of the fourth algorithm phase populates across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.sketch import HLLConfig, estimate_many, hll
+from repro.sketch import estimators as estlib
+
+JSON_PATH = "BENCH_estimators.json"
+BANK_SIZE = 64
+
+
+def _sketch(cfg, n, seed):
+    items = np.random.default_rng(seed).integers(0, 2**31, n, dtype=np.int32)
+    regs = hll.update(hll.init_registers(cfg), jnp.asarray(items), cfg)
+    return regs, len(np.unique(items))
+
+
+def run(full: bool = False, json_path: str = JSON_PATH):
+    cfg = HLLConfig(p=14, hash_bits=64)
+    cardinalities = [1_000, 50_000, 1_000_000] if full else [1_000, 50_000]
+
+    # accuracy sweeps reuse one register bank per cardinality
+    banks = {n: _sketch(cfg, n, seed=n) for n in cardinalities}
+    # latency bank: BANK_SIZE mid-range sketches stacked (B, m)
+    lat_regs, _ = banks[50_000]
+    stacked = jnp.stack([lat_regs] * BANK_SIZE)
+
+    out = {
+        "config": {"p": cfg.p, "hash_bits": cfg.hash_bits, "m": cfg.m},
+        "bank_size": BANK_SIZE,
+        "estimators": {},
+    }
+    for name in estlib.available_estimators():
+        acc = []
+        for n, (regs, exact) in banks.items():
+            est = estlib.estimate(regs, cfg, name)
+            acc.append(
+                {"n": n, "exact": exact, "estimate": est,
+                 "rel_err": abs(est - exact) / exact}
+            )
+
+        # time_fn works for the host path too (block_until_ready is a no-op
+        # on a python float), keeping all three latencies the same statistic
+        host_s = time_fn(lambda r: estlib.estimate(r, cfg, name), lat_regs)
+        dev_s = time_fn(
+            lambda r: estlib.estimate_device(r, cfg, name), lat_regs
+        )
+        many_s = time_fn(lambda b: estimate_many(b, cfg, name), stacked)
+
+        row = {
+            "accuracy": acc,
+            "host_us": host_s * 1e6,
+            "device_us": dev_s * 1e6,
+            "batched_us_total": many_s * 1e6,
+            "batched_us_per_sketch": many_s * 1e6 / BANK_SIZE,
+            "batch_speedup_vs_device": dev_s / (many_s / BANK_SIZE),
+        }
+        out["estimators"][name] = row
+        worst = max(a["rel_err"] for a in acc)
+        emit(
+            "estimators",
+            row["host_us"],
+            f"est={name} host_us={row['host_us']:.0f} "
+            f"device_us={row['device_us']:.0f} "
+            f"batched_us/sketch={row['batched_us_per_sketch']:.1f} "
+            f"errmax={worst:.4f}",
+        )
+
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,10 +1,13 @@
-"""Paper Fig. 1: HLL standard error vs cardinality for (p,H) grid.
+"""Paper Fig. 1, widened into an estimator-comparison sweep.
 
-Reproduces the profiling of §IV: synthetic data sampled from [0, 2^32),
-Murmur3 of the configured width, max/median/min relative error over trials.
-Checks the paper's claims: 32-bit hash degrades beyond ~1e8 (approximated
-here at smaller scale by saturation behaviour), 64-bit stays ~1% across the
-range, and the LC->HLL transition bump sits near 5/2 * m.
+Reproduces the profiling of §IV — synthetic data sampled from [0, 2^32),
+Murmur3 of the configured width, max/median/min relative error over trials —
+but finalizes every trial's registers through each registered estimator
+(original / ertl_improved / ertl_mle), so one sweep shows both the paper's
+claims (32-bit hash degrades with scale, 64-bit stays ~1% across the range,
+the LC->HLL transition bump sits near 5/2 * m for the original estimator)
+and what the Ertl finalizers buy (no transition bump, no empirical
+thresholds) on identical register state.
 """
 
 from __future__ import annotations
@@ -13,8 +16,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.sketch import hll
-from repro.sketch import HLLConfig
+from repro.sketch import HLLConfig, available_estimators, hll
 
 
 CARDINALITIES = [1_000, 10_000, 40_000, 160_000, 640_000, 2_560_000]
@@ -24,21 +26,29 @@ TRIALS = 3
 def run(full: bool = False):
     rows = []
     grid = [(14, 32), (14, 64), (16, 32), (16, 64)]
+    estimators = available_estimators()
     for p, h in grid:
         cfg = HLLConfig(p=p, hash_bits=h)
         for n in CARDINALITIES if full else CARDINALITIES[:5]:
-            errs = []
+            errs = {name: [] for name in estimators}
             for t in range(TRIALS):
                 rng = np.random.default_rng(1000 * t + n % 997)
                 items = rng.integers(0, 2**32, n, dtype=np.uint32)
                 exact = len(np.unique(items))
-                est = hll.cardinality(jnp.asarray(items), cfg)
-                errs.append(abs(est - exact) / exact)
-            errs.sort()
-            rows.append(
-                dict(p=p, H=h, n=n, err_min=errs[0], err_med=errs[len(errs)//2],
-                     err_max=errs[-1], expected=hll.standard_error(cfg))
-            )
+                # one aggregation, every finalizer: the registers are shared
+                regs = hll.update(
+                    hll.init_registers(cfg), jnp.asarray(items), cfg
+                )
+                for name in estimators:
+                    est = hll.estimate(regs, cfg, estimator=name)
+                    errs[name].append(abs(est - exact) / exact)
+            for name in estimators:
+                e = sorted(errs[name])
+                rows.append(
+                    dict(p=p, H=h, n=n, estimator=name, err_min=e[0],
+                         err_med=e[len(e) // 2], err_max=e[-1],
+                         expected=hll.standard_error(cfg))
+                )
     # timing of the full sketch path at the largest n
     cfg = HLLConfig(p=16, hash_bits=64)
     items = jnp.asarray(
@@ -48,8 +58,9 @@ def run(full: bool = False):
     sec = time_fn(lambda r, x: hll.update(r, x, cfg), regs, items)
     for r in rows:
         tag = (
-            f"p={r['p']} H={r['H']} n={r['n']} errmax={r['err_max']:.4f} "
-            f"errmed={r['err_med']:.4f} sigma={r['expected']:.4f}"
+            f"p={r['p']} H={r['H']} n={r['n']} est={r['estimator']} "
+            f"errmax={r['err_max']:.4f} errmed={r['err_med']:.4f} "
+            f"sigma={r['expected']:.4f}"
         )
         emit("fig1_error", sec * 1e6, tag)
     return rows

@@ -8,10 +8,8 @@ for lane-addressable bytes; the table reports both).
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit
-from repro.sketch import hll
 from repro.sketch.exact import naive_distinct_mem_bytes
 from repro.sketch import HLLConfig
 

@@ -14,12 +14,11 @@ the scaling buys bandwidth, not efficiency.
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.sketch import ExecutionPlan, hll, update_registers
+from repro.sketch import ExecutionPlan, update_registers
 from repro.sketch import HLLConfig
 from repro.launch import hlo_analysis
 

@@ -2,28 +2,31 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` widens sweeps.
 
-  fig1  standard error vs cardinality, (p,H) grid        (paper Fig. 1)
+  fig1  error vs cardinality, (p,H) x estimator sweep    (paper Fig. 1)
   fig4a throughput scaling vs #pipelines                 (paper Fig. 4a)
   fig4b hash-width cost, CPU-analogue baseline           (paper Fig. 4b)
   tab2  memory footprint grid                            (paper Tab. II)
   tab3  per-pipeline resource analogue (HLO + VMEM)      (paper Tab. III)
   tab4  sustained streaming throughput + finalization    (paper Tab. IV)
+  estimators  accuracy + finalization latency per estimator, single vs
+              batched; also writes BENCH_estimators.json
 """
 
 from __future__ import annotations
 
 import argparse
-import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="widen sweeps")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig4a,fig4b,tab2,tab3,tab4")
+                    help="comma list: fig1,fig4a,fig4b,tab2,tab3,tab4,"
+                         "estimators")
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_estimators,
         bench_fig1_error,
         bench_fig4a_scaling,
         bench_fig4b_hash_width,
@@ -39,6 +42,7 @@ def main() -> None:
         "tab2": bench_tab2_memory.run,
         "tab3": bench_tab3_resources.run,
         "tab4": bench_tab4_streaming.run,
+        "estimators": bench_estimators.run,
     }
     selected = args.only.split(",") if args.only else list(suite)
     print("name,us_per_call,derived")

@@ -10,7 +10,6 @@ where it left off, and the HLL sketch registers survive verbatim (a
 max-lattice cannot be corrupted by topology changes or replayed batches).
 """
 
-import os
 import shutil
 import tempfile
 
@@ -20,7 +19,7 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.launch.mesh import make_auto_mesh
 from repro.configs import get_arch
-from repro.sketch import HLLConfig, hll
+from repro.sketch import HLLConfig, estimate
 from repro.data.pipeline import DataConfig
 from repro.optim.adamw import OptimizerConfig
 from repro.train.loop import LoopConfig, train
@@ -60,7 +59,8 @@ def main():
         loop2 = LoopConfig(total_steps=40, ckpt_every=40, ckpt_dir=d,
                            async_ckpt=False, log_every=10)
         state2, _ = train(arch, cfg, data, loop2)
-        est = hll.estimate(state2["sketch"], cfg.sketch)
+        est = estimate(state2["sketch"], cfg.sketch,
+                       estimator=cfg.sketch_estimator)
         print(f"\nresumed to step {int(state2['step'])}; distinct tokens "
               f"seen across BOTH topologies: {est:,.0f}")
     finally:

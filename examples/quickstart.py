@@ -10,7 +10,13 @@ Everything goes through ``repro.sketch``: one ``HyperLogLog`` carrier, one
 import numpy as np
 import jax.numpy as jnp
 
-from repro.sketch import ExecutionPlan, HLLConfig, HyperLogLog, standard_error
+from repro.sketch import (
+    ExecutionPlan,
+    HLLConfig,
+    HyperLogLog,
+    available_estimators,
+    standard_error,
+)
 from repro.sketch.exact import exact_distinct
 
 
@@ -52,6 +58,14 @@ def main():
     back = HyperLogLog.from_bytes(blob)
     assert back.estimate() == merged.estimate()
     print(f"serialized sketch: {len(blob):,} bytes, survives round-trip")
+
+    # 5) finalization is pluggable: every estimator reads the same register
+    #    histogram (one device bincount), so switching costs nothing
+    print("\nestimators on the same sketch "
+          f"(exact distinct = {exact:,}):")
+    for name in available_estimators():
+        e = sk.estimate(estimator=name)
+        print(f"  {name:14s} {e:12,.0f}  ({(e - exact) / exact:+.3%})")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.sketch import ExecutionPlan, HLLConfig, hll, update_registers
+from repro.sketch import (
+    ExecutionPlan, HLLConfig, available_estimators, hll, update_registers,
+)
 from repro.data.pipeline import DataConfig, batch_at_step
 from repro.launch.mesh import make_auto_mesh
 
@@ -29,6 +31,9 @@ def main():
     ap.add_argument("--p", type=int, default=16)
     ap.add_argument("--distribution", default="zipf",
                     choices=["zipf", "uniform", "unique"])
+    ap.add_argument("--estimator", default="original",
+                    choices=available_estimators(),
+                    help="phase-4 finalizer (see repro/sketch/estimators.py)")
     args = ap.parse_args()
 
     cfg = HLLConfig(p=args.p, hash_bits=64)
@@ -66,7 +71,8 @@ def main():
     dt = time.perf_counter() - t0
 
     t1 = time.perf_counter()
-    est = hll.estimate(regs, cfg)  # constant-time finalization (paper: 203us)
+    # volume-independent finalization (paper: 203us): histogram + O(H-p) sum
+    est = hll.estimate(regs, cfg, estimator=args.estimator)
     fin = time.perf_counter() - t1
 
     print(f"\nsustained: {n * 4 / dt / 1e9:.3f} GB/s  ({n / dt:,.0f} items/s)")

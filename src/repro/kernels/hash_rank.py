@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.sketch import hll, u64 as u64lib
+from repro.sketch import hll
 from repro.sketch.hll import HLLConfig
 
 LANES = 128

@@ -6,7 +6,6 @@ no Pallas, no tiling, no padding — used by tests/test_kernels.py sweeps.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.sketch import hll

@@ -27,7 +27,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _intra_kernel(r_ref, k_ref, v_ref, lex_ref, l_ref, u_ref, y_ref):

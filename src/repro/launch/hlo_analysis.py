@@ -23,7 +23,6 @@ analytic 6ND in tests/test_hlo_analysis.py.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

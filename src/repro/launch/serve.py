@@ -14,10 +14,14 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.sketch import HLLConfig
+from repro.sketch import (
+    DEFAULT_ESTIMATOR,
+    ExecutionPlan,
+    HLLConfig,
+    available_estimators,
+)
 from repro.models import transformer
 from repro.serve import engine
 from repro.telemetry.sketchboard import StreamSketch
@@ -30,6 +34,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--estimator", default=DEFAULT_ESTIMATOR,
+                    choices=available_estimators(),
+                    help="phase-4 finalizer for the telemetry board")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
@@ -38,7 +45,12 @@ def main():
     if args.reduced:
         arch = arch.reduced()
     params = transformer.init_params(jax.random.PRNGKey(args.seed), arch)
-    board = StreamSketch(HLLConfig(p=12, hash_bits=64))
+    # the plan's estimator rides to board.report(), which finalizes all
+    # streams with one batched estimate_many dispatch
+    board = StreamSketch(
+        HLLConfig(p=12, hash_bits=64),
+        plan=ExecutionPlan(estimator=args.estimator),
+    )
 
     B, S, T = args.requests, args.prompt_len, args.gen_len
     prompts = jax.random.randint(

@@ -13,13 +13,16 @@ JAX_COORDINATOR is set, one process per host).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 
 import jax
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.sketch import HLLConfig
+from repro.sketch import (
+    DEFAULT_ESTIMATOR,
+    HLLConfig,
+    available_estimators,
+)
 from repro.data.pipeline import DataConfig
 from repro.optim.adamw import OptimizerConfig
 from repro.train.loop import LoopConfig, train
@@ -38,6 +41,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--sketch-p", type=int, default=14)
+    ap.add_argument("--estimator", default=DEFAULT_ESTIMATOR,
+                    choices=available_estimators(),
+                    help="phase-4 finalizer for the sketch telemetry")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
@@ -57,6 +63,7 @@ def main():
             compress_grads=args.compress_grads,
         ),
         sketch=HLLConfig(p=args.sketch_p, hash_bits=64),
+        sketch_estimator=args.estimator,
         grad_accum=args.grad_accum,
     )
     data = DataConfig(

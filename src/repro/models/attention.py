@@ -16,7 +16,6 @@ keys/values — any H/Hkv ratio, including MQA (Hkv=1).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

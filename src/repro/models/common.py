@@ -7,7 +7,7 @@ layers stacking (see models/transformer.py).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

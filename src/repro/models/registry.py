@@ -7,7 +7,6 @@ exact by construction, no hand-maintained formulas to drift.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ overwrite the leading token embeddings.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

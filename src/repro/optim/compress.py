@@ -14,14 +14,14 @@ unlike a naive int8 psum.
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.optim.adamw import dequantize_int8, quantize_int8
+from repro.optim.adamw import quantize_int8
 
 
 def compressed_psum(x: jnp.ndarray, axis_name) -> jnp.ndarray:

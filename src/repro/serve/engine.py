@@ -20,7 +20,7 @@ inserted by SPMD partitioning — see sharding/specs.py).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

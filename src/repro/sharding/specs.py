@@ -23,7 +23,7 @@ segment_max's output is requested replicated — the paper's Fig. 3 fold.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -13,7 +13,13 @@ Object API (preferred):
 
 Functional register-level API (for jitted datapaths that carry raw (m,)
 arrays in their state pytrees): init_registers / update_registers /
-datapath_tap / merge / estimate / estimate_device.
+datapath_tap / merge / estimate / estimate_device / estimate_many.
+
+Estimation (paper phase 4) dispatches through a pluggable registry over the
+register-value histogram (repro/sketch/estimators.py, DESIGN.md §8):
+``estimator="original" | "ertl_improved" | "ertl_mle"`` on every estimate
+entry point, plus ``estimate_many`` to finalize a stacked (B, m) register
+bank in one jitted device call.
 
 Every (backend, placement, pipelines) ExecutionPlan produces bit-identical
 registers on the same stream — property-tested in tests/test_sketch_api.py.
@@ -44,6 +50,19 @@ from repro.sketch.plan import (  # noqa: F401
     get_backend,
     reference_plan,
     register_backend,
+)
+
+from repro.sketch.estimators import (  # noqa: F401
+    DEFAULT_ESTIMATOR,
+    Estimator,
+    available_estimators,
+    estimate_from_histogram,
+    estimate_many,
+    get_estimator,
+    histogram_size,
+    register_estimator,
+    register_histogram,
+    validate_registers,
 )
 
 # importing backends registers the built-in "jnp"/"pallas"/"pallas_pipelined"

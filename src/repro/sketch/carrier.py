@@ -109,36 +109,54 @@ class HyperLogLog:
     # estimation (paper phase 4) + set algebra
     # ------------------------------------------------------------------
 
-    def estimate(self) -> float:
-        """Exact host-side cardinality estimate with range corrections."""
-        return hll.estimate(self.registers, self.cfg)
+    def estimate(self, estimator: Optional[str] = None) -> float:
+        """Exact host-side cardinality estimate (registry-dispatched)."""
+        return hll.estimate(self.registers, self.cfg, estimator=estimator)
 
-    def estimate_device(self) -> jnp.ndarray:
+    def estimate_device(self, estimator: Optional[str] = None) -> jnp.ndarray:
         """Float32 on-device estimator for in-step telemetry."""
-        return hll.estimate_device(self.registers, self.cfg)
+        return hll.estimate_device(
+            self.registers, self.cfg, estimator=estimator
+        )
 
-    def union_estimate(self, other: "HyperLogLog") -> float:
+    def histogram(self) -> jnp.ndarray:
+        """Register-value histogram C[k] — the phase-4 intermediate."""
+        from repro.sketch.estimators import register_histogram
+
+        return register_histogram(self.registers, self.cfg)
+
+    def union_estimate(
+        self, other: "HyperLogLog", estimator: Optional[str] = None
+    ) -> float:
         self._check_peer(other)
-        return setops.union_estimate(self.registers, other.registers, self.cfg)
+        return setops.union_estimate(
+            self.registers, other.registers, self.cfg, estimator=estimator
+        )
 
     def intersection_estimate(
-        self, other: "HyperLogLog"
+        self, other: "HyperLogLog", estimator: Optional[str] = None
     ) -> Tuple[float, float]:
         """(|A ∩ B| estimate, absolute-error bound) via inclusion-exclusion."""
         self._check_peer(other)
         return setops.intersection_estimate(
-            self.registers, other.registers, self.cfg
+            self.registers, other.registers, self.cfg, estimator=estimator
         )
 
-    def difference_estimate(self, other: "HyperLogLog") -> float:
+    def difference_estimate(
+        self, other: "HyperLogLog", estimator: Optional[str] = None
+    ) -> float:
         self._check_peer(other)
         return setops.difference_estimate(
-            self.registers, other.registers, self.cfg
+            self.registers, other.registers, self.cfg, estimator=estimator
         )
 
-    def jaccard(self, other: "HyperLogLog") -> float:
+    def jaccard(
+        self, other: "HyperLogLog", estimator: Optional[str] = None
+    ) -> float:
         self._check_peer(other)
-        return setops.jaccard_estimate(self.registers, other.registers, self.cfg)
+        return setops.jaccard_estimate(
+            self.registers, other.registers, self.cfg, estimator=estimator
+        )
 
     def _check_peer(self, other: "HyperLogLog") -> None:
         if self.cfg != other.cfg:

@@ -1,0 +1,497 @@
+"""Pluggable cardinality estimators over the register histogram (phase 4).
+
+The paper treats the computation phase as a fixed one-shot step (constant
+203 us, §V).  This module generalizes it: every estimator consumes the
+**register histogram** C[k] = |{j : M[j] = k}| (length max_rank + 1), an
+O(m) -> O(H - p) reduction computed with one device bincount, and the
+finalizers themselves are O(H - p).  Estimators register by name, mirroring
+``repro.sketch.plan.register_backend``:
+
+  original       Flajolet harmonic mean + the paper's empirical-threshold
+                 small/large-range corrections.  The host path is
+                 bit-compatible with the pre-registry ``hll.estimate``
+                 (exact python-int harmonic accumulator).
+  ertl_improved  Ertl's improved raw estimator (arXiv:1702.01284 Alg. 6):
+                 sigma/tau tail corrections replace the empirical
+                 thresholds, removing the LC->HLL transition bump.
+  ertl_mle       Ertl's Poisson maximum-likelihood estimator: solves
+                 dL/dlambda = 0 over the histogram by bisection (the
+                 log-likelihood is strictly concave in lambda).
+
+Each estimator ships two finalizers:
+
+  host    (np int histogram, cfg) -> python float; exact float64/bignum
+          arithmetic — the authoritative path.
+  device  ((..., K) float32 histogram batch, cfg) -> (...,) float32;
+          jit-safe, fixed-iteration, and batch-vectorized — the telemetry
+          path, and the engine behind :func:`estimate_many`, which
+          finalizes a stacked (B, m) register bank in ONE jitted dispatch
+          instead of B python loop iterations.
+
+See DESIGN.md §8 for the histogram contract and estimator selection guide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sketch.hll import HLLConfig, alpha
+
+# alpha_infinity = 1 / (2 ln 2): the bias constant of Ertl's raw estimator.
+ALPHA_INF = 1.0 / (2.0 * math.log(2.0))
+
+
+# ----------------------------------------------------------------------------
+# register validation + the histogram intermediate
+# ----------------------------------------------------------------------------
+
+
+def validate_registers(registers, cfg: HLLConfig, batched: bool = False):
+    """Raise ValueError unless ``registers`` is an integer (m,) array.
+
+    With ``batched=True`` any (..., m) stack is accepted.  Shared by the
+    host and device entry points so a wrong-shaped or float register array
+    fails loudly instead of finalizing to a bogus estimate.
+    """
+    shape = tuple(registers.shape)
+    if batched:
+        if len(shape) < 1 or shape[-1] != cfg.m:
+            raise ValueError(
+                f"expected a (..., {cfg.m}) register bank, got {shape}"
+            )
+    elif shape != (cfg.m,):
+        raise ValueError(f"expected {(cfg.m,)} registers, got {shape}")
+    dtype = registers.dtype
+    if not (
+        jnp.issubdtype(dtype, jnp.integer) or np.issubdtype(dtype, np.integer)
+    ):
+        raise ValueError(f"registers must be an integer array, got {dtype}")
+
+
+def histogram_size(cfg: HLLConfig) -> int:
+    """K = max_rank + 1 bins: register values live in [0, H - p + 1]."""
+    return cfg.max_rank + 1
+
+
+def register_histogram(registers: jnp.ndarray, cfg: HLLConfig) -> jnp.ndarray:
+    """Device histogram: (..., m) registers -> (..., K) int32 counts.
+
+    One bincount for the whole (possibly batched) bank: batch b's registers
+    are offset by b*K so a single O(B*m) scatter-add produces every
+    histogram at once — no python loop, no O(m*K) one-hot.  Jit-safe;
+    shape errors surface at trace time.  A register value beyond max_rank
+    (possible only via a corrupted blob — update() cannot produce one) is
+    routed to an out-of-range index that bincount drops, so it skews only
+    its own sketch's histogram and can never leak a count into a
+    neighboring batch; the host path raises on the same input.
+    """
+    validate_registers(registers, cfg, batched=True)
+    k = histogram_size(cfg)
+    batch_shape = registers.shape[:-1]
+    b = math.prod(batch_shape)
+    flat = registers.reshape(b, cfg.m).astype(jnp.int32)
+    idx = flat + k * jnp.arange(b, dtype=jnp.int32)[:, None]
+    # invalid (negative or > max_rank) -> dropped, never leaked to a neighbor
+    idx = jnp.where((flat >= 0) & (flat < k), idx, b * k)
+    counts = jnp.bincount(idx.reshape(-1), length=b * k)
+    return counts.reshape(batch_shape + (k,)).astype(jnp.int32)
+
+
+def register_histogram_host(registers, cfg: HLLConfig) -> np.ndarray:
+    """Host histogram (exact int64 counts) with full validation."""
+    regs = np.asarray(registers)
+    validate_registers(regs, cfg, batched=False)
+    counts = np.bincount(regs.astype(np.int64), minlength=histogram_size(cfg))
+    if counts.shape[0] != histogram_size(cfg):
+        raise ValueError(
+            f"register value {regs.max()} exceeds max_rank {cfg.max_rank}"
+        )
+    return counts
+
+
+# ----------------------------------------------------------------------------
+# the estimator registry (mirrors plan.register_backend)
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimator:
+    """A named finalization strategy over the register histogram."""
+
+    name: str
+    host: Callable  # (np int histogram (K,), cfg) -> float, exact
+    device: Callable  # ((..., K) f32 histogram, cfg) -> (...,) f32
+    doc: str = ""
+
+
+_ESTIMATORS: Dict[str, Estimator] = {}
+
+DEFAULT_ESTIMATOR = "original"
+
+
+def register_estimator(
+    name: str, host: Callable, device: Callable, doc: str = ""
+) -> Estimator:
+    """Register an estimator under ``name``; the seam future PRs plug into."""
+    if name in _ESTIMATORS:
+        raise ValueError(f"estimator {name!r} already registered")
+    est = Estimator(name=name, host=host, device=device, doc=doc)
+    _ESTIMATORS[name] = est
+    return est
+
+
+def get_estimator(name: str) -> Estimator:
+    try:
+        return _ESTIMATORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown estimator {name!r}; registered: {sorted(_ESTIMATORS)}"
+        ) from None
+
+
+def available_estimators() -> Tuple[str, ...]:
+    return tuple(sorted(_ESTIMATORS))
+
+
+# ----------------------------------------------------------------------------
+# "original": Flajolet + empirical-threshold corrections (paper Algorithm 1)
+# ----------------------------------------------------------------------------
+
+
+def _linear_counting(m: int, v: int) -> float:
+    """LinearCounting(m, V) = m * ln(m / V)   (Algorithm 1 line 25)."""
+    return m * math.log(m / v)
+
+
+def _original_host(counts: np.ndarray, cfg: HLLConfig) -> float:
+    """Exact host finalizer, bit-compatible with the pre-registry estimate.
+
+    The harmonic sum of 2^-M[j] is accumulated as the *integer*
+    S = sum_k C[k] 2^(max_rank - k) using python bignums, so the raw
+    estimate E = alpha * m^2 * 2^max_rank / S is exact up to one final
+    division — the same exactness the paper buys with its fixed-point
+    accumulator, now in O(H - p) given the histogram.
+    """
+    m = cfg.m
+    s = 0
+    for k, c in enumerate(counts):
+        if c:
+            s += int(c) << int(cfg.max_rank - k)
+    e_raw = alpha(m) * m * m * (1 << cfg.max_rank) / s
+
+    v = int(counts[0])
+    if e_raw <= 2.5 * m:
+        if v != 0:
+            return _linear_counting(m, v)  # small range correction
+        return e_raw
+    if cfg.hash_bits == 32:
+        two32 = float(1 << 32)
+        if e_raw <= two32 / 30.0:
+            return e_raw
+        if e_raw >= two32:
+            # the correction diverges as E -> 2^32: a 32-bit hash cannot
+            # distinguish beyond its own range, so saturate explicitly
+            # instead of a bare math-domain error (seed behavior)
+            return math.inf
+        return -two32 * math.log(1.0 - e_raw / two32)  # large range correction
+    # 64-bit hash: large-range correction obsolete (paper §V-A.7)
+    return e_raw
+
+
+def _original_device(counts: jnp.ndarray, cfg: HLLConfig) -> jnp.ndarray:
+    m = float(cfg.m)
+    w = jnp.exp2(-jnp.arange(histogram_size(cfg), dtype=jnp.float32))
+    harm = counts @ w
+    e_raw = alpha(cfg.m) * m * m / harm
+    v = counts[..., 0]
+    lc = m * jnp.log(m / jnp.maximum(v, 1.0))
+    out = jnp.where((e_raw <= 2.5 * m) & (v > 0), lc, e_raw)
+    if cfg.hash_bits == 32:
+        two32 = float(1 << 32)
+        large = -two32 * jnp.log1p(-(e_raw / two32))
+        large = jnp.where(e_raw >= two32, jnp.inf, large)  # saturated, not NaN
+        out = jnp.where(e_raw > two32 / 30.0, large, out)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# "ertl_improved": sigma/tau-corrected raw estimator (1702.01284 Alg. 6)
+# ----------------------------------------------------------------------------
+
+
+def _sigma(x: float) -> float:
+    """sigma(x) = x + sum_{k>=1} x^(2^k) 2^(k-1); the C[0] tail correction."""
+    if x >= 1.0:
+        return math.inf
+    y, z = 1.0, x
+    while True:
+        x *= x
+        z_prev = z
+        z += x * y
+        y += y
+        if z == z_prev or x == 0.0:
+            return z
+
+
+def _tau(x: float) -> float:
+    """tau(x) = (1/3)(1 - x - sum_{k>=1}(1 - x^(2^-k))^2 2^-k); C[q+1] tail."""
+    if x <= 0.0 or x >= 1.0:
+        return 0.0
+    y, z = 1.0, 1.0 - x
+    while True:
+        x = math.sqrt(x)
+        z_prev = z
+        y *= 0.5
+        z -= (1.0 - x) ** 2 * y
+        if z == z_prev:
+            return z / 3.0
+
+
+def _ertl_z(counts, cfg: HLLConfig, sigma_fn, tau_fn):
+    """The corrected harmonic denominator z shared by improved + MLE seed.
+
+    z = m tau(1 - C[q+1]/m) 2^-q + sum_{k=1..q} C[k] 2^-k + m sigma(C[0]/m)
+    evaluated with Ertl's halving recurrence (deepest registers first).
+    """
+    m = cfg.m
+    q = cfg.max_rank - 1  # = H - p
+    z = m * tau_fn(1.0 - counts[q + 1] / m)
+    for k in range(q, 0, -1):
+        z = 0.5 * (z + float(counts[k]))
+    return z + m * sigma_fn(counts[0] / m)
+
+
+def _ertl_improved_host(counts: np.ndarray, cfg: HLLConfig) -> float:
+    z = _ertl_z(counts, cfg, _sigma, _tau)
+    if math.isinf(z):
+        return 0.0  # every register zero: the sketch has seen nothing
+    if z == 0.0:
+        return math.inf  # every register saturated
+    return ALPHA_INF * cfg.m * cfg.m / z
+
+
+def _sigma_device(x: jnp.ndarray, iters: int = 32) -> jnp.ndarray:
+    def body(_, carry):
+        xx, y, z = carry
+        xx = xx * xx
+        z = z + xx * y
+        return xx, y + y, z
+
+    _, _, z = jax.lax.fori_loop(0, iters, body, (x, jnp.ones_like(x), x))
+    # x^(2^i) underflows to 0 well inside `iters` for any float32 x < 1;
+    # x == 1 diverges and is patched to the analytic limit here.
+    return jnp.where(x >= 1.0, jnp.inf, z)
+
+
+def _tau_device(x: jnp.ndarray, iters: int = 32) -> jnp.ndarray:
+    def body(_, carry):
+        xx, y, z = carry
+        xx = jnp.sqrt(xx)
+        y = 0.5 * y
+        z = z - jnp.square(1.0 - xx) * y
+        return xx, y, z
+
+    _, _, z = jax.lax.fori_loop(
+        0, iters, body, (x, jnp.ones_like(x), 1.0 - x)
+    )
+    return jnp.where((x <= 0.0) | (x >= 1.0), 0.0, z / 3.0)
+
+
+def _ertl_improved_device(counts: jnp.ndarray, cfg: HLLConfig) -> jnp.ndarray:
+    m = float(cfg.m)
+    q = cfg.max_rank - 1
+    # closed form of the halving recurrence: z = z_tau 2^-q + sum C[k] 2^-k
+    w = jnp.exp2(-jnp.arange(1, q + 1, dtype=jnp.float32))
+    z = (
+        m * _tau_device(1.0 - counts[..., q + 1] / m) * (2.0**-q)
+        + counts[..., 1 : q + 1] @ w
+        + m * _sigma_device(counts[..., 0] / m)
+    )
+    # z = +inf (all-zero sketch) -> 0; z = 0 (saturated) -> +inf: both are
+    # the correct limits and fall out of the float division for free.
+    return ALPHA_INF * m * m / z
+
+
+# ----------------------------------------------------------------------------
+# "ertl_mle": Poisson maximum-likelihood over the histogram
+# ----------------------------------------------------------------------------
+#
+# Under the Poisson(lambda) model with per-register rate x = lambda / m:
+#   P(K = 0)    = e^-x
+#   P(K = k)    = e^(-x 2^-k) - e^(-x 2^-(k-1)),  1 <= k <= q
+#   P(K = q+1)  = 1 - e^(-x 2^-q)
+# The log-likelihood derivative reduces to the strictly decreasing
+#   f(x) = -C[0] + sum_{k=1..q} C[k] 2^-k (1/expm1(x 2^-k) - 1)
+#               + C[q+1] 2^-q / expm1(x 2^-q)
+# whose unique positive root x* gives lambda_hat = m x*.  Strict concavity
+# (Ertl 1702.01284 §6) makes bisection globally convergent.
+
+
+def _mle_dlogl_host(x: float, counts: np.ndarray, q: int) -> float:
+    s = -float(counts[0])
+    for k in range(1, q + 1):
+        c = counts[k]
+        if c:
+            u = x * 2.0**-k
+            s += float(c) * 2.0**-k * (1.0 / float(np.expm1(u)) - 1.0)
+    if counts[q + 1]:
+        u = x * 2.0**-q
+        s += float(counts[q + 1]) * 2.0**-q / float(np.expm1(u))
+    return s
+
+
+def _ertl_mle_host(counts: np.ndarray, cfg: HLLConfig) -> float:
+    m = cfg.m
+    q = cfg.max_rank - 1
+    if counts[0] == m:
+        return 0.0
+    if counts[q + 1] == m:
+        return math.inf
+    # seed the bracket from the improved estimator (always within a small
+    # constant factor of the MLE) and expand geometrically to be safe
+    x0 = _ertl_improved_host(counts, cfg) / m
+    if not (0.0 < x0 < math.inf):
+        x0 = 1.0
+    lo = hi = x0
+    while _mle_dlogl_host(hi, counts, q) > 0.0 and hi < 2.0**80:
+        hi *= 2.0
+    while _mle_dlogl_host(lo, counts, q) < 0.0 and lo > 2.0**-80:
+        lo *= 0.5
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if mid == lo or mid == hi:  # float64 exhausted
+            break
+        if _mle_dlogl_host(mid, counts, q) > 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return m * 0.5 * (lo + hi)
+
+
+def _mle_dlogl_device(x: jnp.ndarray, counts: jnp.ndarray, q: int):
+    pw = jnp.exp2(-jnp.arange(1, q + 1, dtype=jnp.float32))  # (q,)
+    t = pw * (1.0 / jnp.expm1(x[..., None] * pw) - 1.0)  # (..., q)
+    ck = counts[..., 1 : q + 1]
+    s = jnp.sum(jnp.where(ck > 0, ck * t, 0.0), axis=-1)
+    tq = (2.0**-q) / jnp.expm1(x * (2.0**-q))
+    cq1 = counts[..., q + 1]
+    return s + jnp.where(cq1 > 0, cq1 * tq, 0.0) - counts[..., 0]
+
+
+def _ertl_mle_device(counts: jnp.ndarray, cfg: HLLConfig) -> jnp.ndarray:
+    m = float(cfg.m)
+    q = cfg.max_rank - 1
+    x0 = _ertl_improved_device(counts, cfg) / m
+    mid0 = jnp.log2(x0)
+    # 40 bisections over a 2^10-wide log2 bracket around the improved seed:
+    # terminal interval 2^-30, below float32 resolution.
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        going_up = _mle_dlogl_device(jnp.exp2(mid), counts, q) > 0.0
+        return jnp.where(going_up, mid, lo), jnp.where(going_up, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, 40, body, (mid0 - 5.0, mid0 + 5.0))
+    est = m * jnp.exp2(0.5 * (lo + hi))
+    # degenerate sketches never enter the bisection result
+    est = jnp.where(counts[..., 0] >= m, 0.0, est)
+    return jnp.where(counts[..., q + 1] >= m, jnp.inf, est)
+
+
+register_estimator(
+    "original",
+    _original_host,
+    _original_device,
+    doc="Flajolet harmonic mean + empirical small/large-range corrections "
+    "(paper Algorithm 1); host path bit-compatible with the seed.",
+)
+register_estimator(
+    "ertl_improved",
+    _ertl_improved_host,
+    _ertl_improved_device,
+    doc="Ertl improved raw estimator (1702.01284 Alg. 6): sigma/tau tail "
+    "corrections, no empirical thresholds, no LC transition bump.",
+)
+register_estimator(
+    "ertl_mle",
+    _ertl_mle_host,
+    _ertl_mle_device,
+    doc="Ertl Poisson maximum-likelihood estimator: bisection on the "
+    "concave log-likelihood derivative over the histogram.",
+)
+
+
+# ----------------------------------------------------------------------------
+# dispatch: the four public finalization entry points
+# ----------------------------------------------------------------------------
+
+
+def resolve_estimator(estimator: Optional[str]) -> str:
+    """None -> the package-wide default (the seam for flipping it once)."""
+    return DEFAULT_ESTIMATOR if estimator is None else estimator
+
+
+def estimate_from_histogram(
+    counts, cfg: HLLConfig, estimator: Optional[str] = None
+) -> float:
+    """Exact host finalization of a precomputed histogram — O(H - p)."""
+    estimator = resolve_estimator(estimator)
+    counts = np.asarray(counts)
+    if counts.shape != (histogram_size(cfg),):
+        raise ValueError(
+            f"expected a ({histogram_size(cfg)},) histogram, got {counts.shape}"
+        )
+    if int(counts.sum()) != cfg.m:
+        raise ValueError(
+            f"histogram sums to {int(counts.sum())}, expected m={cfg.m}"
+        )
+    return float(get_estimator(estimator).host(counts, cfg))
+
+
+def estimate(
+    registers, cfg: HLLConfig, estimator: Optional[str] = None
+) -> float:
+    """Phase 4, host-exact: histogram the registers, then finalize."""
+    counts = register_histogram_host(registers, cfg)
+    return float(get_estimator(resolve_estimator(estimator)).host(counts, cfg))
+
+
+@partial(jax.jit, static_argnames=("cfg", "estimator"))
+def _estimate_device(
+    registers: jnp.ndarray, cfg: HLLConfig, estimator: str
+) -> jnp.ndarray:
+    counts = register_histogram(registers, cfg).astype(jnp.float32)
+    return get_estimator(estimator).device(counts, cfg)
+
+
+def estimate_device(
+    registers: jnp.ndarray,
+    cfg: HLLConfig,
+    estimator: Optional[str] = None,
+) -> jnp.ndarray:
+    """Float32 on-device estimate of one (m,) sketch (telemetry path)."""
+    validate_registers(registers, cfg, batched=False)
+    return _estimate_device(registers, cfg, resolve_estimator(estimator))
+
+
+def estimate_many(
+    register_bank: jnp.ndarray,
+    cfg: HLLConfig,
+    estimator: Optional[str] = None,
+) -> jnp.ndarray:
+    """Batched device finalization: (..., m) bank -> (...,) float32.
+
+    One jitted dispatch for the whole bank — a StreamSketch board, mesh
+    shards, or a serving fleet finalize together instead of iterating
+    sketches in python.  Matches per-sketch :func:`estimate_device` to
+    float32 tolerance (property-tested in tests/test_estimators.py).
+    """
+    validate_registers(register_bank, cfg, batched=True)
+    return _estimate_device(register_bank, cfg, resolve_estimator(estimator))

@@ -9,10 +9,12 @@ Four phases (paper §III):
 
 Aggregation is the streaming hot path and stays device-side (jnp; the Pallas
 kernels in repro/kernels accelerate it).  The computation phase is a one-shot
-finalization — the paper measures it at a constant 203 us — and is done
-host-side with *exact* python-int arithmetic, mirroring the paper's exact
-fixed-point harmonic-mean accumulator.  A float32 device-side estimator is
-also provided for in-step telemetry.
+finalization — the paper measures it at a constant 203 us — and dispatches
+through the pluggable estimator registry (repro/sketch/estimators.py): every
+estimator consumes the register-value histogram and ships an exact host path
+(python-int / float64 arithmetic, mirroring the paper's exact fixed-point
+harmonic-mean accumulator for the default "original" estimator) plus a
+float32 batched device path for in-step telemetry.
 
 Registers form a max-lattice: ``merge`` is element-wise max, which is the
 paper's "Merge buckets" fold and the basis for all distribution here.
@@ -27,7 +29,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.sketch import murmur3, u64 as u64lib
 
@@ -142,71 +143,42 @@ def merge(*register_arrays: jnp.ndarray) -> jnp.ndarray:
 
 
 # ----------------------------------------------------------------------------
-# Phase 4 — computation (host-side, exact)
+# Phase 4 — computation, dispatched through the estimator registry
 # ----------------------------------------------------------------------------
+#
+# The finalizers live in repro/sketch/estimators.py: every estimator
+# consumes the register histogram C[k] (one device bincount, DESIGN.md §8)
+# and ships an exact O(H-p) host path plus a float32 batched device path.
+# These wrappers keep the historical ``hll.estimate`` surface; the imports
+# are deferred because estimators.py imports HLLConfig/alpha from here.
 
 
-def _linear_counting(m: int, v: int) -> float:
-    """LinearCounting(m, V) = m * ln(m / V)   (Algorithm 1 line 25)."""
-    return m * math.log(m / v)
+def estimate(
+    registers, cfg: HLLConfig, estimator: Optional[str] = None
+) -> float:
+    """Phase 4: exact host-side cardinality estimate.
 
-
-def estimate(registers, cfg: HLLConfig) -> float:
-    """Phase 4: exact host-side cardinality estimate with corrections.
-
-    The harmonic sum of 2^-M[j] is accumulated as the *integer*
-    S = sum_j 2^(max_rank - M[j]) using python bignums, so the raw estimate
-    E = alpha * m^2 * 2^max_rank / S is exact up to one final division —
-    the same exactness the paper buys with its fixed-point accumulator.
+    ``estimator`` selects the registered finalizer (None -> the registry
+    default, "original", which keeps the paper's Algorithm 1 corrections
+    bit-compatibly; "ertl_improved" / "ertl_mle" are Ertl's histogram
+    estimators — see estimators.py).
     """
-    regs = np.asarray(registers, dtype=np.int64)
-    m = cfg.m
-    if regs.shape != (m,):
-        raise ValueError(f"expected {(m,)} registers, got {regs.shape}")
+    from repro.sketch import estimators as _estimators
 
-    shift = cfg.max_rank - regs  # in [0, max_rank]
-    # integer harmonic accumulator: exact
-    s = 0
-    counts = np.bincount(shift, minlength=cfg.max_rank + 1)
-    for sh, c in enumerate(counts):
-        if c:
-            s += int(c) << int(sh)
-    e_raw = alpha(m) * m * m * (1 << cfg.max_rank) / s
-
-    v = int(np.count_nonzero(regs == 0))
-    if e_raw <= 2.5 * m:
-        if v != 0:
-            return _linear_counting(m, v)  # small range correction
-        return e_raw
-    if cfg.hash_bits == 32:
-        two32 = float(1 << 32)
-        if e_raw <= two32 / 30.0:
-            return e_raw
-        return -two32 * math.log(1.0 - e_raw / two32)  # large range correction
-    # 64-bit hash: large-range correction obsolete (paper §V-A.7)
-    return e_raw
+    return _estimators.estimate(registers, cfg, estimator=estimator)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def estimate_device(registers: jnp.ndarray, cfg: HLLConfig) -> jnp.ndarray:
+def estimate_device(
+    registers: jnp.ndarray, cfg: HLLConfig, estimator: Optional[str] = None
+) -> jnp.ndarray:
     """Float32 on-device estimator for in-step telemetry.
 
-    Matches `estimate` to float32 precision for the small-range and raw
-    paths (the telemetry consumer; the exact host path is authoritative).
+    Validates shape/dtype exactly like :func:`estimate`, then finalizes
+    through the registered device path (authoritative path: ``estimate``).
     """
-    regs = registers.astype(jnp.float32)
-    m = float(cfg.m)
-    harm = jnp.sum(jnp.exp2(-regs))
-    e_raw = alpha(cfg.m) * m * m / harm
-    v = jnp.sum(registers == 0).astype(jnp.float32)
-    lc = m * jnp.log(m / jnp.maximum(v, 1.0))
-    use_lc = (e_raw <= 2.5 * m) & (v > 0)
-    out = jnp.where(use_lc, lc, e_raw)
-    if cfg.hash_bits == 32:
-        two32 = float(1 << 32)
-        large = -two32 * jnp.log1p(-(e_raw / two32))
-        out = jnp.where(e_raw > two32 / 30.0, large, out)
-    return out
+    from repro.sketch import estimators as _estimators
+
+    return _estimators.estimate_device(registers, cfg, estimator=estimator)
 
 
 def standard_error(cfg: HLLConfig) -> float:
@@ -219,8 +191,12 @@ def standard_error(cfg: HLLConfig) -> float:
 # ----------------------------------------------------------------------------
 
 
-def cardinality(items: jnp.ndarray, cfg: Optional[HLLConfig] = None) -> float:
+def cardinality(
+    items: jnp.ndarray,
+    cfg: Optional[HLLConfig] = None,
+    estimator: Optional[str] = None,
+) -> float:
     """Sketch a whole array and return the exact-finalized estimate."""
     cfg = cfg or HLLConfig()
     regs = update(init_registers(cfg), items, cfg)
-    return estimate(regs, cfg)
+    return estimate(regs, cfg, estimator=estimator)

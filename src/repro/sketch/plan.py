@@ -16,13 +16,17 @@ datapath tap, and the two Pallas wrappers) with divergent defaults.  An
   pipelines  k sub-sketch lanes per device (paper Fig. 3); every backend
              produces registers bit-identical to the k=1 reference because
              max is associative/commutative/idempotent (DESIGN.md §6).
+  estimator  phase-4 finalizer name ("original" | "ertl_improved" |
+             "ertl_mle"), resolved against the estimator registry in
+             repro/sketch/estimators.py (DESIGN.md §8).
 
 Streams whose length does not divide ``pipelines`` (or the kernel tile) are
 padded uniformly; padding is neutralized by rank-0 masking, never raising.
 
-New backends register through :func:`register_backend`, which is the seam
-future PRs (sparse registers, compressed HLLL representations, Ertl
-estimators with their own aggregation layouts) plug into.
+New backends register through :func:`register_backend` and new finalizers
+through :func:`repro.sketch.estimators.register_estimator` — the seams
+future PRs (sparse registers, compressed HLL representations, streaming
+martingale estimators) plug into.
 """
 
 from __future__ import annotations
@@ -31,6 +35,8 @@ import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
+
+from repro.sketch.estimators import DEFAULT_ESTIMATOR, get_estimator
 
 DEFAULT_PIPELINES = 8  # unified default (was 8 in core.sketch, 4 in kernels.ops)
 
@@ -76,6 +82,9 @@ class ExecutionPlan:
     data_axes: Tuple[str, ...] = ("data",)
     # Pallas interpret mode: None = auto (interpret off-TPU, compiled on TPU)
     interpret: Optional[bool] = None
+    # phase-4 finalizer, resolved against repro.sketch.estimators'
+    # registry ("original" | "ertl_improved" | "ertl_mle" | plugins)
+    estimator: str = DEFAULT_ESTIMATOR
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
@@ -89,8 +98,9 @@ class ExecutionPlan:
         object.__setattr__(self, "data_axes", tuple(self.data_axes))
 
     def validate(self) -> "ExecutionPlan":
-        """Check the backend exists (deferred so plans can be built early)."""
+        """Check backend + estimator exist (deferred so plans build early)."""
         get_backend(self.backend)
+        get_estimator(self.estimator)
         if self.placement == "mesh":
             missing = set(self.data_axes) - set(self.mesh.axis_names)
             if missing:

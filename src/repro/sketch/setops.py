@@ -9,13 +9,17 @@ max-lattice gives two of them almost for free:
                (error grows with the Jaccard disparity — reported alongside)
   difference   |A \\ B| = |A ∪ B| - |B|
 
-Each operation consumes only the 48 KiB register arrays — no re-streaming.
+Each operation consumes only the 48 KiB register arrays — no re-streaming —
+and finalizes through the pluggable estimator registry (``estimator=``,
+DESIGN.md §8).  Inclusion-exclusion compounds the error of *three*
+estimates, so the bias-free ``ertl_improved``/``ertl_mle`` finalizers
+measurably shrink intersection/Jaccard error versus the threshold-corrected
+``original``, especially near the linear-counting transition.
 """
 
 from __future__ import annotations
 
-import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -28,11 +32,17 @@ def _registers(x) -> jnp.ndarray:
     return getattr(x, "registers", x)
 
 
-def union_estimate(a, b, cfg: HLLConfig) -> float:
-    return hll.estimate(hll.merge(_registers(a), _registers(b)), cfg)
+def union_estimate(
+    a, b, cfg: HLLConfig, estimator: Optional[str] = None
+) -> float:
+    return hll.estimate(
+        hll.merge(_registers(a), _registers(b)), cfg, estimator=estimator
+    )
 
 
-def intersection_estimate(a, b, cfg: HLLConfig) -> Tuple[float, float]:
+def intersection_estimate(
+    a, b, cfg: HLLConfig, estimator: Optional[str] = None
+) -> Tuple[float, float]:
     """Returns (|A ∩ B| estimate, standard-error bound of the estimate).
 
     Inclusion-exclusion over three HLL estimates; the absolute error is
@@ -41,23 +51,35 @@ def intersection_estimate(a, b, cfg: HLLConfig) -> Tuple[float, float]:
     explicit so callers can reject unreliable readings.
     """
     a, b = _registers(a), _registers(b)
-    ea = hll.estimate(a, cfg)
-    eb = hll.estimate(b, cfg)
-    eu = union_estimate(a, b, cfg)
+    ea = hll.estimate(a, cfg, estimator=estimator)
+    eb = hll.estimate(b, cfg, estimator=estimator)
+    eu = union_estimate(a, b, cfg, estimator=estimator)
     inter = max(0.0, ea + eb - eu)
     sigma = hll.standard_error(cfg)
     err_abs = sigma * (ea + eb + eu)
     return inter, err_abs
 
 
-def difference_estimate(a, b, cfg: HLLConfig) -> float:
+def difference_estimate(
+    a, b, cfg: HLLConfig, estimator: Optional[str] = None
+) -> float:
     """|A \\ B| >= 0 via union."""
-    return max(0.0, union_estimate(a, b, cfg) - hll.estimate(_registers(b), cfg))
+    return max(
+        0.0,
+        union_estimate(a, b, cfg, estimator=estimator)
+        - hll.estimate(_registers(b), cfg, estimator=estimator),
+    )
 
 
-def jaccard_estimate(a, b, cfg: HLLConfig) -> float:
-    eu = union_estimate(a, b, cfg)
+def jaccard_estimate(
+    a, b, cfg: HLLConfig, estimator: Optional[str] = None
+) -> float:
+    # inclusion-exclusion from one union merge + three finalizations
+    # (delegating to intersection_estimate would finalize the union twice)
+    a, b = _registers(a), _registers(b)
+    ea = hll.estimate(a, cfg, estimator=estimator)
+    eb = hll.estimate(b, cfg, estimator=estimator)
+    eu = union_estimate(a, b, cfg, estimator=estimator)
     if eu <= 0:
         return float("nan")
-    inter, _ = intersection_estimate(a, b, cfg)
-    return inter / eu
+    return max(0.0, ea + eb - eu) / eu

@@ -4,12 +4,19 @@ Wraps named ``HyperLogLog`` carriers so a training/serving job can track
 several cardinalities at once (distinct tokens, distinct users/request ids,
 distinct (token, expert) routing pairs for MoE collapse detection — DESIGN.md
 §4) — each one is 48 KiB of state and one all-reduce-max per merge,
-regardless of stream size.  The exact host-side estimate finalizes a report,
-mirroring the paper's constant-time computation phase.
+regardless of stream size.
+
+``report()`` finalizes the whole board through the batched estimator path
+(DESIGN.md §8): the registers stack into one (B, m) bank and a single
+jitted ``estimate_many`` dispatch produces every float32 estimate at once,
+instead of a python loop of per-sketch finalizations.  ``report(exact=True)``
+(and per-stream ``estimate()``) keep the exact host finalizer for
+authoritative readings; both dispatch through the pluggable estimator
+registry, defaulting to the board plan's ``estimator``.
 
 Every stream's updates run under one ``ExecutionPlan``, so a board can be
-switched from the local jnp path to Pallas pipelines or a device mesh
-without touching call sites.
+switched from the local jnp path to Pallas pipelines or a device mesh —
+or to a different estimator — without touching call sites.
 """
 
 from __future__ import annotations
@@ -18,8 +25,14 @@ import dataclasses
 from typing import Dict, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.sketch import ExecutionPlan, HyperLogLog
+from repro.sketch import (
+    DEFAULT_ESTIMATOR,
+    ExecutionPlan,
+    HyperLogLog,
+    estimate_many,
+)
 from repro.sketch.hll import HLLConfig
 
 
@@ -28,6 +41,13 @@ class StreamSketch:
     cfg: HLLConfig
     plan: Optional[ExecutionPlan] = None  # None = default jnp plan
     sketches: Dict[str, HyperLogLog] = dataclasses.field(default_factory=dict)
+
+    def _estimator(self, estimator: Optional[str]) -> str:
+        if estimator is not None:
+            return estimator
+        return (
+            self.plan.estimator if self.plan is not None else DEFAULT_ESTIMATOR
+        )
 
     def stream(self, name: str) -> HyperLogLog:
         if name not in self.sketches:
@@ -38,11 +58,17 @@ class StreamSketch:
         self.sketches[name] = self.stream(name).update(items, self.plan)
 
     def merge_from(self, other: "StreamSketch") -> None:
+        if other.cfg != self.cfg:
+            raise ValueError(
+                f"cannot merge boards with different configs: "
+                f"{self.cfg} vs {other.cfg}"
+            )
         for name, sk in other.sketches.items():
             self.sketches[name] = self.stream(name).merge(sk)
 
-    def estimate(self, name: str) -> float:
-        return self.stream(name).estimate()
+    def estimate(self, name: str, estimator: Optional[str] = None) -> float:
+        """Exact host-side estimate for one stream."""
+        return self.stream(name).estimate(self._estimator(estimator))
 
     def serialize(self) -> Dict[str, bytes]:
         """Dense per-stream blobs (HyperLogLog.to_bytes) for shipping."""
@@ -58,22 +84,52 @@ class StreamSketch:
         """Rebuild a board from serialize() output.
 
         ``cfg`` is only required for a board serialized before its first
-        observe() (no streams to recover the config from).
+        observe() (no streams to recover the config from); when given, it
+        must match the config recovered from the blobs — a mismatch raises
+        instead of silently adopting the blob config.
         """
         sketches = {n: HyperLogLog.from_bytes(b) for n, b in blobs.items()}
         if sketches:
-            cfg = next(iter(sketches.values())).cfg
+            recovered = next(iter(sketches.values())).cfg
+            for name, sk in sketches.items():
+                if sk.cfg != recovered:
+                    raise ValueError(
+                        f"blob {name!r} config {sk.cfg} disagrees with the "
+                        f"other streams on this board"
+                    )
+            if cfg is not None and cfg != recovered:
+                raise ValueError(
+                    f"cfg mismatch: blobs were serialized with {recovered}, "
+                    f"deserialize was asked for {cfg}"
+                )
+            cfg = recovered
         elif cfg is None:
             raise ValueError("empty board: pass cfg= to deserialize it")
         return cls(cfg=cfg, plan=plan, sketches=sketches)
 
-    def report(self) -> Dict[str, dict]:
-        return {
-            name: {
-                "estimate": sk.estimate(),
+    def report(
+        self, exact: bool = False, estimator: Optional[str] = None
+    ) -> Dict[str, dict]:
+        """Per-stream estimates; batched device finalization by default."""
+        estimator = self._estimator(estimator)
+        names = list(self.sketches)
+        if exact or not names:
+            estimates = [
+                self.sketches[n].estimate(estimator) for n in names
+            ]
+        else:
+            bank = jnp.stack([self.sketches[n].registers for n in names])
+            estimates = [
+                float(e)
+                for e in np.asarray(estimate_many(bank, self.cfg, estimator))
+            ]
+        out = {}
+        for name, est in zip(names, estimates):
+            sk = self.sketches[name]
+            out[name] = {
+                "estimate": est,
                 "items_seen": sk.count,
-                "duplication": sk.duplication(),
+                "duplication": (sk.count / est) if est > 0 else float("nan"),
                 "stderr_expected": sk.standard_error,
             }
-            for name, sk in self.sketches.items()
-        }
+        return out

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs.base import ArchConfig
-from repro.sketch import hll
+from repro.sketch import estimators
 from repro.data.pipeline import DataConfig, batch_at_step
 from repro.train.step import TrainConfig, init_train_state, make_jitted_step
 from repro.train.watchdog import StepWatchdog, Verdict
@@ -101,7 +101,14 @@ def train(
     if loop_cfg.ckpt_dir:
         ckpt.save(state, loop_cfg.ckpt_dir, loop_cfg.total_steps)
 
-    # exact host-side sketch finalization (paper phase 4)
-    distinct = hll.estimate(state["sketch"], train_cfg.sketch)
-    log_fn(f"[loop] exact-finalized distinct-token estimate: {distinct:.0f}")
+    # exact host-side sketch finalization (paper phase 4), dispatched
+    # through the estimator registry
+    distinct = estimators.estimate(
+        state["sketch"], train_cfg.sketch,
+        estimator=train_cfg.sketch_estimator,
+    )
+    log_fn(
+        f"[loop] exact-finalized distinct-token estimate "
+        f"({train_cfg.sketch_estimator}): {distinct:.0f}"
+    )
     return state, history

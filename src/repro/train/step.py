@@ -12,13 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.sketch import HLLConfig, hll
+from repro.sketch import DEFAULT_ESTIMATOR, HLLConfig, estimators, hll
 from repro.sketch.dispatch import datapath_tap
 from repro.models import transformer
 from repro.optim import adamw
@@ -29,6 +29,9 @@ from repro.optim.adamw import OptimizerConfig
 class TrainConfig:
     optimizer: OptimizerConfig = OptimizerConfig()
     sketch: HLLConfig = HLLConfig(p=16, hash_bits=64)
+    # phase-4 finalizer for the in-step device estimate and the loop's
+    # exact host finalization (repro.sketch.estimators registry)
+    sketch_estimator: str = DEFAULT_ESTIMATOR
     aux_weight: float = 0.01  # MoE load-balance loss weight
     sketch_enabled: bool = True
     # gradient accumulation: microbatches processed sequentially per step.
@@ -91,7 +94,9 @@ def train_step(
     regs = state["sketch"]
     if cfg.sketch_enabled:
         regs = datapath_tap(regs, batch["tokens"], cfg.sketch)
-    distinct = hll.estimate_device(regs, cfg.sketch)
+    distinct = estimators.estimate_device(
+        regs, cfg.sketch, estimator=cfg.sketch_estimator
+    )
 
     new_state = {
         "params": params,

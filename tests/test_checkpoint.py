@@ -13,7 +13,7 @@ from repro.sketch import hll
 from repro.sketch import HLLConfig
 from repro.data.pipeline import DataConfig, batch_at_step
 from repro.optim.adamw import OptimizerConfig
-from repro.train.step import TrainConfig, init_train_state, make_jitted_step
+from repro.train.step import TrainConfig, init_train_state
 from repro.train.loop import LoopConfig, train
 
 

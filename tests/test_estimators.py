@@ -1,0 +1,415 @@
+"""Estimator registry: golden pins, Ertl accuracy bands, host/device, batching.
+
+Covers the phase-4 refactor contract (DESIGN.md §8):
+  * ``original`` stays bit-identical to the pre-registry exact estimator
+    (golden values captured from the seed implementation);
+  * ``ertl_improved`` / ``ertl_mle`` stay within ~3 * (1.04/sqrt(m)) of the
+    true cardinality across small/mid/large ranges;
+  * every estimator's device path agrees with its exact host path;
+  * ``estimate_many`` over a stacked register bank matches per-sketch
+    ``estimate_device`` calls in one jitted dispatch;
+  * ``estimate_device`` validates shape/dtype the same way ``estimate`` does.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.sketch import (
+    ExecutionPlan,
+    HyperLogLog,
+    available_estimators,
+    estimate_from_histogram,
+    estimate_many,
+    get_estimator,
+    hll,
+    register_estimator,
+    register_histogram,
+    setops,
+)
+from repro.sketch import estimators as estlib
+from repro.sketch import exact as exactlib
+from repro.sketch.hll import HLLConfig
+
+ESTIMATORS = ("original", "ertl_improved", "ertl_mle")
+
+
+def _items(n, seed):
+    return np.random.default_rng(seed).integers(0, 2**31, n, dtype=np.int32)
+
+
+def _regs(cfg, n, seed):
+    return hll.update(hll.init_registers(cfg), jnp.asarray(_items(n, seed)), cfg)
+
+
+# ----------------------------------------------------------------------------
+# golden values: "original" is bit-compatible with the pre-registry estimator
+# ----------------------------------------------------------------------------
+
+# (p, H, n, rng seed, estimate) captured from the seed implementation, which
+# accumulated sum_j 2^(max_rank - M[j]) as an exact python int.  The histogram
+# path computes the same integer, so equality here is exact, not approx.
+GOLDEN = [
+    (10, 64, 100, 0, 105.2259675727554),
+    (10, 64, 5000, 1, 5267.28249218302),
+    (12, 64, 200000, 2, 197827.12799793802),
+    (14, 32, 3000, 3, 3000.7620341689494),
+    (14, 32, 2000000, 4, 2019074.3597214979),
+    (16, 64, 1000000, 5, 996494.3822282938),
+    (8, 32, 50, 6, 50.70589792309603),
+    (14, 64, 50000, 7, 50449.459385639755),
+]
+
+
+@pytest.mark.parametrize("p,H,n,seed,expected", GOLDEN)
+def test_original_bit_identical_to_seed(p, H, n, seed, expected):
+    cfg = HLLConfig(p=p, hash_bits=H)
+    regs = _regs(cfg, n, seed)
+    assert hll.estimate(regs, cfg) == expected  # default estimator
+    assert hll.estimate(regs, cfg, estimator="original") == expected
+    assert estlib.estimate(regs, cfg, "original") == expected
+
+
+def test_original_large_range_golden():
+    """Synthetic deep registers: the 2^32 correction path, pinned exactly."""
+    regs = jnp.asarray(np.full(1 << 14, 18, np.uint8))
+    cfg32 = HLLConfig(p=14, hash_bits=32)
+    assert hll.estimate(regs, cfg32) == 5486601362.617552
+    raw = hll.alpha(cfg32.m) * cfg32.m * cfg32.m / (cfg32.m * 2.0**-18)
+    cfg64 = HLLConfig(p=14, hash_bits=64)
+    assert hll.estimate(regs, cfg64) == pytest.approx(raw)
+
+
+# ----------------------------------------------------------------------------
+# the histogram intermediate
+# ----------------------------------------------------------------------------
+
+
+def test_histogram_device_matches_host():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    regs = _regs(cfg, 20_000, 3)
+    dev = np.asarray(register_histogram(regs, cfg))
+    host = estlib.register_histogram_host(regs, cfg)
+    np.testing.assert_array_equal(dev, host)
+    assert dev.shape == (estlib.histogram_size(cfg),)
+    assert dev.sum() == cfg.m
+
+
+def test_histogram_batched():
+    cfg = HLLConfig(p=8, hash_bits=64)
+    bank = jnp.stack([_regs(cfg, n, n) for n in (10, 1000, 50_000)])
+    hs = np.asarray(register_histogram(bank, cfg))
+    assert hs.shape == (3, estlib.histogram_size(cfg))
+    for i in range(3):
+        np.testing.assert_array_equal(
+            hs[i], estlib.register_histogram_host(bank[i], cfg)
+        )
+
+
+def test_estimate_from_histogram_matches_estimate():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    regs = _regs(cfg, 30_000, 4)
+    counts = estlib.register_histogram_host(regs, cfg)
+    for name in ESTIMATORS:
+        assert estimate_from_histogram(counts, cfg, name) == hll.estimate(
+            regs, cfg, estimator=name
+        )
+
+
+def test_estimate_from_histogram_validates():
+    cfg = HLLConfig(p=8, hash_bits=64)
+    with pytest.raises(ValueError, match="histogram"):
+        estimate_from_histogram(np.zeros(5, np.int64), cfg)
+    bad = np.zeros(estlib.histogram_size(cfg), np.int64)  # sums to 0, not m
+    with pytest.raises(ValueError, match="sums to"):
+        estimate_from_histogram(bad, cfg)
+
+
+# ----------------------------------------------------------------------------
+# Ertl estimators: accuracy bands across small / mid / large ranges
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("estimator", ESTIMATORS)
+@pytest.mark.parametrize("n", [150, 2_000, 20_000, 160_000])
+def test_estimator_within_three_sigma(estimator, n):
+    cfg = HLLConfig(p=12, hash_bits=64)  # sigma = 1.625%
+    items = _items(n, seed=n * 7 + 1)
+    regs = hll.update(hll.init_registers(cfg), jnp.asarray(items), cfg)
+    est = hll.estimate(regs, cfg, estimator=estimator)
+    ex = exactlib.exact_distinct(items)
+    assert abs(est - ex) / ex < 3 * hll.standard_error(cfg)
+
+
+@pytest.mark.parametrize("estimator", ["ertl_improved", "ertl_mle"])
+def test_ertl_no_transition_bump(estimator):
+    """Ertl's point: accuracy holds *at* the 2.5m LC->raw threshold too."""
+    cfg = HLLConfig(p=10, hash_bits=64)
+    n = int(2.5 * cfg.m)  # the original estimator's worst spot
+    errs = []
+    for t in range(5):
+        items = _items(n, seed=100 + t)
+        regs = hll.update(hll.init_registers(cfg), jnp.asarray(items), cfg)
+        est = hll.estimate(regs, cfg, estimator=estimator)
+        ex = exactlib.exact_distinct(items)
+        errs.append(abs(est - ex) / ex)
+    assert np.median(errs) < 3 * hll.standard_error(cfg)
+
+
+@settings(deadline=None, max_examples=15, derandomize=True)
+@given(st.integers(10, 60_000), st.integers(0, 2**31 - 1))
+def test_property_all_estimators_track_truth(n, seed):
+    # fixed stream length (one compile), cardinality driven by value range
+    cfg = HLLConfig(p=10, hash_bits=64)
+    items = np.random.default_rng(seed).integers(0, n, 16_384, dtype=np.int32)
+    regs = hll.update(hll.init_registers(cfg), jnp.asarray(items), cfg)
+    ex = exactlib.exact_distinct(items)
+    band = 3 * hll.standard_error(cfg)
+    for name in ESTIMATORS:
+        est = hll.estimate(regs, cfg, estimator=name)
+        assert abs(est - ex) <= max(band * ex, 2.0), (name, est, ex)
+
+
+# ----------------------------------------------------------------------------
+# host vs device agreement, per estimator
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("estimator", ESTIMATORS)
+def test_host_vs_device_agreement(estimator):
+    for p, H in [(10, 64), (14, 32)]:
+        cfg = HLLConfig(p=p, hash_bits=H)
+        for n in (100, 5_000, 40 * cfg.m):
+            regs = _regs(cfg, n, seed=n + p)
+            host = hll.estimate(regs, cfg, estimator=estimator)
+            dev = float(hll.estimate_device(regs, cfg, estimator=estimator))
+            assert abs(dev - host) / host < 1e-4, (p, H, n, host, dev)
+
+
+@settings(deadline=None, max_examples=10, derandomize=True)
+@given(st.integers(1, 2**30), st.integers(0, 2**31 - 1))
+def test_property_host_device_agree(n, seed):
+    cfg = HLLConfig(p=8, hash_bits=64)
+    items = np.random.default_rng(seed).integers(0, n, 16_384, dtype=np.int32)
+    regs = hll.update(hll.init_registers(cfg), jnp.asarray(items), cfg)
+    for name in ESTIMATORS:
+        host = hll.estimate(regs, cfg, estimator=name)
+        dev = float(hll.estimate_device(regs, cfg, estimator=name))
+        assert abs(dev - host) <= 1e-4 * max(host, 1.0), (name, host, dev)
+
+
+def test_degenerate_sketches():
+    cfg = HLLConfig(p=8, hash_bits=64)
+    empty = jnp.zeros((cfg.m,), jnp.uint8)
+    saturated = jnp.full((cfg.m,), cfg.max_rank, jnp.uint8)
+    for name in ESTIMATORS:
+        assert hll.estimate(empty, cfg, estimator=name) == 0.0
+        assert float(hll.estimate_device(empty, cfg, estimator=name)) == 0.0
+    for name in ("ertl_improved", "ertl_mle"):
+        assert hll.estimate(saturated, cfg, estimator=name) == math.inf
+        assert math.isinf(
+            float(hll.estimate_device(saturated, cfg, estimator=name))
+        )
+    # original, 32-bit hash: past 2^32 the large-range correction diverges;
+    # it must saturate to +inf (not raise host-side / NaN device-side)
+    cfg32 = HLLConfig(p=14, hash_bits=32)
+    sat32 = jnp.full((cfg32.m,), cfg32.max_rank, jnp.uint8)
+    assert hll.estimate(sat32, cfg32) == math.inf
+    assert math.isinf(float(hll.estimate_device(sat32, cfg32)))
+
+
+# ----------------------------------------------------------------------------
+# estimate_many: the batched device path (acceptance criterion)
+# ----------------------------------------------------------------------------
+
+
+_BANK_CACHE = {}
+
+
+def _bank64(cfg):
+    """64 stacked sketches (incl. one empty), cardinalities ~10 .. ~8k."""
+    if cfg not in _BANK_CACHE:
+        rows = [hll.init_registers(cfg)]
+        for i in range(63):
+            vals = min(int(10 * 1.25**i), 1 << 30)
+            items = np.random.default_rng(i).integers(
+                0, vals, 16_384, dtype=np.int32
+            )
+            rows.append(
+                hll.update(hll.init_registers(cfg), jnp.asarray(items), cfg)
+            )
+        _BANK_CACHE[cfg] = jnp.stack(rows)
+    return _BANK_CACHE[cfg]
+
+
+@pytest.mark.parametrize("estimator", ESTIMATORS)
+def test_estimate_many_matches_individual(estimator):
+    """64-sketch bank == 64 individual estimate_device calls, one dispatch."""
+    cfg = HLLConfig(p=10, hash_bits=64)
+    bank = _bank64(cfg)
+    many = np.asarray(estimate_many(bank, cfg, estimator=estimator))
+    assert many.shape == (64,)
+    indiv = np.asarray(
+        [
+            float(hll.estimate_device(bank[i], cfg, estimator=estimator))
+            for i in range(64)
+        ]
+    )
+    np.testing.assert_allclose(many, indiv, rtol=1e-6)
+    # and the device bank tracks the exact host finalizer per sketch
+    hosts = np.asarray(
+        [hll.estimate(bank[i], cfg, estimator=estimator) for i in range(64)]
+    )
+    np.testing.assert_allclose(many[1:], hosts[1:], rtol=1e-4)
+    assert many[0] == hosts[0] == 0.0
+
+
+def test_estimate_many_nd_bank():
+    cfg = HLLConfig(p=8, hash_bits=64)
+    bank = jnp.stack([_regs(cfg, 1000 * (i + 1), i) for i in range(6)])
+    grid = bank.reshape(2, 3, cfg.m)
+    out = np.asarray(estimate_many(grid, cfg))
+    assert out.shape == (2, 3)
+    np.testing.assert_allclose(
+        out.reshape(-1), np.asarray(estimate_many(bank, cfg)), rtol=1e-6
+    )
+
+
+# ----------------------------------------------------------------------------
+# validation (estimate_device now checks shape/dtype like estimate)
+# ----------------------------------------------------------------------------
+
+
+def test_estimate_validates_shape_and_dtype():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    wrong_shape = jnp.zeros((100,), jnp.uint8)
+    wrong_dtype = jnp.zeros((cfg.m,), jnp.float32)
+    for fn in (hll.estimate, hll.estimate_device):
+        with pytest.raises(ValueError, match="registers"):
+            fn(wrong_shape, cfg)
+        with pytest.raises(ValueError, match="integer"):
+            fn(wrong_dtype, cfg)
+    with pytest.raises(ValueError):
+        estimate_many(jnp.zeros((4, 100), jnp.uint8), cfg)
+    with pytest.raises(ValueError):
+        estimate_many(jnp.zeros((4, cfg.m), jnp.float32), cfg)
+
+
+def test_estimate_rejects_out_of_range_register_values():
+    cfg = HLLConfig(p=8, hash_bits=64)
+    corrupt = np.zeros(cfg.m, np.uint8)
+    corrupt[0] = cfg.max_rank + 3
+    with pytest.raises(ValueError, match="max_rank"):
+        hll.estimate(jnp.asarray(corrupt), cfg)
+
+
+def test_corrupt_registers_cannot_leak_into_neighboring_batch():
+    """An out-of-range register value (only reachable via a corrupted blob)
+    must skew its own sketch at worst — never the adjacent bank entry."""
+    cfg = HLLConfig(p=8, hash_bits=64)
+    valid = _regs(cfg, 5_000, 0)
+    # too-large values would leak forward; negatives (a 0xFF blob byte read
+    # through a signed dtype) would leak backward — both must be dropped
+    for bad, corrupt_slot, valid_slot in [
+        (cfg.max_rank + 7, 0, 1),
+        (-1, 1, 0),
+    ]:
+        corrupt = np.asarray(valid).astype(np.int32)
+        corrupt[:4] = bad
+        rows = [None, None]
+        rows[corrupt_slot] = jnp.asarray(corrupt)
+        rows[valid_slot] = valid.astype(jnp.int32)
+        bank = jnp.stack(rows)
+        hists = np.asarray(register_histogram(bank, cfg))
+        # corrupt sketch: the 4 bad registers are dropped, not redistributed
+        assert hists[corrupt_slot].sum() == cfg.m - 4
+        # neighbor: bit-identical to its standalone histogram
+        np.testing.assert_array_equal(
+            hists[valid_slot], estlib.register_histogram_host(valid, cfg)
+        )
+        many = np.asarray(estimate_many(bank, cfg))
+        assert many[valid_slot] == pytest.approx(
+            float(hll.estimate_device(valid, cfg)), rel=1e-6
+        )
+
+
+# ----------------------------------------------------------------------------
+# registry + plan plumbing
+# ----------------------------------------------------------------------------
+
+
+def test_registry_contents_and_errors():
+    assert set(ESTIMATORS) <= set(available_estimators())
+    assert get_estimator("original").name == "original"
+    with pytest.raises(ValueError, match="unknown estimator"):
+        get_estimator("flajolet_martin")
+    with pytest.raises(ValueError, match="already registered"):
+        register_estimator(
+            "original", lambda c, cfg: 0.0, lambda c, cfg: c[..., 0]
+        )
+    with pytest.raises(ValueError, match="unknown estimator"):
+        hll.estimate(_regs(HLLConfig(p=8), 10, 0), HLLConfig(p=8), "nope")
+
+
+def test_plan_carries_estimator():
+    plan = ExecutionPlan(estimator="ertl_mle")
+    assert plan.validate().estimator == "ertl_mle"
+    with pytest.raises(ValueError, match="unknown estimator"):
+        ExecutionPlan(estimator="bogus").validate()
+
+
+def test_plugin_estimator_roundtrip():
+    """A plugged-in estimator is reachable through every dispatch layer."""
+    name = "const_fortytwo_test"
+    register_estimator(
+        name,
+        host=lambda counts, cfg: 42.0,
+        device=lambda counts, cfg: jnp.full(counts.shape[:-1], 42.0),
+    )
+    try:
+        cfg = HLLConfig(p=8, hash_bits=64)
+        regs = _regs(cfg, 1000, 0)
+        assert hll.estimate(regs, cfg, estimator=name) == 42.0
+        assert float(hll.estimate_device(regs, cfg, estimator=name)) == 42.0
+        bank = jnp.stack([regs, regs])
+        np.testing.assert_array_equal(
+            np.asarray(estimate_many(bank, cfg, estimator=name)), [42.0, 42.0]
+        )
+    finally:
+        # keep the process-global registry clean for every later test that
+        # iterates available_estimators() expecting only real estimators
+        estlib._ESTIMATORS.pop(name, None)
+    assert name not in available_estimators()
+
+
+# ----------------------------------------------------------------------------
+# carrier + setops integration
+# ----------------------------------------------------------------------------
+
+
+def test_carrier_estimator_dispatch():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    sk = HyperLogLog.of(jnp.arange(20_000, dtype=jnp.int32), cfg)
+    hist = np.asarray(sk.histogram())
+    assert hist.sum() == cfg.m
+    for name in ESTIMATORS:
+        est = sk.estimate(estimator=name)
+        assert abs(est - 20_000) / 20_000 < 3 * sk.standard_error
+        dev = float(sk.estimate_device(estimator=name))
+        assert abs(dev - est) / est < 1e-4
+
+
+@pytest.mark.parametrize("estimator", ESTIMATORS)
+def test_setops_estimator_param(estimator):
+    cfg = HLLConfig(p=12, hash_bits=64)
+    a = HyperLogLog.of(jnp.arange(0, 60_000, dtype=jnp.int32), cfg)
+    b = HyperLogLog.of(jnp.arange(40_000, 100_000, dtype=jnp.int32), cfg)
+    eu = setops.union_estimate(a, b, cfg, estimator=estimator)
+    assert abs(eu - 100_000) / 100_000 < 0.05
+    inter, err = a.intersection_estimate(b, estimator=estimator)
+    assert abs(inter - 20_000) <= max(3 * err, 8_000)
+    jac = a.jaccard(b, estimator=estimator)
+    assert abs(jac - 0.2) < 0.06

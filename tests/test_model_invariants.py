@@ -8,7 +8,6 @@ batch-independence of per-sequence computation.
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.configs import get_arch

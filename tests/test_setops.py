@@ -2,7 +2,6 @@
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.sketch import HLLConfig, HyperLogLog, setops

@@ -4,11 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_arch
 from repro.models import transformer
-from repro.optim.compress import compressed_psum, make_compressed_grad_reducer
+from repro.optim.compress import compressed_psum
 from repro.sharding import ctx as shardctx
 from repro.sharding import specs as shardspecs
 

@@ -1,11 +1,11 @@
 """StreamSketch telemetry + MoE router-collapse detection."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch
-from repro.sketch import HLLConfig
+from repro.sketch import ExecutionPlan, HLLConfig
 from repro.models import moe as moe_lib
 from repro.telemetry.sketchboard import StreamSketch
 
@@ -41,6 +41,56 @@ def test_board_serialize_roundtrip_including_empty():
     back = StreamSketch.deserialize(board.serialize())
     assert back.estimate("s") == board.estimate("s")
     assert back.report()["s"]["items_seen"] == 1000
+
+
+def test_report_batched_matches_exact():
+    """Default report() finalizes via one estimate_many dispatch; the
+    float32 batched readings must track the exact host finalizer."""
+    board = StreamSketch(HLLConfig(p=10, hash_bits=64))
+    rng = np.random.default_rng(7)
+    for i, n in enumerate((50, 4_000, 60_000)):
+        board.observe(f"s{i}", jnp.asarray(rng.integers(0, n, 20_000, np.int32)))
+    batched = board.report()
+    exact = board.report(exact=True)
+    assert set(batched) == set(exact)
+    for name in batched:
+        b, e = batched[name]["estimate"], exact[name]["estimate"]
+        assert abs(b - e) / max(e, 1.0) < 1e-4
+        assert batched[name]["items_seen"] == exact[name]["items_seen"]
+
+
+def test_report_estimator_from_plan_and_override():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    board = StreamSketch(cfg, plan=ExecutionPlan(estimator="ertl_improved"))
+    board.observe("s", jnp.arange(30_000, dtype=jnp.int32))
+    # plan's estimator is the default for report() and estimate()
+    want = board.stream("s").estimate("ertl_improved")
+    assert board.estimate("s") == want
+    assert abs(board.report()["s"]["estimate"] - want) / want < 1e-4
+    # per-call override wins over the plan
+    mle = board.stream("s").estimate("ertl_mle")
+    assert board.estimate("s", estimator="ertl_mle") == mle
+
+
+def test_deserialize_cfg_mismatch_raises():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    board = StreamSketch(cfg)
+    board.observe("s", jnp.arange(100, dtype=jnp.int32))
+    blobs = board.serialize()
+    with pytest.raises(ValueError, match="cfg mismatch"):
+        StreamSketch.deserialize(blobs, cfg=HLLConfig(p=12, hash_bits=64))
+    # matching cfg (or no cfg) still round-trips
+    assert StreamSketch.deserialize(blobs, cfg=cfg).estimate("s") == \
+        board.estimate("s")
+    assert StreamSketch.deserialize(blobs).estimate("s") == board.estimate("s")
+
+
+def test_merge_from_cfg_mismatch_raises():
+    a = StreamSketch(HLLConfig(p=10, hash_bits=64))
+    b = StreamSketch(HLLConfig(p=12, hash_bits=64))
+    b.observe("s", jnp.arange(10, dtype=jnp.int32))
+    with pytest.raises(ValueError, match="different configs"):
+        a.merge_from(b)
 
 
 def test_moe_assignment_stream_detects_collapse():

@@ -63,7 +63,6 @@ def test_deadline_exported():
 
 def test_loop_integration_snapshot_on_straggle(tmp_path):
     """An injected straggler step triggers an immediate checkpoint."""
-    import jax
     from repro.checkpoint import ckpt
     from repro.configs import get_arch
     from repro.sketch import HLLConfig
