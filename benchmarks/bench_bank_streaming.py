@@ -1,0 +1,129 @@
+"""Table-4-style batched multi-tenant ingest: update_many vs per-sketch loop.
+
+The paper's Tab. IV measures sustained single-sketch ingest; the bank-scale
+question (ROADMAP: per-user cardinality for millions of users) is how fast a
+keyed stream lands in B sketches at once.  This bench routes one uniform
+keyed stream into a (B, m) SketchBank two ways:
+
+* ``update_many`` — ONE fused keyed scatter-max per chunk (DESIGN.md §9),
+* the per-sketch loop — route on the host, then one ``hll.update`` dispatch
+  per bank row (the pre-bank shape of the ingest path),
+
+verifies they are bit-identical, and reports items/sec at B in {1, 64, 1024}
+plus the batched-vs-loop speedup.  Writes ``BENCH_bank_streaming.json`` so
+the ingest-side perf trajectory populates across PRs, next to the
+finalization-side ``BENCH_estimators.json``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.sketch import ExecutionPlan, HLLConfig, SketchBank, hll
+
+JSON_PATH = "BENCH_bank_streaming.json"
+BANK_SIZES = (1, 64, 1024)
+CHUNKS = 4
+
+
+def _grouped(items: np.ndarray, keys: np.ndarray, rows: int) -> list:
+    """Host-side routing for the loop path: items[keys == b], edge-padded.
+
+    Every non-empty group is padded to one common length by repeating its
+    last element — idempotent on the max-lattice, so the loop stays
+    bit-identical while compiling a single update shape.
+    """
+    groups = [items[keys == b] for b in range(rows)]
+    width = max(g.size for g in groups)
+    out = []
+    for g in groups:
+        if g.size == 0:
+            out.append(None)
+        elif g.size < width:
+            out.append(np.pad(g, (0, width - g.size), mode="edge"))
+        else:
+            out.append(g)
+    return out
+
+
+def run(full: bool = False, smoke: bool = False):
+    cfg = HLLConfig(p=10, hash_bits=64)
+    bank_sizes = (1, 8) if smoke else BANK_SIZES
+    n = 1 << (12 if smoke else (20 if full else 18))
+    chunks = 1 if smoke else CHUNKS
+
+    rng = np.random.default_rng(0)
+    results = []
+    for rows in bank_sizes:
+        items_np = rng.integers(0, 2**31, (chunks, n), dtype=np.int32)
+        keys_np = rng.integers(0, rows, (chunks, n), dtype=np.int32)
+        items = jnp.asarray(items_np)
+        keys = jnp.asarray(keys_np)
+        plan = ExecutionPlan(backend="jnp")
+
+        bank = SketchBank.empty(rows, cfg)
+
+        def ingest_batched(b, ks, xs):
+            for c in range(chunks):
+                b = b.update_many(ks[c], xs[c], plan)
+            return b.registers
+
+        batched_s = time_fn(ingest_batched, bank, keys, items)
+        batched_regs = np.asarray(ingest_batched(bank, keys, items))
+
+        update = jax.jit(lambda r, x: hll.update(r, x, cfg))
+        grouped = [_grouped(items_np[c], keys_np[c], rows) for c in range(chunks)]
+
+        def ingest_loop(groups):
+            regs = [hll.init_registers(cfg) for _ in range(rows)]
+            for chunk_groups in groups:
+                for b, g in enumerate(chunk_groups):
+                    if g is not None:
+                        regs[b] = update(regs[b], jnp.asarray(g))
+            return jnp.stack(regs)
+
+        loop_s = time_fn(ingest_loop, grouped, warmup=1, iters=3)
+        loop_regs = np.asarray(ingest_loop(grouped))
+
+        identical = bool(np.array_equal(batched_regs, loop_regs))
+        if not identical:
+            # the documented gate: CI bench-smoke must fail on divergence
+            raise AssertionError(
+                f"update_many diverged from the per-sketch loop at B={rows}"
+            )
+        total = chunks * n
+        row = dict(
+            B=rows,
+            items_per_chunk=n,
+            chunks=chunks,
+            batched_items_per_s=total / batched_s,
+            loop_items_per_s=total / loop_s,
+            speedup=loop_s / batched_s,
+            bit_identical=identical,
+        )
+        results.append(row)
+        emit(
+            "bank_streaming",
+            batched_s / chunks * 1e6,
+            f"B={rows} batched={total / batched_s:,.0f}items/s "
+            f"loop={total / loop_s:,.0f}items/s "
+            f"speedup={loop_s / batched_s:.1f}x identical={identical}",
+        )
+
+    out = {
+        "config": {"p": cfg.p, "hash_bits": cfg.hash_bits, "m": cfg.m},
+        "banks": results,
+    }
+    if not smoke:
+        with open(JSON_PATH, "w") as f:
+            json.dump(out, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -35,14 +35,19 @@ def _sketch(cfg, n, seed):
     return regs, len(np.unique(items))
 
 
-def run(full: bool = False, json_path: str = JSON_PATH):
-    cfg = HLLConfig(p=14, hash_bits=64)
-    cardinalities = [1_000, 50_000, 1_000_000] if full else [1_000, 50_000]
+def run(full: bool = False, smoke: bool = False, json_path: str = JSON_PATH):
+    cfg = HLLConfig(p=10 if smoke else 14, hash_bits=64)
+    if smoke:
+        cardinalities = [1_000, 20_000]
+    elif full:
+        cardinalities = [1_000, 50_000, 1_000_000]
+    else:
+        cardinalities = [1_000, 50_000]
 
     # accuracy sweeps reuse one register bank per cardinality
     banks = {n: _sketch(cfg, n, seed=n) for n in cardinalities}
     # latency bank: BANK_SIZE mid-range sketches stacked (B, m)
-    lat_regs, _ = banks[50_000]
+    lat_regs, _ = banks[cardinalities[-1] if smoke else 50_000]
     stacked = jnp.stack([lat_regs] * BANK_SIZE)
 
     out = {
@@ -86,8 +91,9 @@ def run(full: bool = False, json_path: str = JSON_PATH):
             f"errmax={worst:.4f}",
         )
 
-    with open(json_path, "w") as f:
-        json.dump(out, f, indent=2)
+    if not smoke:  # smoke runs must not clobber the tracked perf trajectory
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
     return out
 
 

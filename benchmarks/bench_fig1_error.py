@@ -23,13 +23,19 @@ CARDINALITIES = [1_000, 10_000, 40_000, 160_000, 640_000, 2_560_000]
 TRIALS = 3
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     rows = []
-    grid = [(14, 32), (14, 64), (16, 32), (16, 64)]
+    grid = [(14, 64)] if smoke else [(14, 32), (14, 64), (16, 32), (16, 64)]
+    if smoke:
+        cardinalities = CARDINALITIES[:2]
+    elif full:
+        cardinalities = CARDINALITIES
+    else:
+        cardinalities = CARDINALITIES[:5]
     estimators = available_estimators()
     for p, h in grid:
         cfg = HLLConfig(p=p, hash_bits=h)
-        for n in CARDINALITIES if full else CARDINALITIES[:5]:
+        for n in cardinalities:
             errs = {name: [] for name in estimators}
             for t in range(TRIALS):
                 rng = np.random.default_rng(1000 * t + n % 997)
@@ -52,7 +58,9 @@ def run(full: bool = False):
     # timing of the full sketch path at the largest n
     cfg = HLLConfig(p=16, hash_bits=64)
     items = jnp.asarray(
-        np.random.default_rng(0).integers(0, 2**32, 1 << 20, dtype=np.uint32)
+        np.random.default_rng(0).integers(
+            0, 2**32, 1 << (12 if smoke else 20), dtype=np.uint32
+        )
     )
     regs = hll.init_registers(cfg)
     sec = time_fn(lambda r, x: hll.update(r, x, cfg), regs, items)

@@ -21,29 +21,30 @@ N_ITEMS = 1 << 21  # 2M items, 8 MiB
 PIPELINES = (1, 2, 4, 8, 16)
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     cfg = HLLConfig(p=16, hash_bits=64)
+    n_items = 1 << 12 if smoke else N_ITEMS
     items = jnp.asarray(
-        np.random.default_rng(0).integers(0, 2**32, N_ITEMS, dtype=np.uint32)
+        np.random.default_rng(0).integers(0, 2**32, n_items, dtype=np.uint32)
     )
     regs = hll.init_registers(cfg)
 
     base_sec = None
     rows = []
-    for k in PIPELINES:
+    for k in (1, 2) if smoke else PIPELINES:
         fn = lambda r, x, k=k: update_registers(
                 r, x, cfg, ExecutionPlan(backend="jnp", pipelines=k)
             )
         sec = time_fn(fn, regs, items)
-        gbps = N_ITEMS * 4 / sec / 1e9
+        gbps = n_items * 4 / sec / 1e9
         if base_sec is None:
             base_sec = sec
-        theoretical = N_ITEMS * 4 / (base_sec / k) / 1e9
+        theoretical = n_items * 4 / (base_sec / k) / 1e9
         rows.append(dict(pipelines=k, gbytes_s=gbps, theoretical=theoretical))
         emit(
             "fig4a_scaling", sec * 1e6,
             f"pipelines={k} measured={gbps:.3f}GB/s "
-            f"theoretical={theoretical:.3f}GB/s items_s={N_ITEMS/sec:,.0f}",
+            f"theoretical={theoretical:.3f}GB/s items_s={n_items/sec:,.0f}",
         )
     return rows
 

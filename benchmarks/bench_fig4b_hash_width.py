@@ -22,9 +22,10 @@ from repro.sketch import HLLConfig
 N = 1 << 21
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
+    n = 1 << 12 if smoke else N
     items = jnp.asarray(
-        np.random.default_rng(0).integers(0, 2**32, N, dtype=np.uint32)
+        np.random.default_rng(0).integers(0, 2**32, n, dtype=np.uint32)
     )
     rows = []
 
@@ -34,10 +35,10 @@ def run(full: bool = False):
     s64 = time_fn(h64, items)
     ratio = s32 / s64
     rows.append(dict(hash32_s=s32, hash64_s=s64, rate_ratio=ratio))
-    emit("fig4b_hash32", s32 * 1e6, f"items_s={N/s32:,.0f}")
+    emit("fig4b_hash32", s32 * 1e6, f"items_s={n/s32:,.0f}")
     emit(
         "fig4b_hash64", s64 * 1e6,
-        f"items_s={N/s64:,.0f} rate_vs_32bit={ratio:.2f} (paper CPU: ~0.60)",
+        f"items_s={n/s64:,.0f} rate_vs_32bit={ratio:.2f} (paper CPU: ~0.60)",
     )
 
     # end-to-end sketch update, both widths (aggregation included)
@@ -48,7 +49,7 @@ def run(full: bool = False):
         rows.append(dict(bits=bits, update_s=sec))
         emit(
             f"fig4b_update{bits}", sec * 1e6,
-            f"GB_s={N*4/sec/1e9:.3f} items_s={N/sec:,.0f}",
+            f"GB_s={n*4/sec/1e9:.3f} items_s={n/sec:,.0f}",
         )
     return rows
 

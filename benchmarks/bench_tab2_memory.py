@@ -16,7 +16,8 @@ from repro.sketch import HLLConfig
 PAPER_KIB = {(14, 32): 10, (14, 64): 12, (16, 32): 40, (16, 64): 48}
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
+    # analytic table: already tiny, smoke changes nothing
     rows = []
     for (p, h), paper_kib in PAPER_KIB.items():
         cfg = HLLConfig(p=p, hash_bits=h)

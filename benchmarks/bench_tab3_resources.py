@@ -26,10 +26,10 @@ N = 327_680  # divisible by every pipeline count incl. the paper's 10
 PIPELINES = (1, 2, 4, 8, 10, 16)
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     cfg = HLLConfig(p=16, hash_bits=64)
     rows = []
-    for k in PIPELINES:
+    for k in (1, 2) if smoke else PIPELINES:
         fn = jax.jit(
             lambda r, x, k=k: update_registers(
                 r, x, cfg, ExecutionPlan(backend="jnp", pipelines=k)

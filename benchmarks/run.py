@@ -1,6 +1,8 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` widens sweeps.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` widens sweeps;
+``--smoke`` shrinks every bench to seconds-scale sizes (the CI bench-smoke
+job runs this, so benchmark scripts can no longer rot unexecuted).
 
   fig1  error vs cardinality, (p,H) x estimator sweep    (paper Fig. 1)
   fig4a throughput scaling vs #pipelines                 (paper Fig. 4a)
@@ -10,44 +12,66 @@ Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` widens sweeps.
   tab4  sustained streaming throughput + finalization    (paper Tab. IV)
   estimators  accuracy + finalization latency per estimator, single vs
               batched; also writes BENCH_estimators.json
+  bank  batched multi-tenant ingest (update_many vs per-sketch loop);
+        also writes BENCH_bank_streaming.json
+
+A failing sub-benchmark no longer aborts the rest of the suite: every bench
+runs, every failure is reported, and the process exits non-zero at the end,
+so one broken bench can't mask another and the CI smoke job still gates.
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
+import sys
+import traceback
+
+# bench name -> module under benchmarks/; imported lazily per bench so a
+# module that rots at import level fails alone instead of masking the rest
+SUITE = {
+    "fig1": "bench_fig1_error",
+    "fig4a": "bench_fig4a_scaling",
+    "fig4b": "bench_fig4b_hash_width",
+    "tab2": "bench_tab2_memory",
+    "tab3": "bench_tab3_resources",
+    "tab4": "bench_tab4_streaming",
+    "estimators": "bench_estimators",
+    "bank": "bench_bank_streaming",
+}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="widen sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: just prove every bench still runs")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig4a,fig4b,tab2,tab3,tab4,"
-                         "estimators")
+                         "estimators,bank")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
 
-    from benchmarks import (
-        bench_estimators,
-        bench_fig1_error,
-        bench_fig4a_scaling,
-        bench_fig4b_hash_width,
-        bench_tab2_memory,
-        bench_tab3_resources,
-        bench_tab4_streaming,
-    )
+    selected = args.only.split(",") if args.only else list(SUITE)
+    unknown = [name for name in selected if name not in SUITE]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; known: {sorted(SUITE)}")
 
-    suite = {
-        "fig1": bench_fig1_error.run,
-        "fig4a": bench_fig4a_scaling.run,
-        "fig4b": bench_fig4b_hash_width.run,
-        "tab2": bench_tab2_memory.run,
-        "tab3": bench_tab3_resources.run,
-        "tab4": bench_tab4_streaming.run,
-        "estimators": bench_estimators.run,
-    }
-    selected = args.only.split(",") if args.only else list(suite)
     print("name,us_per_call,derived")
+    failures = []
     for name in selected:
-        suite[name](full=args.full)
+        try:
+            mod = importlib.import_module(f"benchmarks.{SUITE[name]}")
+            mod.run(full=args.full, smoke=args.smoke)
+        except Exception:
+            failures.append(name)
+            print(f"BENCH-FAILED,{name}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) failed: {failures}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

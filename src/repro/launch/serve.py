@@ -15,11 +15,14 @@ import time
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.configs import ARCH_IDS, get_arch
 from repro.sketch import (
     DEFAULT_ESTIMATOR,
     ExecutionPlan,
     HLLConfig,
+    SketchBank,
     available_estimators,
 )
 from repro.models import transformer
@@ -91,6 +94,26 @@ def main():
             f"  sketch[{name}] distinct~{row['estimate']:.0f} "
             f"seen={row['items_seen']} dup={row['duplication']:.2f}"
         )
+
+    # per-request distinct-token telemetry: one SketchBank row per request,
+    # every (prompt + generated) token routed by its request index and
+    # ingested with ONE keyed update_many dispatch (DESIGN.md §9); the bank
+    # shares the board's config + plan so both readings stay comparable
+    bank = SketchBank.empty(B, board.cfg)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    req_keys = jnp.broadcast_to(rows, prompts.shape)
+    gen_keys = jnp.broadcast_to(rows, out.shape)
+    bank = bank.update_many(
+        jnp.concatenate([req_keys.reshape(-1), gen_keys.reshape(-1)]),
+        jnp.concatenate([prompts.reshape(-1), out.reshape(-1)]),
+        board.plan,
+    )
+    per_req = np.asarray(bank.estimate_many(args.estimator))
+    print(
+        f"  bank[{B} requests] distinct tokens/request "
+        f"min={per_req.min():.0f} mean={per_req.mean():.0f} "
+        f"max={per_req.max():.0f} (one update_many dispatch)"
+    )
 
 
 if __name__ == "__main__":

@@ -15,6 +15,13 @@ Functional register-level API (for jitted datapaths that carry raw (m,)
 arrays in their state pytrees): init_registers / update_registers /
 datapath_tap / merge / estimate / estimate_device / estimate_many.
 
+Multi-tenant banks (DESIGN.md §9): ``SketchBank`` stacks B same-config
+sketches into one (B, m) pytree and ``update_many(bank, keys, items,
+plan)`` routes a keyed stream into the whole bank with one fused
+scatter-max — the ingest-side counterpart of ``estimate_many``.  Bank
+ingest paths register per backend via ``register_bank_backend`` and are
+bit-identical to the per-sketch update loop (tests/test_bank.py).
+
 Estimation (paper phase 4) dispatches through a pluggable registry over the
 register-value histogram (repro/sketch/estimators.py, DESIGN.md §8):
 ``estimator="original" | "ertl_improved" | "ertl_mle"`` on every estimate
@@ -46,10 +53,13 @@ from repro.sketch.plan import (  # noqa: F401
     DEFAULT_PLAN,
     ExecutionPlan,
     available_backends,
+    available_bank_backends,
     example_plans,
     get_backend,
+    get_bank_backend,
     reference_plan,
     register_backend,
+    register_bank_backend,
 )
 
 from repro.sketch.estimators import (  # noqa: F401
@@ -70,6 +80,11 @@ from repro.sketch.estimators import (  # noqa: F401
 from repro.sketch import backends  # noqa: F401  (registration side effect)
 from repro.sketch.dispatch import datapath_tap, update_registers  # noqa: F401
 from repro.sketch.carrier import HyperLogLog  # noqa: F401
+from repro.sketch.bank import (  # noqa: F401
+    SketchBank,
+    update_bank_registers,
+    update_many,
+)
 from repro.sketch.setops import (  # noqa: F401
     difference_estimate,
     intersection_estimate,

@@ -28,7 +28,12 @@ import jax.numpy as jnp
 
 from repro.sketch import hll
 from repro.sketch.hll import HLLConfig
-from repro.sketch.plan import DEFAULT_PIPELINES, ExecutionPlan, register_backend
+from repro.sketch.plan import (
+    DEFAULT_PIPELINES,
+    ExecutionPlan,
+    register_backend,
+    register_bank_backend,
+)
 
 # The kernel modules themselves import repro.sketch.hll, so they are loaded
 # lazily (first wrapper call) rather than at module import — this keeps
@@ -45,6 +50,13 @@ def _kernels():
 
     assert _hash.LANES == _fold.LANES == _fused.LANES == LANES
     return _hash, _fold, _fused
+
+
+def _bank_kernel_module():
+    from repro.kernels import bank_scatter as _bank
+
+    assert _bank.LANES == LANES
+    return _bank
 
 
 def _default_interpret() -> bool:
@@ -225,4 +237,144 @@ def _pallas_backend(registers, items, cfg: HLLConfig, plan: ExecutionPlan):
 def _pallas_pipelined_backend(registers, items, cfg: HLLConfig, plan: ExecutionPlan):
     return pipelined_update(
         registers, items, cfg, plan.pipelines, interpret=plan.interpret
+    )
+
+
+# ----------------------------------------------------------------------------
+# SketchBank ingest paths (keyed scatter-max; DESIGN.md §9)
+# ----------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def bank_update_jnp(
+    registers: jnp.ndarray,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+) -> jnp.ndarray:
+    """Reference bank ingest: ONE segment-max over (key, bucket) cells.
+
+    Row b's bucket idx lands in flattened segment ``b*m + idx`` — the same
+    offset trick the batched register histogram uses (DESIGN.md §8), so the
+    whole (B, m) bank aggregates a keyed stream with a single fused scatter.
+    Out-of-range keys route to a discarded trailing segment (never clamped
+    into a neighboring row); ``pipelines`` is ignored because the scatter is
+    already one fused op — there is no fold to parallelize.
+
+    The flattened cell space must fit int32 (TPU has no 64-bit datapath):
+    banks with B*m >= 2^31 would silently wrap the segment ids, so they are
+    rejected loudly — shard such fleets across banks (or devices) instead.
+    """
+    bank_rows, m = registers.shape
+    if bank_rows * m >= 1 << 31:
+        raise ValueError(
+            f"bank cell space B*m = {bank_rows}*{m} overflows int32 segment "
+            f"ids; split the fleet across multiple banks or mesh shards"
+        )
+    idx, rank = hll.hash_index_rank(items, cfg)
+    valid = (keys >= 0) & (keys < bank_rows)
+    seg = jnp.where(valid, keys * m + idx, bank_rows * m)
+    new = jax.ops.segment_max(
+        jnp.where(valid, rank, 0).astype(hll.REGISTER_DTYPE),
+        seg,
+        num_segments=bank_rows * m + 1,
+    )
+    folded = new[: bank_rows * m].reshape(bank_rows, m)
+    return jnp.maximum(registers, folded)
+
+
+def bank_update(
+    registers: jnp.ndarray,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+    *,
+    row_block: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Pallas bank ingest: hash_rank kernel + the bank_scatter kernel.
+
+    The (key, bucket, rank) stream is computed once by the fused hash
+    kernel; the scatter kernel then tiles the BANK over row blocks the way
+    ``bucket_fold`` tiles m, keeping ``row_block * m`` registers VMEM-
+    resident per sweep.  Small-m banks only (the hll_fused trade); the
+    default row_block picks the largest block under the VMEM cell cap.
+    """
+    _bank = _bank_kernel_module()
+    _hash, _, _ = _kernels()
+    interpret = _default_interpret() if interpret is None else interpret
+    bank_rows, m = registers.shape
+    if m > _bank.MAX_BLOCK_CELLS:
+        raise ValueError(
+            f"pallas bank ingest supports m <= {_bank.MAX_BLOCK_CELLS} "
+            f"(p <= 12); use the jnp scatter path for m={m}"
+        )
+    flat_keys = keys.reshape(-1).astype(jnp.int32)
+    flat_items = items.reshape(-1)
+    valid = (flat_keys >= 0) & (flat_keys < bank_rows)
+    # one padding serves both kernels: the hash tile (64 rows) is a
+    # multiple of the scatter tile (8 rows), so the hashed stream feeds the
+    # scatter kernel with no slice/re-pad round-trip in between
+    assert (_hash.DEFAULT_BLOCK_ROWS * LANES) % (
+        _bank.DEFAULT_BLOCK_ROWS * LANES
+    ) == 0
+    tile_items = _hash.DEFAULT_BLOCK_ROWS * LANES
+    items_t, _ = _pad_to_tiles(flat_items, tile_items)
+    keys_t, _ = _pad_to_tiles(jnp.where(valid, flat_keys, 0), tile_items)
+    valid_t, _ = _pad_to_tiles(valid.astype(jnp.int32), tile_items)
+    idx_t, rank_t = _hash.hash_rank(
+        items_t, cfg, block_rows=_hash.DEFAULT_BLOCK_ROWS, interpret=interpret
+    )
+    # same drop rule as the jnp path: padding and foreign keys are masked
+    # to rank 0 (the bucket-max identity), never clamped into a neighbor
+    rank_t = jnp.where(valid_t > 0, rank_t, 0)
+
+    if row_block is None:
+        row_block = max(1, _bank.MAX_BLOCK_CELLS // m)
+    row_block = min(row_block, bank_rows)
+    padded_rows = -(-bank_rows // row_block) * row_block
+    regs32 = registers.astype(jnp.int32)
+    if padded_rows != bank_rows:
+        # phantom rows receive nothing (keys < bank_rows) and are sliced off
+        regs32 = jnp.pad(regs32, ((0, padded_rows - bank_rows), (0, 0)))
+    out = _bank.bank_scatter_max(
+        regs32,
+        keys_t,
+        idx_t,
+        rank_t,
+        m=m,
+        row_block=row_block,
+        interpret=interpret,
+    )
+    return out[:bank_rows].astype(hll.REGISTER_DTYPE)
+
+
+@register_bank_backend("jnp")
+def _jnp_bank_backend(registers, keys, items, cfg: HLLConfig, plan: ExecutionPlan):
+    return bank_update_jnp(registers, keys, items, cfg)
+
+
+@register_bank_backend("pallas")
+def _pallas_bank_backend(registers, keys, items, cfg: HLLConfig, plan: ExecutionPlan):
+    # one datapath, widest row block under the VMEM cap
+    return bank_update(registers, keys, items, cfg, interpret=plan.interpret)
+
+
+@register_bank_backend("pallas_pipelined")
+def _pallas_pipelined_bank_backend(
+    registers, keys, items, cfg: HLLConfig, plan: ExecutionPlan
+):
+    # tile the bank over k pipelines (paper Fig. 3 applied to rows): each
+    # grid block owns ceil(B/k) sketches, still under the VMEM cell cap
+    rows = registers.shape[0]
+    row_block = max(1, -(-rows // plan.pipelines))
+    _bank = _bank_kernel_module()
+    row_block = min(row_block, max(1, _bank.MAX_BLOCK_CELLS // cfg.m))
+    return bank_update(
+        registers,
+        keys,
+        items,
+        cfg,
+        row_block=row_block,
+        interpret=plan.interpret,
     )

@@ -1,0 +1,295 @@
+"""SketchBank: a stacked (B, m) register bank with keyed batched ingestion.
+
+PR 2 batch-parallelized finalization (``estimate_many`` over a (B, m) bank);
+this module is its ingest-side counterpart.  A ``SketchBank`` carries B
+sketches that share one static ``HLLConfig`` as a single frozen pytree —
+(B, m) uint8 registers plus a (B, 2) uint32 limb counter per row — and
+``update_many(bank, keys, items, plan)`` routes every item to its owning
+row by key and applies the whole batch with ONE fused scatter-max, instead
+of a python loop over sketches.  This is the paper's p-pipeline merge-fold
+turned multi-tenant: the register bank is the only state that matters
+(Ertl, arXiv:1702.01284), so the ingest path operates on whole banks the
+same way memory-efficient FPGA sketch accelerators time-multiplex one
+datapath over many flows (arXiv:2504.16896).
+
+Key-routing contract (DESIGN.md §9):
+
+* ``keys`` and ``items`` flatten to the same length; item i belongs to the
+  sketch at row ``keys[i]``.
+* valid keys are ``0 <= key < len(bank)``; out-of-range keys are DROPPED
+  (their rank is routed to a discarded scatter cell), never clamped into a
+  neighboring row — the ingest mirror of the histogram no-leak guard.
+* every registered bank backend is bit-identical to the per-sketch loop
+  ``for b: bank[b].update(items[keys == b])`` (tests/test_bank.py).
+
+Per-row counters count *observations* per key exactly (dropped keys do not
+count), so ``bank.row(b)`` round-trips to the same ``HyperLogLog`` the loop
+would have produced, counter included.  Merge/serialization follow the
+carrier's max-lattice and wire-format rules (DESIGN.md §6, §7) with a bank
+header (magic ``RHLB``) over densely packed rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sketch import hll, u64 as u64lib
+from repro.sketch.carrier import HyperLogLog
+from repro.sketch.dispatch import mesh_fold
+from repro.sketch.hll import HLLConfig
+from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, get_bank_backend
+
+_BANK_HEADER = struct.Struct("<4sBBBBQI")  # magic, ver, p, H, flags, seed, B
+_BANK_MAGIC = b"RHLB"
+_BANK_VERSION = 1
+_ROW_COUNT = struct.Struct("<Q")
+
+
+def _counter_add_rows(limbs: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """(B, 2) uint32 limb pairs + (B,) non-negative counts, exact to 2^64."""
+    add = u64lib.U64(jnp.zeros_like(counts, jnp.uint32), counts.astype(jnp.uint32))
+    s = u64lib.add(u64lib.U64(limbs[:, 0], limbs[:, 1]), add)
+    return jnp.stack([s.hi, s.lo], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# functional dispatch (mirrors sketch.dispatch.update_registers)
+# ----------------------------------------------------------------------------
+
+
+def update_bank_registers(
+    registers: jnp.ndarray,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: HLLConfig,
+    plan: Optional[ExecutionPlan] = None,
+) -> jnp.ndarray:
+    """Keyed scatter-max of ``items`` into a raw (B, m) register bank.
+
+    The bank-capable backend registered under ``plan.backend`` runs the
+    fused update; placement="mesh" shards the (keys, items) pair through
+    the same :func:`repro.sketch.dispatch.mesh_fold` rule as the
+    single-sketch path (per-device partial banks + one lax.pmax fold,
+    edge-padding for non-divisible streams).
+    """
+    plan = (DEFAULT_PLAN if plan is None else plan).validate()
+    backend = get_bank_backend(plan.backend)
+    flat_keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
+    flat_items = jnp.asarray(items).reshape(-1)
+    if flat_keys.shape[0] != flat_items.shape[0]:
+        raise ValueError(
+            f"keys ({flat_keys.shape[0]}) and items ({flat_items.shape[0]}) "
+            f"must flatten to the same length"
+        )
+    if flat_items.shape[0] == 0:
+        return registers
+    if plan.placement == "local":
+        return backend(registers, flat_keys, flat_items, cfg, plan)
+    return mesh_fold(
+        plan,
+        registers,
+        (flat_keys, flat_items),
+        lambda regs, ks, xs: backend(regs, ks, xs, cfg, plan),
+    )
+
+
+# ----------------------------------------------------------------------------
+# the carrier
+# ----------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SketchBank:
+    """B same-config sketches as one pytree: the multi-tenant carrier."""
+
+    registers: jnp.ndarray  # (B, m) uint8
+    n_items: jnp.ndarray  # (B, 2) uint32 limb pairs, exact per-row counts
+    cfg: HLLConfig = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def empty(cls, rows: int, cfg: Optional[HLLConfig] = None) -> "SketchBank":
+        cfg = cfg or HLLConfig()
+        if rows < 1:
+            raise ValueError(f"a bank needs at least one row, got {rows}")
+        return cls(
+            jnp.zeros((rows, cfg.m), hll.REGISTER_DTYPE),
+            jnp.zeros((rows, 2), jnp.uint32),
+            cfg,
+        )
+
+    @classmethod
+    def from_sketches(cls, sketches: Sequence[HyperLogLog]) -> "SketchBank":
+        """Stack same-config carriers into one bank (counters preserved)."""
+        if not sketches:
+            raise ValueError("from_sketches needs at least one sketch")
+        cfg = sketches[0].cfg
+        for sk in sketches[1:]:
+            if sk.cfg != cfg:
+                raise ValueError(f"bank rows must share one config: {sk.cfg} vs {cfg}")
+        return cls(
+            jnp.stack([sk.registers for sk in sketches]),
+            jnp.stack([sk.n_items for sk in sketches]),
+            cfg,
+        )
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return int(self.registers.shape[0])
+
+    def row(self, i: int) -> HyperLogLog:
+        """Row ``i`` as a standalone carrier (registers + exact counter)."""
+        rows = len(self)
+        if not -rows <= i < rows:
+            # jnp indexing would silently clamp and hand back the edge row
+            raise IndexError(f"row {i} out of range for a {rows}-row bank")
+        return HyperLogLog(self.registers[i], self.n_items[i], self.cfg)
+
+    def to_sketches(self) -> list:
+        return [self.row(i) for i in range(len(self))]
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(B,) exact per-row observation counts as uint64."""
+        limbs = np.asarray(self.n_items)
+        hi = limbs[:, 0].astype(np.uint64)
+        lo = limbs[:, 1].astype(np.uint64)
+        return (hi << np.uint64(32)) | lo
+
+    # ------------------------------------------------------------------
+    # aggregation (paper phase 3, bank-wide)
+    # ------------------------------------------------------------------
+
+    def update_many(
+        self,
+        keys: jnp.ndarray,
+        items: jnp.ndarray,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> "SketchBank":
+        """Route each item to row ``keys[i]`` and apply one fused update."""
+        flat_keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
+        regs = update_bank_registers(self.registers, flat_keys, items, self.cfg, plan)
+        rows = len(self)
+        # count only the observations that actually landed (dropped keys
+        # must not inflate a row's exact counter)
+        routed = jnp.where((flat_keys >= 0) & (flat_keys < rows), flat_keys, rows)
+        counts = jnp.bincount(routed, length=rows + 1)[:rows]
+        return dataclasses.replace(
+            self,
+            registers=regs,
+            n_items=_counter_add_rows(self.n_items, counts),
+        )
+
+    def merge(self, other: "SketchBank") -> "SketchBank":
+        """Row-wise Merge-buckets fold; counters add exactly."""
+        if self.cfg != other.cfg:
+            raise ValueError(
+                f"cannot merge banks with different configs: "
+                f"{self.cfg} vs {other.cfg}"
+            )
+        if len(self) != len(other):
+            raise ValueError(
+                f"cannot merge banks of different sizes: "
+                f"{len(self)} vs {len(other)} rows"
+            )
+        limbs = u64lib.add(
+            u64lib.U64(self.n_items[:, 0], self.n_items[:, 1]),
+            u64lib.U64(other.n_items[:, 0], other.n_items[:, 1]),
+        )
+        return dataclasses.replace(
+            self,
+            registers=jnp.maximum(self.registers, other.registers),
+            n_items=jnp.stack([limbs.hi, limbs.lo], axis=-1),
+        )
+
+    __or__ = merge
+
+    # ------------------------------------------------------------------
+    # estimation (paper phase 4, batched)
+    # ------------------------------------------------------------------
+
+    def estimate_many(self, estimator: Optional[str] = None) -> jnp.ndarray:
+        """(B,) float32 estimates in one jitted dispatch (DESIGN.md §8)."""
+        from repro.sketch import estimators as _estimators
+
+        return _estimators.estimate_many(self.registers, self.cfg, estimator=estimator)
+
+    def estimate(self, i: int, estimator: Optional[str] = None) -> float:
+        """Exact host-side estimate of one row."""
+        return self.row(i).estimate(estimator)
+
+    # ------------------------------------------------------------------
+    # serialization (DESIGN.md §7, bank framing)
+    # ------------------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """20-byte bank header + B uint64 counts + B*m register bytes."""
+        header = _BANK_HEADER.pack(
+            _BANK_MAGIC,
+            _BANK_VERSION,
+            self.cfg.p,
+            self.cfg.hash_bits,
+            0,
+            self.cfg.seed,
+            len(self),
+        )
+        counts = self.counts.astype("<u8").tobytes()
+        regs = np.asarray(self.registers, dtype=np.uint8)
+        return header + counts + regs.tobytes()
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "SketchBank":
+        if len(data) < _BANK_HEADER.size:
+            raise ValueError(f"truncated bank: {len(data)} bytes")
+        magic, version, p, hash_bits, _flags, seed, rows = _BANK_HEADER.unpack(
+            data[: _BANK_HEADER.size]
+        )
+        if magic != _BANK_MAGIC:
+            raise ValueError(f"bad magic {magic!r}; not a serialized bank")
+        if version != _BANK_VERSION:
+            raise ValueError(f"unsupported bank version {version}")
+        if rows < 1:
+            raise ValueError(f"bank header claims {rows} rows")
+        cfg = HLLConfig(p=p, hash_bits=hash_bits, seed=seed)
+        counts_end = _BANK_HEADER.size + rows * _ROW_COUNT.size
+        expected = counts_end + rows * cfg.m
+        if len(data) != expected:
+            raise ValueError(
+                f"bank payload is {len(data)} bytes, expected {expected} "
+                f"for {rows} rows of m={cfg.m}"
+            )
+        raw_counts = np.frombuffer(data[_BANK_HEADER.size : counts_end], dtype="<u8")
+        limbs = np.stack(
+            [(raw_counts >> 32).astype(np.uint32), raw_counts.astype(np.uint32)],
+            axis=-1,
+        )
+        regs = np.frombuffer(data[counts_end:], dtype=np.uint8).reshape(rows, cfg.m)
+        return cls(jnp.asarray(regs.copy()), jnp.asarray(limbs), cfg)
+
+
+# ----------------------------------------------------------------------------
+# the batched entry point named by the roadmap
+# ----------------------------------------------------------------------------
+
+
+def update_many(
+    bank: SketchBank,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    plan: Optional[ExecutionPlan] = None,
+) -> SketchBank:
+    """Batched multi-tenant ingestion: one fused dispatch for the bank."""
+    return bank.update_many(keys, items, plan)

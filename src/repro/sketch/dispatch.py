@@ -21,6 +21,40 @@ from repro.sketch.hll import HLLConfig
 from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, get_backend
 
 
+def mesh_fold(plan: ExecutionPlan, registers, arrays, apply_fn):
+    """The mesh placement rule, shared by sketch and bank dispatch.
+
+    ``arrays`` is a tuple of equal-length flat streams (the item stream;
+    or the key + item streams for a bank, DESIGN.md §9).  Each is sharded
+    over ``plan.data_axes``; every device applies ``apply_fn(registers,
+    *local_arrays)`` to its shard and one lax.pmax folds the partial
+    register states — the paper's Merge-buckets module as a single
+    collective.  Registers come back replicated.  Streams that do not
+    divide the mesh axes are edge-padded: zero-padding would sketch
+    phantom elements, while repeating a real element (or (key, item)
+    pair) cannot move any register — the lattice is idempotent
+    (DESIGN.md §6) — so no plan ever raises on stream length.
+    """
+    axes = plan.data_axes
+    shards = 1
+    for a in axes:
+        shards *= plan.mesh.shape[a]
+    n = arrays[0].shape[0]
+    padded = -(-n // shards) * shards
+    if padded != n:
+        arrays = tuple(
+            jnp.pad(x, (0, padded - n), mode="edge") for x in arrays
+        )
+
+    def local(regs, *local_arrays):
+        return jax.lax.pmax(apply_fn(regs, *local_arrays), axes)
+
+    in_specs = (P(),) + (P(axes),) * len(arrays)
+    return shard_map(
+        local, mesh=plan.mesh, in_specs=in_specs, out_specs=P()
+    )(registers, *arrays)
+
+
 def update_registers(
     registers: jnp.ndarray,
     items: jnp.ndarray,
@@ -31,39 +65,19 @@ def update_registers(
 
     placement="local": the backend runs on the caller's device(s) as-is.
     placement="mesh":  ``items`` is flattened and sharded over
-    ``plan.data_axes``; every device aggregates its shard with the selected
-    backend and one lax.pmax folds the partial sketches — the paper's
-    Merge-buckets module as a single collective.  Registers come back
-    replicated.  Streams that do not divide the mesh axes are edge-padded
-    (repeating an existing item is a no-op on the max-lattice, DESIGN.md §6),
-    so no plan ever raises on stream length.
+    ``plan.data_axes`` through :func:`mesh_fold` (per-device aggregation
+    + one all-reduce-max; edge-padding for non-divisible streams).
     """
     plan = (DEFAULT_PLAN if plan is None else plan).validate()
     backend = get_backend(plan.backend)
     if plan.placement == "local":
         return backend(registers, items, cfg, plan)
-
-    axes = plan.data_axes
     flat = items.reshape(-1)
-    n = flat.shape[0]
-    if n == 0:
+    if flat.shape[0] == 0:
         return registers
-    shards = 1
-    for a in axes:
-        shards *= plan.mesh.shape[a]
-    padded = -(-n // shards) * shards
-    if padded != n:
-        # zero-padding would sketch phantom items; repeating a real item
-        # cannot move any register (update is idempotent on the lattice)
-        flat = jnp.pad(flat, (0, padded - n), mode="edge")
-
-    def local(regs: jnp.ndarray, local_items: jnp.ndarray) -> jnp.ndarray:
-        return jax.lax.pmax(backend(regs, local_items, cfg, plan), axes)
-
-    in_specs = (P(), P(axes))
-    return shard_map(
-        local, mesh=plan.mesh, in_specs=in_specs, out_specs=P()
-    )(registers, flat)
+    return mesh_fold(
+        plan, registers, (flat,), lambda regs, x: backend(regs, x, cfg, plan)
+    )
 
 
 def datapath_tap(

@@ -45,6 +45,12 @@ PLACEMENTS = ("local", "mesh")
 # backend name -> fn(registers, flat_items, cfg, plan) -> registers
 _BACKENDS: Dict[str, Callable] = {}
 
+# backend name -> fn(bank_registers, keys, flat_items, cfg, plan) -> bank.
+# Bank ingest paths register under the SAME names as their single-sketch
+# counterparts, so one ExecutionPlan drives both `update_registers` and
+# `update_many` (DESIGN.md §9).
+_BANK_BACKENDS: Dict[str, Callable] = {}
+
 
 def register_backend(name: str) -> Callable[[Callable], Callable]:
     """Decorator: register an aggregation backend under ``name``."""
@@ -53,6 +59,23 @@ def register_backend(name: str) -> Callable[[Callable], Callable]:
         if name in _BACKENDS:
             raise ValueError(f"backend {name!r} already registered")
         _BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def register_bank_backend(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a batched (SketchBank) ingest path under ``name``.
+
+    The signature is fn(bank_registers, keys, flat_items, cfg, plan) ->
+    (B, m) registers.  A backend without a bank entry still works for
+    single-sketch plans; `update_many` raises a targeted error for it.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        if name in _BANK_BACKENDS:
+            raise ValueError(f"bank backend {name!r} already registered")
+        _BANK_BACKENDS[name] = fn
         return fn
 
     return deco
@@ -67,8 +90,22 @@ def get_backend(name: str) -> Callable:
         ) from None
 
 
+def get_bank_backend(name: str) -> Callable:
+    try:
+        return _BANK_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"backend {name!r} has no bank ingest path; bank-capable: "
+            f"{sorted(_BANK_BACKENDS)}"
+        ) from None
+
+
 def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_BACKENDS))
+
+
+def available_bank_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BANK_BACKENDS))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,6 +6,16 @@ distinct (token, expert) routing pairs for MoE collapse detection — DESIGN.md
 §4) — each one is 48 KiB of state and one all-reduce-max per merge,
 regardless of stream size.
 
+Ingest is **buffered and bank-batched** (DESIGN.md §9): ``observe()`` only
+appends the items to a per-stream buffer; at flush time every buffered
+stream's registers stack into one ``SketchBank`` and a single keyed
+``update_many`` dispatch (key = stream row) aggregates everything at once —
+one fused scatter-max instead of one dispatch per observe call.  Flushes
+happen automatically once ``flush_items`` items are pending and before any
+read (estimate / report / serialize / merge_from / stream), so results are
+always bit-identical to unbuffered per-stream updates (the max-lattice makes
+batching invisible).
+
 ``report()`` finalizes the whole board through the batched estimator path
 (DESIGN.md §8): the registers stack into one (B, m) bank and a single
 jitted ``estimate_many`` dispatch produces every float32 estimate at once,
@@ -22,16 +32,20 @@ or to a different estimator — without touching call sites.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.sketch import (
     DEFAULT_ESTIMATOR,
+    DEFAULT_PLAN,
     ExecutionPlan,
     HyperLogLog,
+    SketchBank,
     estimate_many,
+    get_bank_backend,
+    update_many,
 )
 from repro.sketch.hll import HLLConfig
 
@@ -41,6 +55,12 @@ class StreamSketch:
     cfg: HLLConfig
     plan: Optional[ExecutionPlan] = None  # None = default jnp plan
     sketches: Dict[str, HyperLogLog] = dataclasses.field(default_factory=dict)
+    # buffered keyed ingest: flush once this many items are pending
+    flush_items: int = 1 << 20
+    _pending: Dict[str, List[jnp.ndarray]] = dataclasses.field(
+        default_factory=dict, repr=False
+    )
+    _pending_items: int = dataclasses.field(default=0, repr=False)
 
     def _estimator(self, estimator: Optional[str]) -> str:
         if estimator is not None:
@@ -50,12 +70,69 @@ class StreamSketch:
         )
 
     def stream(self, name: str) -> HyperLogLog:
+        """The named sketch, current through any buffered observations."""
+        if name in self._pending:
+            self.flush()
         if name not in self.sketches:
             self.sketches[name] = HyperLogLog.empty(self.cfg)
         return self.sketches[name]
 
     def observe(self, name: str, items: jnp.ndarray) -> None:
-        self.sketches[name] = self.stream(name).update(items, self.plan)
+        """Buffer ``items`` for ``name``; aggregation happens at flush."""
+        if name not in self.sketches:
+            self.sketches[name] = HyperLogLog.empty(self.cfg)
+        # murmur3 hashes the 32-bit pattern (it casts to uint32), so
+        # normalizing the buffer dtype here cannot change any register
+        flat = jnp.asarray(items).reshape(-1).astype(jnp.uint32)
+        if flat.size == 0:
+            return
+        self._pending.setdefault(name, []).append(flat)
+        self._pending_items += int(flat.size)
+        if self._pending_items >= self.flush_items:
+            self.flush()
+
+    def flush(self) -> None:
+        """Drain the buffer: ONE keyed update_many over the pending streams.
+
+        Pending streams stack into a SketchBank (row = stream), every
+        buffered array concatenates into one keyed stream, and a single
+        fused dispatch (DESIGN.md §9) replaces what used to be one
+        ``update()`` per observe call.  Bit-identical to the unbuffered
+        path: scatter-max commutes with any batching of the stream.
+        """
+        if not self._pending:
+            return
+        names = list(self._pending)
+        try:
+            get_bank_backend((self.plan or DEFAULT_PLAN).backend)
+        except ValueError:
+            # a plugin backend registered only for single sketches keeps
+            # working: fall back to one per-stream update over the
+            # concatenated buffer (still one dispatch per stream)
+            for name in names:
+                chunk = jnp.concatenate(self._pending[name])
+                self.sketches[name] = self.sketches[name].update(
+                    chunk, self.plan
+                )
+            self._pending.clear()
+            self._pending_items = 0
+            return
+        keys = jnp.concatenate(
+            [
+                jnp.full((a.size,), row, jnp.int32)
+                for row, name in enumerate(names)
+                for a in self._pending[name]
+            ]
+        )
+        items = jnp.concatenate(
+            [a for name in names for a in self._pending[name]]
+        )
+        bank = SketchBank.from_sketches([self.sketches[n] for n in names])
+        bank = update_many(bank, keys, items, self.plan)
+        for row, name in enumerate(names):
+            self.sketches[name] = bank.row(row)
+        self._pending.clear()
+        self._pending_items = 0
 
     def merge_from(self, other: "StreamSketch") -> None:
         if other.cfg != self.cfg:
@@ -63,6 +140,8 @@ class StreamSketch:
                 f"cannot merge boards with different configs: "
                 f"{self.cfg} vs {other.cfg}"
             )
+        self.flush()
+        other.flush()
         for name, sk in other.sketches.items():
             self.sketches[name] = self.stream(name).merge(sk)
 
@@ -72,6 +151,7 @@ class StreamSketch:
 
     def serialize(self) -> Dict[str, bytes]:
         """Dense per-stream blobs (HyperLogLog.to_bytes) for shipping."""
+        self.flush()
         return {name: sk.to_bytes() for name, sk in self.sketches.items()}
 
     @classmethod
@@ -111,6 +191,7 @@ class StreamSketch:
         self, exact: bool = False, estimator: Optional[str] = None
     ) -> Dict[str, dict]:
         """Per-stream estimates; batched device finalization by default."""
+        self.flush()
         estimator = self._estimator(estimator)
         names = list(self.sketches)
         if exact or not names:

@@ -1,0 +1,306 @@
+"""SketchBank: keyed batched ingestion, serialization, and the no-leak rules.
+
+Acceptance property for the bank subsystem (DESIGN.md §9): for EVERY
+registered bank backend, ``update_many`` on a (B, m) bank — including the
+(1024, m) acceptance size — is bit-identical to the per-sketch update loop
+``for b: bank[b].update(items[keys == b])``, for streams that divide
+nothing, for out-of-range keys (dropped, never leaked into a neighbor), and
+under mesh placement.  Plus: exact per-row counters, the RHLB wire format,
+and the serialization fuzz extending PR 2's histogram no-leak guard to
+corrupted bank blobs.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sketch import (
+    ExecutionPlan,
+    HLLConfig,
+    HyperLogLog,
+    SketchBank,
+    available_bank_backends,
+    hll,
+    update_many,
+)
+
+CFG = HLLConfig(p=6, hash_bits=64)  # small m so the pallas bank path runs
+
+
+def _stream(n, rows, seed=0):
+    rng = np.random.default_rng(seed)
+    items = rng.integers(0, 2**31, n, dtype=np.int32)
+    keys = rng.integers(0, rows, n, dtype=np.int32)
+    return jnp.asarray(keys), jnp.asarray(items)
+
+
+def _loop_reference(keys, items, rows, cfg=CFG):
+    """The pre-bank shape of ingest: one hll.update per bank row."""
+    ks, it = np.asarray(keys), np.asarray(items)
+    out = np.zeros((rows, cfg.m), np.uint8)
+    for b in range(rows):
+        regs = hll.update(hll.init_registers(cfg), jnp.asarray(it[ks == b]), cfg)
+        out[b] = np.asarray(regs)
+    return out
+
+
+def _filled_bank(rows=8, n=5000, seed=3):
+    keys, items = _stream(n, rows, seed=seed)
+    return update_many(SketchBank.empty(rows, CFG), keys, items)
+
+
+# ----------------------------------------------------------------------------
+# update_many vs per-sketch loop (the acceptance property)
+# ----------------------------------------------------------------------------
+
+
+def test_bank_backends_registered():
+    assert set(available_bank_backends()) >= {
+        "jnp",
+        "pallas",
+        "pallas_pipelined",
+    }
+
+
+@pytest.mark.parametrize("backend", available_bank_backends())
+@pytest.mark.parametrize("n", [1, 1000, 4099])  # 4099 is prime: pads everywhere
+def test_update_many_matches_loop(backend, n):
+    rows = 17  # prime row count: divides no row block evenly
+    keys, items = _stream(n, rows, seed=n)
+    ref = _loop_reference(keys, items, rows)
+    for pipelines in (1, 3, 8):
+        plan = ExecutionPlan(backend=backend, pipelines=pipelines)
+        bank = update_many(SketchBank.empty(rows, CFG), keys, items, plan)
+        np.testing.assert_array_equal(np.asarray(bank.registers), ref)
+
+
+@pytest.mark.parametrize("backend", available_bank_backends())
+def test_acceptance_1024_row_bank_bit_identical(backend):
+    rows, n = 1024, 8191
+    keys, items = _stream(n, rows, seed=42)
+    ref = _loop_reference(keys, items, rows)
+    bank = update_many(
+        SketchBank.empty(rows, CFG), keys, items, ExecutionPlan(backend=backend)
+    )
+    np.testing.assert_array_equal(np.asarray(bank.registers), ref)
+
+
+@pytest.mark.parametrize("backend", available_bank_backends())
+def test_out_of_range_keys_dropped_not_leaked(backend):
+    rows, n = 11, 3001
+    keys, items = _stream(n, rows, seed=7)
+    pos = np.arange(n)
+    bad = np.where(pos % 5 == 0, -2, np.asarray(keys))
+    bad = np.where(pos % 7 == 0, rows + 3, bad)
+    ref = _loop_reference(jnp.asarray(bad), items, rows)
+    bank = update_many(
+        SketchBank.empty(rows, CFG),
+        jnp.asarray(bad),
+        items,
+        ExecutionPlan(backend=backend),
+    )
+    np.testing.assert_array_equal(np.asarray(bank.registers), ref)
+    # dropped observations must not count either
+    in_range = bad[(bad >= 0) & (bad < rows)]
+    np.testing.assert_array_equal(bank.counts, np.bincount(in_range, minlength=rows))
+
+
+def test_mesh_placement_matches_local():
+    rows, n = 9, 2503  # prime stream: forces the edge-padding path
+    keys, items = _stream(n, rows, seed=9)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    plan = ExecutionPlan(backend="jnp").with_mesh(mesh)
+    bank = update_many(SketchBank.empty(rows, CFG), keys, items, plan)
+    np.testing.assert_array_equal(
+        np.asarray(bank.registers), _loop_reference(keys, items, rows)
+    )
+
+
+def test_empty_stream_is_a_noop():
+    bank = SketchBank.empty(4, CFG)
+    out = update_many(bank, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(out.registers), np.asarray(bank.registers)
+    )
+    assert out.counts.sum() == 0
+
+
+def test_mismatched_key_item_lengths_raise():
+    bank = SketchBank.empty(4, CFG)
+    with pytest.raises(ValueError, match="same length"):
+        update_many(bank, jnp.zeros((3,), jnp.int32), jnp.zeros((4,), jnp.int32))
+
+
+def test_2d_keys_and_items_flatten_consistently():
+    """The serve-style shape: (B, S) tokens keyed by their row index."""
+    rows, cols = 6, 50
+    items = jnp.asarray(
+        np.random.default_rng(1).integers(0, 2**31, (rows, cols), np.int32)
+    )
+    keys = jnp.broadcast_to(jnp.arange(rows, dtype=jnp.int32)[:, None], (rows, cols))
+    bank = update_many(SketchBank.empty(rows, CFG), keys, items)
+    for b in range(rows):
+        expected = np.asarray(hll.update(hll.init_registers(CFG), items[b], CFG))
+        np.testing.assert_array_equal(np.asarray(bank.registers[b]), expected)
+
+
+# ----------------------------------------------------------------------------
+# counters, rows, merge
+# ----------------------------------------------------------------------------
+
+
+def test_counters_are_exact_and_rows_round_trip():
+    rows, n = 5, 4001
+    keys, items = _stream(n, rows, seed=11)
+    bank = update_many(SketchBank.empty(rows, CFG), keys, items)
+    np.testing.assert_array_equal(
+        bank.counts, np.bincount(np.asarray(keys), minlength=rows)
+    )
+    sk = bank.row(2)
+    assert isinstance(sk, HyperLogLog)
+    assert sk.count == int(bank.counts[2])
+    assert bank.row(-1).count == int(bank.counts[rows - 1])
+    with pytest.raises(IndexError, match="out of range"):
+        bank.row(rows)
+    with pytest.raises(IndexError, match="out of range"):
+        bank.estimate(-rows - 1)
+    back = SketchBank.from_sketches(bank.to_sketches())
+    np.testing.assert_array_equal(
+        np.asarray(back.registers), np.asarray(bank.registers)
+    )
+    np.testing.assert_array_equal(back.counts, bank.counts)
+
+
+def test_counter_is_overflow_safe_past_uint32():
+    bank = SketchBank.empty(2, CFG)
+    near_wrap = jnp.asarray(np.array([[0, 0xFFFFFFFF], [0, 5]], np.uint32))
+    bank = SketchBank(bank.registers, near_wrap, CFG)
+    keys = jnp.zeros((3,), jnp.int32)
+    items = jnp.arange(3, dtype=jnp.int32)
+    bank = update_many(bank, keys, items)
+    assert int(bank.counts[0]) == 2**32 + 2  # crossed the limb boundary
+    assert int(bank.counts[1]) == 5
+
+
+def test_merge_banks_and_mismatches_raise():
+    a = _filled_bank(rows=6, seed=1)
+    b = _filled_bank(rows=6, seed=2)
+    ab = a | b
+    np.testing.assert_array_equal(
+        np.asarray(ab.registers),
+        np.maximum(np.asarray(a.registers), np.asarray(b.registers)),
+    )
+    np.testing.assert_array_equal(ab.counts, a.counts + b.counts)
+    with pytest.raises(ValueError, match="different sizes"):
+        a.merge(_filled_bank(rows=7))
+    with pytest.raises(ValueError, match="different configs"):
+        a.merge(SketchBank.empty(6, HLLConfig(p=8, hash_bits=64)))
+    with pytest.raises(ValueError, match="one config"):
+        SketchBank.from_sketches(
+            [HyperLogLog.empty(CFG), HyperLogLog.empty(HLLConfig(p=8))]
+        )
+
+
+def test_estimates_match_per_row_sketches():
+    bank = _filled_bank(rows=12, n=20_000)
+    many = np.asarray(bank.estimate_many())
+    for b in range(len(bank)):
+        exact = bank.estimate(b)
+        assert abs(many[b] - exact) / max(exact, 1.0) < 1e-4
+        assert bank.row(b).estimate() == exact
+
+
+# ----------------------------------------------------------------------------
+# serialization (RHLB wire format + corruption fuzz)
+# ----------------------------------------------------------------------------
+
+
+def test_bank_bytes_roundtrip():
+    bank = _filled_bank(rows=7, n=6000)
+    blob = bank.to_bytes()
+    assert len(blob) == 20 + 7 * 8 + 7 * CFG.m
+    back = SketchBank.from_bytes(blob)
+    assert back.cfg == bank.cfg and len(back) == len(bank)
+    np.testing.assert_array_equal(
+        np.asarray(back.registers), np.asarray(bank.registers)
+    )
+    np.testing.assert_array_equal(back.counts, bank.counts)
+
+
+def test_bank_bytes_rejects_garbage():
+    bank = _filled_bank(rows=3)
+    blob = bank.to_bytes()
+    with pytest.raises(ValueError, match="truncated"):
+        SketchBank.from_bytes(blob[:10])
+    with pytest.raises(ValueError, match="magic"):
+        SketchBank.from_bytes(b"NOPE" + blob[4:])
+    with pytest.raises(ValueError, match="version"):
+        SketchBank.from_bytes(blob[:4] + b"\x09" + blob[5:])
+    with pytest.raises(ValueError, match="payload"):
+        SketchBank.from_bytes(blob[:-1])
+
+
+def test_corrupted_blob_never_leaks_across_rows():
+    """The ingest-side extension of PR 2's histogram guard: flipping row
+    j's registers to out-of-range values must not move ANY other row's
+    estimate, and the exact host path must refuse the corrupted row."""
+    rows = 6
+    bank = _filled_bank(rows=rows, n=30_000)
+    clean = np.asarray(bank.estimate_many())
+    blob = bytearray(bank.to_bytes())
+    header = 20 + rows * 8
+    corrupt_row = 3
+    start = header + corrupt_row * CFG.m
+    blob[start : start + CFG.m] = bytes([255]) * CFG.m  # rank >> max_rank
+    fuzzed = SketchBank.from_bytes(bytes(blob))
+    dirty = np.asarray(fuzzed.estimate_many())
+    for b in range(rows):
+        if b == corrupt_row:
+            continue
+        assert dirty[b] == clean[b], f"row {b} leaked from row {corrupt_row}"
+    with pytest.raises(ValueError, match="exceeds max_rank"):
+        fuzzed.estimate(corrupt_row)
+
+
+def test_jnp_bank_rejects_int32_cell_space_overflow():
+    """B*m >= 2^31 would silently wrap the flattened segment ids; the jnp
+    path must refuse loudly (shape-only check — no giant allocation)."""
+    from functools import partial
+
+    from repro.sketch.backends import bank_update_jnp
+
+    cfg = HLLConfig(p=16, hash_bits=64)
+    big = jax.ShapeDtypeStruct((1 << 15, cfg.m), jnp.uint8)  # B*m == 2^31
+    keys = jax.ShapeDtypeStruct((8,), jnp.int32)
+    items = jax.ShapeDtypeStruct((8,), jnp.int32)
+    with pytest.raises(ValueError, match="overflows int32"):
+        jax.eval_shape(partial(bank_update_jnp, cfg=cfg), big, keys, items)
+
+
+def test_empty_returns_rejects_bad_row_count():
+    with pytest.raises(ValueError, match="at least one row"):
+        SketchBank.empty(0, CFG)
+    with pytest.raises(ValueError, match="at least one sketch"):
+        SketchBank.from_sketches([])
+
+
+# ----------------------------------------------------------------------------
+# pytree / jit behavior
+# ----------------------------------------------------------------------------
+
+
+def test_bank_is_a_pytree_and_jits():
+    bank = _filled_bank(rows=4, n=512)
+    leaves = jax.tree_util.tree_leaves(bank)
+    assert len(leaves) == 2  # registers + counters; cfg is static
+
+    @jax.jit
+    def bump(b, keys, items):
+        return b.update_many(keys, items)
+
+    keys, items = _stream(256, 4, seed=5)
+    out = bump(bank, keys, items)
+    assert isinstance(out, SketchBank) and out.cfg == CFG
+    ref = update_many(bank, keys, items)
+    np.testing.assert_array_equal(np.asarray(out.registers), np.asarray(ref.registers))

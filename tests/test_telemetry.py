@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.sketch import ExecutionPlan, HLLConfig
+from repro.sketch import ExecutionPlan, HLLConfig, HyperLogLog
 from repro.models import moe as moe_lib
 from repro.telemetry.sketchboard import StreamSketch
 
@@ -91,6 +91,95 @@ def test_merge_from_cfg_mismatch_raises():
     b.observe("s", jnp.arange(10, dtype=jnp.int32))
     with pytest.raises(ValueError, match="different configs"):
         a.merge_from(b)
+
+
+def test_buffered_ingest_matches_unbuffered_per_stream_updates():
+    """observe() buffers; flush() lands everything with one update_many —
+    bit-identical registers and exact counters vs direct per-stream updates."""
+    cfg = HLLConfig(p=10, hash_bits=64)
+    board = StreamSketch(cfg)
+    rng = np.random.default_rng(3)
+    chunks = {
+        "a": [rng.integers(0, 10_000, 5_000, np.int32) for _ in range(3)],
+        "b": [rng.integers(0, 300, 2_000, np.int32) for _ in range(2)],
+        "c": [rng.integers(0, 2**31, 4_099, np.int32)],
+    }
+    for name, arrays in chunks.items():
+        for a in arrays:
+            board.observe(name, jnp.asarray(a))
+    # nothing aggregated yet: the buffer holds every item
+    assert board._pending_items == sum(
+        a.size for arrays in chunks.values() for a in arrays
+    )
+    board.flush()
+    assert board._pending_items == 0
+    for name, arrays in chunks.items():
+        direct = HyperLogLog.empty(cfg)
+        for a in arrays:
+            direct = direct.update(jnp.asarray(a))
+        got = board.stream(name)
+        np.testing.assert_array_equal(
+            np.asarray(got.registers), np.asarray(direct.registers)
+        )
+        assert got.count == direct.count
+
+
+def test_auto_flush_threshold_and_read_paths_flush():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    board = StreamSketch(cfg, flush_items=100)
+    board.observe("s", jnp.arange(200, dtype=jnp.int32))  # crosses threshold
+    assert board._pending_items == 0  # auto-flushed on observe
+    board.observe("s", jnp.arange(200, 230, dtype=jnp.int32))
+    assert board._pending_items == 30
+    # every read path drains the buffer first
+    rep = board.report()
+    assert board._pending_items == 0
+    assert rep["s"]["items_seen"] == 230
+    board.observe("s", jnp.arange(230, 250, dtype=jnp.int32))
+    assert board.stream("s").count == 250
+    board.observe("t", jnp.arange(5, dtype=jnp.int32))
+    blobs = board.serialize()
+    assert board._pending_items == 0
+    assert StreamSketch.deserialize(blobs).report()["t"]["items_seen"] == 5
+
+
+def test_plugin_backend_without_bank_path_still_ingests():
+    """A backend registered only via register_backend (no bank entry) must
+    keep working on a board: flush() falls back to per-stream updates."""
+    from repro.sketch import get_backend, register_backend
+
+    name = "tlm_single_only"
+    try:
+        get_backend(name)
+    except ValueError:
+        register_backend(name)(
+            lambda regs, items, cfg, plan: get_backend("jnp")(
+                regs, items, cfg, plan
+            )
+        )
+    cfg = HLLConfig(p=10, hash_bits=64)
+    board = StreamSketch(cfg, plan=ExecutionPlan(backend=name))
+    board.observe("s", jnp.arange(5000, dtype=jnp.int32))
+    board.observe("t", jnp.arange(100, dtype=jnp.int32))
+    rep = board.report()
+    assert rep["s"]["items_seen"] == 5000
+    ref = StreamSketch(cfg)
+    ref.observe("s", jnp.arange(5000, dtype=jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(board.stream("s").registers),
+        np.asarray(ref.stream("s").registers),
+    )
+
+
+def test_merge_from_flushes_both_boards():
+    cfg = HLLConfig(p=10, hash_bits=64)
+    a, b = StreamSketch(cfg), StreamSketch(cfg)
+    a.observe("s", jnp.arange(0, 1000, dtype=jnp.int32))
+    b.observe("s", jnp.arange(500, 1500, dtype=jnp.int32))
+    a.merge_from(b)  # both sides still buffered at this point
+    assert a.stream("s").count == 2000
+    est = a.estimate("s")
+    assert abs(est - 1500) / 1500 < 0.15
 
 
 def test_moe_assignment_stream_detects_collapse():
