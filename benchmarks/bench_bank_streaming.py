@@ -117,11 +117,14 @@ def run(full: bool = False, smoke: bool = False):
 
     out = {
         "config": {"p": cfg.p, "hash_bits": cfg.hash_bits, "m": cfg.m},
+        "smoke": smoke,
         "banks": results,
     }
-    if not smoke:
-        with open(JSON_PATH, "w") as f:
-            json.dump(out, f, indent=2)
+    # smoke writes a SIBLING file (uploaded by CI, gitignored locally) so it
+    # can never clobber the tracked full-run perf trajectory
+    path = JSON_PATH.replace(".json", ".smoke.json") if smoke else JSON_PATH
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
     return results
 
 

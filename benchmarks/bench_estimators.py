@@ -91,9 +91,13 @@ def run(full: bool = False, smoke: bool = False, json_path: str = JSON_PATH):
             f"errmax={worst:.4f}",
         )
 
-    if not smoke:  # smoke runs must not clobber the tracked perf trajectory
-        with open(json_path, "w") as f:
-            json.dump(out, f, indent=2)
+    # smoke writes a SIBLING file (uploaded by CI, gitignored locally) so it
+    # can never clobber the tracked full-run perf trajectory
+    out["smoke"] = smoke
+    if smoke:
+        json_path = json_path.replace(".json", ".smoke.json")
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2)
     return out
 
 

@@ -1,0 +1,108 @@
+"""Windowed query latency: fused ring fold vs per-bucket merge loop.
+
+A sliding-window reading over a ``WindowedBank`` is ONE masked max-reduce
+across the (W, B, m) ring into a scratch bank plus one batched
+``estimate_many`` (DESIGN.md §11).  The pre-subsystem shape of the same
+query is a python loop that merges each live bucket into an accumulator —
+W separate device dispatches — before the same finalization.  This bench
+times both across W in {4, 16, 64}, asserts the estimates are
+bit-identical, and writes ``BENCH_window.json`` so the windowed-query perf
+trajectory populates across PRs next to the ingest-side
+``BENCH_bank_streaming.json``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.sketch import ExecutionPlan, HLLConfig, WindowedBank, estimate_many
+from repro.sketch.plan import get_window_backend
+
+JSON_PATH = "BENCH_window.json"
+WINDOW_SIZES = (4, 16, 64)
+ROWS = 64
+
+
+def _filled_ring(window: int, rows: int, cfg: HLLConfig, seed: int = 0):
+    """A ring whose every bucket holds a real ingested chunk."""
+    rng = np.random.default_rng(seed)
+    win = WindowedBank.empty(window, rows, cfg)
+    for epoch in range(window):
+        if epoch:
+            win = win.advance()
+        items = jnp.asarray(rng.integers(0, 2**31, 4096, dtype=np.int32))
+        win = win.observe(items % rows, items)
+    jax.block_until_ready(win.registers)
+    return win
+
+
+def run(full: bool = False, smoke: bool = False):
+    cfg = HLLConfig(p=10, hash_bits=64)
+    window_sizes = (2, 4) if smoke else WINDOW_SIZES
+    rows = 8 if smoke else ROWS
+    plan = ExecutionPlan(backend="jnp")
+    fold = get_window_backend(plan.backend)
+
+    results = []
+    for window in window_sizes:
+        win = _filled_ring(window, rows, cfg, seed=window)
+        mask = win._live_mask(window)
+
+        @jax.jit
+        def fused(ring, mask):
+            return estimate_many(fold(ring, mask, cfg, plan), cfg)
+
+        def loop(ring):
+            # the pre-subsystem query: one device dispatch per bucket
+            acc = jnp.zeros((rows, cfg.m), ring.dtype)
+            for w in range(window):
+                acc = jnp.maximum(acc, ring[w])
+            return estimate_many(acc, cfg)
+
+        fused_s = time_fn(fused, win.registers, mask)
+        loop_s = time_fn(loop, win.registers)
+        fused_est = np.asarray(fused(win.registers, mask))
+        loop_est = np.asarray(loop(win.registers))
+        identical = bool(np.array_equal(fused_est, loop_est))
+        if not identical:
+            # the documented gate: CI bench-smoke must fail on divergence
+            raise AssertionError(
+                f"fused ring fold diverged from the merge loop at W={window}"
+            )
+        row = dict(
+            W=window,
+            B=rows,
+            fused_us=fused_s * 1e6,
+            loop_us=loop_s * 1e6,
+            speedup=loop_s / fused_s,
+            bit_identical=identical,
+        )
+        results.append(row)
+        emit(
+            "window_fold",
+            fused_s * 1e6,
+            f"W={window} B={rows} fused={fused_s * 1e6:.0f}us "
+            f"loop={loop_s * 1e6:.0f}us "
+            f"speedup={loop_s / fused_s:.1f}x identical={identical}",
+        )
+
+    out = {
+        "config": {"p": cfg.p, "hash_bits": cfg.hash_bits, "m": cfg.m},
+        "smoke": smoke,
+        "windows": results,
+    }
+    # smoke writes a SIBLING file (uploaded by CI, gitignored locally) so it
+    # can never clobber the tracked full-run perf trajectory
+    path = JSON_PATH.replace(".json", ".smoke.json") if smoke else JSON_PATH
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run(full=True)

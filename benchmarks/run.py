@@ -14,6 +14,14 @@ job runs this, so benchmark scripts can no longer rot unexecuted).
               batched; also writes BENCH_estimators.json
   bank  batched multi-tenant ingest (update_many vs per-sketch loop);
         also writes BENCH_bank_streaming.json
+  window  sliding-window query (fused ring fold vs per-bucket merge loop);
+          also writes BENCH_window.json
+
+JSON-writing benches write in every mode: full runs update the tracked
+``BENCH_*.json`` perf trajectory, smoke runs write sibling
+``BENCH_*.smoke.json`` files (tagged ``"smoke": true``, gitignored) that
+the CI bench-smoke job uploads as artifacts — a smoke run can never
+clobber the tracked full-run numbers.
 
 A failing sub-benchmark no longer aborts the rest of the suite: every bench
 runs, every failure is reported, and the process exits non-zero at the end,
@@ -38,6 +46,7 @@ SUITE = {
     "tab4": "bench_tab4_streaming",
     "estimators": "bench_estimators",
     "bank": "bench_bank_streaming",
+    "window": "bench_window",
 }
 
 
@@ -48,7 +57,7 @@ def main() -> None:
                     help="tiny sizes: just prove every bench still runs")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig4a,fig4b,tab2,tab3,tab4,"
-                         "estimators,bank")
+                         "estimators,bank,window")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")

@@ -14,6 +14,7 @@ from repro.sketch import (
     ExecutionPlan,
     HLLConfig,
     HyperLogLog,
+    WindowedBank,
     available_estimators,
     standard_error,
 )
@@ -66,6 +67,24 @@ def main():
     for name in available_estimators():
         e = sk.estimate(estimator=name)
         print(f"  {name:14s} {e:12,.0f}  ({(e - exact) / exact:+.3%})")
+
+    # 6) sliding windows: "distinct in the last k epochs", not all time.
+    #    A WindowedBank rings W time buckets; observe() fills the current
+    #    bucket, advance() slides the window, and estimate_window(k) is one
+    #    fused ring fold + one batched finalization (DESIGN.md §11)
+    wcfg = HLLConfig(p=12, hash_bits=64)
+    win = WindowedBank.empty(4, 1, wcfg)   # W=4 epochs, one tenant row
+    for epoch in range(6):
+        if epoch:
+            win = win.advance()            # epoch - 4 slides out
+        lo = epoch * 50_000                # each epoch sees a fresh range
+        chunk = jnp.arange(lo, lo + 80_000, dtype=jnp.int32)
+        win = win.observe(jnp.zeros(chunk.shape, jnp.int32), chunk)
+    rolling = float(win.estimate_window()[0])    # last 4 epochs
+    newest = float(win.estimate_window(1)[0])    # current epoch only
+    print(f"\nwindowed (epoch {win.epoch}): last-4-epochs distinct"
+          f"~{rolling:,.0f}, current-epoch~{newest:,.0f} "
+          f"(epochs 0-1 expired)")
 
 
 if __name__ == "__main__":

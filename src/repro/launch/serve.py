@@ -23,6 +23,7 @@ from repro.sketch import (
     ExecutionPlan,
     HLLConfig,
     SketchBank,
+    WindowedBank,
     available_estimators,
 )
 from repro.models import transformer
@@ -40,6 +41,8 @@ def main():
     ap.add_argument("--estimator", default=DEFAULT_ESTIMATOR,
                     choices=available_estimators(),
                     help="phase-4 finalizer for the telemetry board")
+    ap.add_argument("--window-epochs", type=int, default=4,
+                    help="ring buckets for the sliding request window")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
@@ -113,6 +116,31 @@ def main():
         f"  bank[{B} requests] distinct tokens/request "
         f"min={per_req.min():.0f} mean={per_req.mean():.0f} "
         f"max={per_req.max():.0f} (one update_many dispatch)"
+    )
+
+    # sliding-window telemetry (DESIGN.md §11): a WindowedBank ring over
+    # decode time — the prompt lands in epoch 0, each decode slice opens a
+    # new epoch, and the rolling per-request distinct count is ONE fused
+    # ring fold + one batched estimate_many per reading.  With W buckets
+    # the prompt epoch slides out once --window-epochs slices have landed,
+    # which is exactly the "distinct tokens in the last k slices" question
+    # a traffic dashboard asks.
+    W = args.window_epochs
+    win = WindowedBank.empty(W, B, board.cfg)
+    win = win.observe(req_keys, prompts, board.plan)
+    slices = np.array_split(np.asarray(out), W, axis=1)
+    for chunk in slices:
+        win = win.advance()
+        keys = jnp.broadcast_to(rows, chunk.shape)
+        win = win.observe(keys, jnp.asarray(chunk), board.plan)
+    rolling = np.asarray(win.estimate_window(plan=board.plan,
+                                             estimator=args.estimator))
+    newest = np.asarray(win.estimate_window(1, board.plan, args.estimator))
+    print(
+        f"  window[{W} epochs] rolling distinct/request "
+        f"min={rolling.min():.0f} mean={rolling.mean():.0f} "
+        f"max={rolling.max():.0f} (prompt epoch expired); "
+        f"newest slice mean={newest.mean():.0f}"
     )
 
 

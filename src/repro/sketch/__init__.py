@@ -22,6 +22,13 @@ scatter-max — the ingest-side counterpart of ``estimate_many``.  Bank
 ingest paths register per backend via ``register_bank_backend`` and are
 bit-identical to the per-sketch update loop (tests/test_bank.py).
 
+Windowed cardinality (DESIGN.md §11): ``WindowedBank`` rings W time-bucket
+banks into one (W, B, m) pytree — ``observe`` ingests into the current
+bucket via the fused bank scatter, ``advance``/``advance_to`` rotate and
+expire buckets, and ``estimate_window(last_k)`` answers "distinct per row
+over the last k epochs" with ONE masked ring fold (per-backend via
+``register_window_backend``) + one batched ``estimate_many``.
+
 Estimation (paper phase 4) dispatches through a pluggable registry over the
 register-value histogram (repro/sketch/estimators.py, DESIGN.md §8):
 ``estimator="original" | "ertl_improved" | "ertl_mle"`` on every estimate
@@ -54,12 +61,15 @@ from repro.sketch.plan import (  # noqa: F401
     ExecutionPlan,
     available_backends,
     available_bank_backends,
+    available_window_backends,
     example_plans,
     get_backend,
     get_bank_backend,
+    get_window_backend,
     reference_plan,
     register_backend,
     register_bank_backend,
+    register_window_backend,
 )
 
 from repro.sketch.estimators import (  # noqa: F401
@@ -85,6 +95,7 @@ from repro.sketch.bank import (  # noqa: F401
     update_bank_registers,
     update_many,
 )
+from repro.sketch.window import WindowedBank  # noqa: F401
 from repro.sketch.setops import (  # noqa: F401
     difference_estimate,
     intersection_estimate,

@@ -33,6 +33,7 @@ from repro.sketch.plan import (
     ExecutionPlan,
     register_backend,
     register_bank_backend,
+    register_window_backend,
 )
 
 # The kernel modules themselves import repro.sketch.hll, so they are loaded
@@ -57,6 +58,13 @@ def _bank_kernel_module():
 
     assert _bank.LANES == LANES
     return _bank
+
+
+def _window_kernel_module():
+    from repro.kernels import window_fold as _window
+
+    assert _window.LANES == LANES
+    return _window
 
 
 def _default_interpret() -> bool:
@@ -378,3 +386,86 @@ def _pallas_pipelined_bank_backend(
         row_block=row_block,
         interpret=plan.interpret,
     )
+
+
+# ----------------------------------------------------------------------------
+# WindowedBank ring folds (masked max over the W axis; DESIGN.md §11)
+# ----------------------------------------------------------------------------
+
+
+@jax.jit
+def window_fold_jnp(ring: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Reference ring fold: ONE masked max-reduce over the W axis.
+
+    Expired/unselected buckets fold as all-zero registers (rank 0 is the
+    identity of the bucket max), so any suffix window is bit-identical to
+    merging its live buckets one by one.
+    """
+    masked = jnp.where(mask[:, None, None], ring, jnp.zeros_like(ring))
+    return jnp.max(masked, axis=0)
+
+
+def window_fold(
+    ring: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    row_block: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Pallas ring fold: the window_fold kernel over row-block tiles.
+
+    Tiles the (W, B, m) ring over bank-row blocks exactly like
+    ``bank_update`` tiles ingest — ``row_block * m`` registers VMEM-
+    resident per grid step — and sweeps the ring axis in the inner grid
+    dimension with a scratch accumulator.  Small-m banks only (the
+    hll_fused trade); the default row_block picks the largest block under
+    the VMEM cell cap.
+    """
+    _window = _window_kernel_module()
+    interpret = _default_interpret() if interpret is None else interpret
+    window, bank_rows, m = ring.shape
+    if m > _window.MAX_BLOCK_CELLS:
+        raise ValueError(
+            f"pallas window fold supports m <= {_window.MAX_BLOCK_CELLS} "
+            f"(p <= 12); use the jnp fold for m={m}"
+        )
+    if row_block is None:
+        row_block = max(1, _window.MAX_BLOCK_CELLS // m)
+    row_block = min(row_block, bank_rows)
+    padded_rows = -(-bank_rows // row_block) * row_block
+    ring32 = ring.astype(jnp.int32)
+    if padded_rows != bank_rows:
+        # phantom rows fold all-zero registers and are sliced off
+        ring32 = jnp.pad(ring32, ((0, 0), (0, padded_rows - bank_rows), (0, 0)))
+    out = _window.window_fold_max(
+        ring32,
+        mask.astype(jnp.int32),
+        m=m,
+        row_block=row_block,
+        interpret=interpret,
+    )
+    return out[:bank_rows].astype(ring.dtype)
+
+
+@register_window_backend("jnp")
+def _jnp_window_backend(ring, mask, cfg: HLLConfig, plan: ExecutionPlan):
+    return window_fold_jnp(ring, mask)
+
+
+@register_window_backend("pallas")
+def _pallas_window_backend(ring, mask, cfg: HLLConfig, plan: ExecutionPlan):
+    # one datapath, widest row block under the VMEM cap
+    return window_fold(ring, mask, interpret=plan.interpret)
+
+
+@register_window_backend("pallas_pipelined")
+def _pallas_pipelined_window_backend(
+    ring, mask, cfg: HLLConfig, plan: ExecutionPlan
+):
+    # tile the fold over k pipelines: each grid block owns ceil(B/k)
+    # sketches, still under the VMEM cell cap
+    rows = ring.shape[1]
+    row_block = max(1, -(-rows // plan.pipelines))
+    _window = _window_kernel_module()
+    row_block = min(row_block, max(1, _window.MAX_BLOCK_CELLS // cfg.m))
+    return window_fold(ring, mask, row_block=row_block, interpret=plan.interpret)

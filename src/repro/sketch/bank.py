@@ -179,8 +179,20 @@ class SketchBank:
         items: jnp.ndarray,
         plan: Optional[ExecutionPlan] = None,
     ) -> "SketchBank":
-        """Route each item to row ``keys[i]`` and apply one fused update."""
+        """Route each item to row ``keys[i]`` and apply one fused update.
+
+        A zero-length stream returns ``self`` without dispatching any
+        backend (and without touching the counters).
+        """
         flat_keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
+        flat_items = jnp.asarray(items).reshape(-1)
+        if flat_keys.shape[0] != flat_items.shape[0]:
+            raise ValueError(
+                f"keys ({flat_keys.shape[0]}) and items ({flat_items.shape[0]}) "
+                f"must flatten to the same length"
+            )
+        if flat_items.shape[0] == 0:
+            return self
         regs = update_bank_registers(self.registers, flat_keys, items, self.cfg, plan)
         rows = len(self)
         # count only the observations that actually landed (dropped keys

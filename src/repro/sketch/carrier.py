@@ -84,7 +84,13 @@ class HyperLogLog:
     def update(
         self, items: jnp.ndarray, plan: Optional[ExecutionPlan] = None
     ) -> "HyperLogLog":
-        """Aggregate a batch under ``plan`` (any backend/placement/pipelines)."""
+        """Aggregate a batch under ``plan`` (any backend/placement/pipelines).
+
+        A zero-length batch returns ``self`` without dispatching any
+        backend (the update is the lattice identity).
+        """
+        if items.size == 0:
+            return self
         regs = update_registers(self.registers, items, self.cfg, plan)
         return dataclasses.replace(
             self, registers=regs, n_items=_counter_add(self.n_items, items.size)

@@ -70,11 +70,12 @@ def update_registers(
     """
     plan = (DEFAULT_PLAN if plan is None else plan).validate()
     backend = get_backend(plan.backend)
-    if plan.placement == "local":
-        return backend(registers, items, cfg, plan)
     flat = items.reshape(-1)
     if flat.shape[0] == 0:
+        # an empty stream cannot move a register: skip the dispatch entirely
         return registers
+    if plan.placement == "local":
+        return backend(registers, items, cfg, plan)
     return mesh_fold(
         plan, registers, (flat,), lambda regs, x: backend(regs, x, cfg, plan)
     )

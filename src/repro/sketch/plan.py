@@ -51,6 +51,13 @@ _BACKENDS: Dict[str, Callable] = {}
 # `update_many` (DESIGN.md §9).
 _BANK_BACKENDS: Dict[str, Callable] = {}
 
+# backend name -> fn(ring_registers, mask, cfg, plan) -> (B, m) registers.
+# Windowed folds collapse the (W, B, m) ring of a WindowedBank into one
+# scratch bank with a single masked max-reduce (DESIGN.md §11); they
+# register under the same names as the other two axes so one ExecutionPlan
+# drives ingest, bank ingest, and window folds alike.
+_WINDOW_BACKENDS: Dict[str, Callable] = {}
+
 
 def register_backend(name: str) -> Callable[[Callable], Callable]:
     """Decorator: register an aggregation backend under ``name``."""
@@ -81,6 +88,27 @@ def register_bank_backend(name: str) -> Callable[[Callable], Callable]:
     return deco
 
 
+def register_window_backend(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a windowed ring-fold path under ``name``.
+
+    The signature is fn(ring_registers, mask, cfg, plan) -> (B, m)
+    registers, where ``ring_registers`` is the (W, B, m) ring of a
+    ``WindowedBank`` and ``mask`` is a (W,) bool selecting the live
+    buckets.  Every entry must be bit-identical to the naive
+    merge-each-bucket reference (tests/test_window.py).  A backend without
+    a window entry still works for flat plans; ``estimate_window`` raises
+    a targeted error for it.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        if name in _WINDOW_BACKENDS:
+            raise ValueError(f"window backend {name!r} already registered")
+        _WINDOW_BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
 def get_backend(name: str) -> Callable:
     try:
         return _BACKENDS[name]
@@ -100,12 +128,26 @@ def get_bank_backend(name: str) -> Callable:
         ) from None
 
 
+def get_window_backend(name: str) -> Callable:
+    try:
+        return _WINDOW_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"backend {name!r} has no window fold path; window-capable: "
+            f"{sorted(_WINDOW_BACKENDS)}"
+        ) from None
+
+
 def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_BACKENDS))
 
 
 def available_bank_backends() -> Tuple[str, ...]:
     return tuple(sorted(_BANK_BACKENDS))
+
+
+def available_window_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_WINDOW_BACKENDS))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,355 @@
+"""WindowedBank: time-bucketed bank rings with fused sliding-window estimates.
+
+Every query the flat carriers answer is "distinct items since the beginning
+of time"; production traffic analytics asks "distinct users in the last 60
+seconds".  The sliding-window FPGA follow-up (arXiv:2504.16896) keeps one
+BRAM sketch slice per time bucket and merges the live slices on query —
+this module is that structure over :class:`repro.sketch.bank.SketchBank`
+primitives: a window is a ring of W time-bucket banks, and a windowed
+estimate is ONE fused masked max-fold across the ring axis followed by the
+existing batched ``estimate_many`` (estimator registry, DESIGN.md §8).
+
+Ring/rotation contract (DESIGN.md §11):
+
+* ``registers`` is (W, B, m): W time buckets of a B-row bank sharing one
+  static ``HLLConfig``; ``n_items`` is (W, B, 2) exact per-bucket-per-row
+  uint32 limb counters.
+* ``epochs`` labels each slot with the absolute time bucket it holds;
+  slot s always holds an epoch congruent to s modulo W, and the slot at
+  ``cursor`` holds the newest epoch.  ``advance()`` rotates the cursor and
+  zero-fills the slot it enters; ``advance_to(t)`` jumps forward any
+  distance, expiring every overwritten bucket, with no python loop.
+* ``observe(keys, items, plan)`` ingests into the CURRENT bucket through
+  the same fused bank scatter as ``SketchBank.update_many`` (key-routing
+  and drop rules of DESIGN.md §9 apply unchanged).
+* ``estimate_window(last_k, plan)`` masks the k newest live epochs, folds
+  the ring with the window backend registered under ``plan.backend``
+  (``register_window_backend`` in plan.py), and finalizes the scratch
+  (B, m) bank with one batched ``estimate_many`` — never a python loop
+  over buckets or rows.  Every registered fold is bit-identical to
+  merging the live buckets one by one (tests/test_window.py).
+
+``to_bytes``/``from_bytes`` is the RHLW wire format: a 28-byte window
+header + W int32 epoch labels + W per-bucket RHLB payloads, with the same
+garbage/truncation rejection contract as RHLL/RHLB (DESIGN.md §7, §9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sketch import hll
+from repro.sketch.bank import SketchBank
+from repro.sketch.hll import HLLConfig
+from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, get_window_backend
+
+_WINDOW_HEADER = struct.Struct("<4sBBBBQIII")
+# magic, ver, p, H, flags, seed, W, B, cursor
+_WINDOW_MAGIC = b"RHLW"
+_WINDOW_VERSION = 1
+_EPOCH = np.dtype("<i4")
+
+
+def _initial_epochs(window: int) -> np.ndarray:
+    """Epoch labels of a fresh ring at epoch 0: slot s holds the unique
+    epoch in (0 - W, 0] congruent to s mod W (negative = never filled)."""
+    slots = np.arange(window, dtype=np.int64)
+    return (0 - np.mod(0 - slots, window)).astype(_EPOCH)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WindowedBank:
+    """A (W, B, m) ring of time-bucket banks as one frozen pytree."""
+
+    registers: jnp.ndarray  # (W, B, m) uint8
+    n_items: jnp.ndarray  # (W, B, 2) uint32 limb pairs per bucket row
+    cursor: jnp.ndarray  # () int32: ring slot of the newest epoch
+    epochs: jnp.ndarray  # (W,) int32: absolute epoch held by each slot
+    cfg: HLLConfig = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def empty(
+        cls, window: int, rows: int, cfg: Optional[HLLConfig] = None
+    ) -> "WindowedBank":
+        cfg = cfg or HLLConfig()
+        if window < 1:
+            raise ValueError(f"a window needs at least one bucket, got {window}")
+        if rows < 1:
+            raise ValueError(f"a bank needs at least one row, got {rows}")
+        return cls(
+            jnp.zeros((window, rows, cfg.m), hll.REGISTER_DTYPE),
+            jnp.zeros((window, rows, 2), jnp.uint32),
+            jnp.zeros((), jnp.int32),
+            jnp.asarray(_initial_epochs(window)),
+            cfg,
+        )
+
+    def with_rows(self, rows: int) -> "WindowedBank":
+        """Grow the bank axis to ``rows`` (new rows start empty)."""
+        have = self.rows
+        if rows < have:
+            raise ValueError(f"cannot shrink a {have}-row window to {rows}")
+        if rows == have:
+            return self
+        pad = ((0, 0), (0, rows - have), (0, 0))
+        return dataclasses.replace(
+            self,
+            registers=jnp.pad(self.registers, pad),
+            n_items=jnp.pad(self.n_items, pad),
+        )
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def window(self) -> int:
+        return int(self.registers.shape[0])
+
+    @property
+    def rows(self) -> int:
+        return int(self.registers.shape[1])
+
+    def __len__(self) -> int:
+        return self.rows
+
+    @property
+    def epoch(self) -> int:
+        """The newest (current) absolute epoch — host-side read."""
+        return int(self.epochs[self.cursor])
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(W, B) exact per-bucket-per-row observation counts as uint64."""
+        limbs = np.asarray(self.n_items)
+        hi = limbs[..., 0].astype(np.uint64)
+        lo = limbs[..., 1].astype(np.uint64)
+        return (hi << np.uint64(32)) | lo
+
+    def window_counts(self, last_k: Optional[int] = None) -> np.ndarray:
+        """(B,) exact observation counts over the last ``last_k`` epochs."""
+        mask = np.asarray(self._live_mask(self._check_last_k(last_k)))
+        return self.counts[mask].sum(axis=0, dtype=np.uint64)
+
+    def _check_last_k(self, last_k: Optional[int]) -> int:
+        if last_k is None:
+            return self.window
+        if not 1 <= int(last_k) <= self.window:
+            raise ValueError(f"last_k must be in [1, {self.window}], got {last_k}")
+        return int(last_k)
+
+    def _live_mask(self, last_k: int) -> jnp.ndarray:
+        """(W,) bool: slots holding one of the ``last_k`` newest epochs."""
+        newest = self.epochs[self.cursor]
+        return self.epochs > newest - last_k
+
+    # ------------------------------------------------------------------
+    # ingestion (current bucket; paper phase 3)
+    # ------------------------------------------------------------------
+
+    def observe(
+        self,
+        keys: jnp.ndarray,
+        items: jnp.ndarray,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> "WindowedBank":
+        """Route each item to row ``keys[i]`` of the CURRENT time bucket.
+
+        The current bucket IS a ``SketchBank``, so the ingest delegates to
+        ``SketchBank.update_many`` wholesale — one fused bank scatter, and
+        the §9 validation/drop/counter rules cannot drift from the flat
+        path.  Empty streams return ``self`` without dispatching anything.
+        """
+        cur = SketchBank(
+            jax.lax.dynamic_index_in_dim(
+                self.registers, self.cursor, 0, keepdims=False
+            ),
+            jax.lax.dynamic_index_in_dim(self.n_items, self.cursor, 0, keepdims=False),
+            self.cfg,
+        )
+        new = cur.update_many(keys, items, plan)
+        if new is cur:  # the empty-stream short-circuit: nothing to write back
+            return self
+        return dataclasses.replace(
+            self,
+            registers=jax.lax.dynamic_update_index_in_dim(
+                self.registers, new.registers, self.cursor, 0
+            ),
+            n_items=jax.lax.dynamic_update_index_in_dim(
+                self.n_items, new.n_items, self.cursor, 0
+            ),
+        )
+
+    # ------------------------------------------------------------------
+    # rotation (the sliding part of the window)
+    # ------------------------------------------------------------------
+
+    def advance(self, steps: int = 1) -> "WindowedBank":
+        """Open ``steps`` new epochs, expiring the buckets they overwrite."""
+        if steps < 1:
+            raise ValueError(f"advance needs steps >= 1, got {steps}")
+        return self.advance_to(self.epochs[self.cursor] + steps)
+
+    def advance_to(self, epoch) -> "WindowedBank":
+        """Rotate forward so ``epoch`` is current; the past never returns.
+
+        Every slot whose label changes is zero-filled (its old bucket has
+        slid out of the window); jumping W or more epochs expires the whole
+        ring.  ``epoch`` at or before the current epoch is a no-op, so
+        replaying an old timestamp cannot resurrect expired data.  All
+        vectorized — no python loop over buckets.
+        """
+        target = jnp.maximum(jnp.asarray(epoch, jnp.int32), self.epochs[self.cursor])
+        window = self.window
+        slots = jnp.arange(window, dtype=jnp.int32)
+        # the unique epoch in (target - W, target] congruent to s mod W
+        new_epochs = target - jnp.mod(target - slots, window)
+        stale = new_epochs > self.epochs  # slots being overwritten
+        keep = ~stale[:, None, None]
+        return dataclasses.replace(
+            self,
+            registers=jnp.where(keep, self.registers, 0).astype(self.registers.dtype),
+            n_items=jnp.where(keep, self.n_items, 0).astype(self.n_items.dtype),
+            cursor=jnp.mod(target, window).astype(jnp.int32),
+            epochs=new_epochs.astype(jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    # estimation (paper phase 4, windowed)
+    # ------------------------------------------------------------------
+
+    def estimate_window(
+        self,
+        last_k: Optional[int] = None,
+        plan: Optional[ExecutionPlan] = None,
+        estimator: Optional[str] = None,
+    ) -> jnp.ndarray:
+        """(B,) float32 distinct counts over the ``last_k`` newest epochs.
+
+        ONE fused masked max-reduce over the ring axis (the window backend
+        registered under ``plan.backend``) into a scratch (B, m) bank,
+        then one batched ``estimate_many`` dispatch — never a python loop
+        over buckets or rows.  The fold reads replicated ring state, so
+        mesh plans fold locally (placement only moves ingest streams).
+        """
+        folded = self._fold_registers(self._check_last_k(last_k), plan)
+        plan = DEFAULT_PLAN if plan is None else plan
+        from repro.sketch import estimators as _estimators
+
+        return _estimators.estimate_many(
+            folded, self.cfg, estimator=estimator or plan.estimator
+        )
+
+    def _fold_registers(
+        self, last_k: int, plan: Optional[ExecutionPlan]
+    ) -> jnp.ndarray:
+        plan = (DEFAULT_PLAN if plan is None else plan).validate()
+        backend = get_window_backend(plan.backend)
+        return backend(self.registers, self._live_mask(last_k), self.cfg, plan)
+
+    def fold_window(
+        self,
+        last_k: Optional[int] = None,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> SketchBank:
+        """The ``last_k``-epoch suffix collapsed to a flat ``SketchBank``.
+
+        Registers come from the fused ring fold; the exact per-row
+        counters sum the live buckets' counts (host-side, exact to 2^64).
+        """
+        last_k = self._check_last_k(last_k)
+        regs = self._fold_registers(last_k, plan)
+        totals = self.window_counts(last_k)
+        limbs = np.stack(
+            [
+                (totals >> np.uint64(32)).astype(np.uint32),
+                totals.astype(np.uint32),
+            ],
+            axis=-1,
+        )
+        return SketchBank(regs, jnp.asarray(limbs), self.cfg)
+
+    # ------------------------------------------------------------------
+    # serialization (RHLW: window header + epochs + RHLB payloads)
+    # ------------------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """28-byte window header + W int32 epochs + W RHLB bucket blobs."""
+        header = _WINDOW_HEADER.pack(
+            _WINDOW_MAGIC,
+            _WINDOW_VERSION,
+            self.cfg.p,
+            self.cfg.hash_bits,
+            0,
+            self.cfg.seed,
+            self.window,
+            self.rows,
+            int(self.cursor),
+        )
+        epochs = np.asarray(self.epochs, dtype=_EPOCH).tobytes()
+        buckets = b"".join(
+            SketchBank(self.registers[w], self.n_items[w], self.cfg).to_bytes()
+            for w in range(self.window)
+        )
+        return header + epochs + buckets
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "WindowedBank":
+        if len(data) < _WINDOW_HEADER.size:
+            raise ValueError(f"truncated window: {len(data)} bytes")
+        magic, version, p, hash_bits, _flags, seed, window, rows, cursor = (
+            _WINDOW_HEADER.unpack(data[: _WINDOW_HEADER.size])
+        )
+        if magic != _WINDOW_MAGIC:
+            raise ValueError(f"bad magic {magic!r}; not a serialized window")
+        if version != _WINDOW_VERSION:
+            raise ValueError(f"unsupported window version {version}")
+        if window < 1 or rows < 1:
+            raise ValueError(f"window header claims {window} buckets x {rows} rows")
+        if cursor >= window:
+            raise ValueError(f"cursor {cursor} out of range for W={window}")
+        cfg = HLLConfig(p=p, hash_bits=hash_bits, seed=seed)
+        epochs_end = _WINDOW_HEADER.size + window * _EPOCH.itemsize
+        bucket_size = 20 + rows * 8 + rows * cfg.m
+        expected = epochs_end + window * bucket_size
+        if len(data) != expected:
+            # covers payloads cut mid-bucket and mid-row alike
+            raise ValueError(
+                f"window payload is {len(data)} bytes, expected {expected} "
+                f"for W={window}, B={rows}, m={cfg.m}"
+            )
+        epochs = np.frombuffer(data[_WINDOW_HEADER.size : epochs_end], _EPOCH)
+        epochs = epochs.astype(np.int64)
+        slots = np.arange(window, dtype=np.int64)
+        if not (
+            np.array_equal(np.mod(epochs, window), slots)
+            and int(np.argmax(epochs)) == cursor
+            and int(epochs.max() - epochs.min()) == window - 1
+        ):
+            raise ValueError("corrupt epoch labels: ring invariant violated")
+        regs, limbs = [], []
+        for w in range(window):
+            start = epochs_end + w * bucket_size
+            bucket = SketchBank.from_bytes(data[start : start + bucket_size])
+            if bucket.cfg != cfg or len(bucket) != rows:
+                raise ValueError(f"bucket {w} disagrees with the window header")
+            regs.append(bucket.registers)
+            limbs.append(bucket.n_items)
+        return cls(
+            jnp.stack(regs),
+            jnp.stack(limbs),
+            jnp.asarray(cursor, jnp.int32),
+            jnp.asarray(epochs.astype(_EPOCH)),
+            cfg,
+        )

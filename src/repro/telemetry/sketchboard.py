@@ -24,6 +24,15 @@ instead of a python loop of per-sketch finalizations.  ``report(exact=True)``
 authoritative readings; both dispatch through the pluggable estimator
 registry, defaulting to the board plan's ``estimator``.
 
+``window=W`` switches the board to WINDOWED mode (DESIGN.md §11): streams
+become rows of one ``WindowedBank`` ring, ``advance()`` slides the window
+by one epoch, and every read — ``report()``, ``estimate()``, ``stream()``
+— answers over the last W epochs instead of all time (``report()`` is one
+fused ring fold + one batched estimate_many).  The flush-before-read
+contract is unchanged; flat-board ``serialize``/``merge_from`` are
+replaced by ``window_bytes()`` (the RHLW blob) because epochs on
+different boards are not aligned.
+
 Every stream's updates run under one ``ExecutionPlan``, so a board can be
 switched from the local jnp path to Pallas pipelines or a device mesh —
 or to a different estimator — without touching call sites.
@@ -43,11 +52,13 @@ from repro.sketch import (
     ExecutionPlan,
     HyperLogLog,
     SketchBank,
+    WindowedBank,
     estimate_many,
     get_bank_backend,
     update_many,
 )
 from repro.sketch.hll import HLLConfig
+from repro.sketch.hll import standard_error as hll_standard_error
 
 
 @dataclasses.dataclass
@@ -57,10 +68,27 @@ class StreamSketch:
     sketches: Dict[str, HyperLogLog] = dataclasses.field(default_factory=dict)
     # buffered keyed ingest: flush once this many items are pending
     flush_items: int = 1 << 20
+    # W > 0 switches the board to windowed mode (DESIGN.md §11): streams
+    # become rows of one WindowedBank ring and every read answers over the
+    # sliding W-epoch window instead of all time
+    window: Optional[int] = None
     _pending: Dict[str, List[jnp.ndarray]] = dataclasses.field(
         default_factory=dict, repr=False
     )
     _pending_items: int = dataclasses.field(default=0, repr=False)
+    _wbank: Optional[WindowedBank] = dataclasses.field(default=None, repr=False)
+    _wrows: Dict[str, int] = dataclasses.field(default_factory=dict, repr=False)
+    # the full-window fold, memoized between ring mutations so per-stream
+    # reads (stream()/estimate()) over many streams cost ONE fold, not B
+    _wfold_cache: Optional[SketchBank] = dataclasses.field(
+        default=None, repr=False
+    )
+
+    def __post_init__(self):
+        if self.window is not None and self.window < 1:
+            raise ValueError(
+                f"window needs at least one bucket, got {self.window}"
+            )
 
     def _estimator(self, estimator: Optional[str]) -> str:
         if estimator is not None:
@@ -70,16 +98,41 @@ class StreamSketch:
         )
 
     def stream(self, name: str) -> HyperLogLog:
-        """The named sketch, current through any buffered observations."""
+        """The named sketch, current through any buffered observations.
+
+        In windowed mode this is a read-only SNAPSHOT of the stream's
+        sliding window (ring fold + exact windowed counter); mutate the
+        board through ``observe``/``advance``, not the snapshot.
+        """
         if name in self._pending:
             self.flush()
+        if self.window is not None:
+            if name not in self._wrows:
+                self._wrows[name] = len(self._wrows)
+            row = self._wrows[name]
+            if self._wbank is None or row >= self._wbank.rows:
+                return HyperLogLog.empty(self.cfg)
+            return self._window_fold().row(row)
         if name not in self.sketches:
             self.sketches[name] = HyperLogLog.empty(self.cfg)
         return self.sketches[name]
 
+    def _window_fold(self) -> SketchBank:
+        """The live window collapsed to a flat bank (row = stream).
+
+        Memoized until the next ring mutation (flush/advance/grow), so a
+        loop of per-stream reads folds the ring once, like report() does.
+        """
+        if self._wfold_cache is None:
+            self._wfold_cache = self._wbank.fold_window(plan=self.plan)
+        return self._wfold_cache
+
     def observe(self, name: str, items: jnp.ndarray) -> None:
         """Buffer ``items`` for ``name``; aggregation happens at flush."""
-        if name not in self.sketches:
+        if self.window is not None:
+            if name not in self._wrows:
+                self._wrows[name] = len(self._wrows)
+        elif name not in self.sketches:
             self.sketches[name] = HyperLogLog.empty(self.cfg)
         # murmur3 hashes the 32-bit pattern (it casts to uint32), so
         # normalizing the buffer dtype here cannot change any register
@@ -103,6 +156,29 @@ class StreamSketch:
         if not self._pending:
             return
         names = list(self._pending)
+        if self.window is not None:
+            # windowed boards land the whole buffer in the CURRENT time
+            # bucket of the ring with the same single keyed dispatch
+            keys = jnp.concatenate(
+                [
+                    jnp.full((a.size,), self._wrows[name], jnp.int32)
+                    for name in names
+                    for a in self._pending[name]
+                ]
+            )
+            items = jnp.concatenate(
+                [a for name in names for a in self._pending[name]]
+            )
+            rows = len(self._wrows)
+            if self._wbank is None:
+                self._wbank = WindowedBank.empty(self.window, rows, self.cfg)
+            elif rows > self._wbank.rows:
+                self._wbank = self._wbank.with_rows(rows)
+            self._wbank = self._wbank.observe(keys, items, self.plan)
+            self._wfold_cache = None
+            self._pending.clear()
+            self._pending_items = 0
+            return
         try:
             get_bank_backend((self.plan or DEFAULT_PLAN).backend)
         except ValueError:
@@ -134,7 +210,49 @@ class StreamSketch:
         self._pending.clear()
         self._pending_items = 0
 
+    def advance(self, steps: int = 1) -> None:
+        """Windowed mode: open ``steps`` new epochs (flushes first, so
+        everything observed so far belongs to the bucket being closed)."""
+        self._require_window("advance")
+        self.flush()
+        self._ensure_wbank()
+        self._wbank = self._wbank.advance(steps)
+        self._wfold_cache = None
+
+    def advance_to(self, epoch: int) -> None:
+        """Windowed mode: jump the ring forward to absolute ``epoch``."""
+        self._require_window("advance_to")
+        self.flush()
+        self._ensure_wbank()
+        self._wbank = self._wbank.advance_to(epoch)
+        self._wfold_cache = None
+
+    def window_bytes(self) -> bytes:
+        """Windowed mode: the whole ring as one RHLW blob (DESIGN.md §11).
+
+        Row-to-name mapping travels separately (``window_rows()``); the
+        wire format carries ring state only.
+        """
+        self._require_window("window_bytes")
+        self.flush()
+        self._ensure_wbank()
+        return self._wbank.to_bytes()
+
+    def window_rows(self) -> tuple:
+        """Stream names in bank-row order (row i holds names[i])."""
+        self._require_window("window_rows")
+        return tuple(sorted(self._wrows, key=self._wrows.get))
+
+    def _require_window(self, op: str) -> None:
+        if self.window is None:
+            raise ValueError(f"{op}() needs a windowed board (window=W)")
+
     def merge_from(self, other: "StreamSketch") -> None:
+        if self.window is not None or other.window is not None:
+            raise ValueError(
+                "windowed boards do not merge: epochs on different boards "
+                "are not aligned; ship RHLW blobs (window_bytes) instead"
+            )
         if other.cfg != self.cfg:
             raise ValueError(
                 f"cannot merge boards with different configs: "
@@ -146,11 +264,19 @@ class StreamSketch:
             self.sketches[name] = self.stream(name).merge(sk)
 
     def estimate(self, name: str, estimator: Optional[str] = None) -> float:
-        """Exact host-side estimate for one stream."""
+        """Exact host-side estimate for one stream.
+
+        On a windowed board this is the stream's SLIDING-WINDOW distinct
+        count (last W epochs), not an all-time figure.
+        """
         return self.stream(name).estimate(self._estimator(estimator))
 
     def serialize(self) -> Dict[str, bytes]:
         """Dense per-stream blobs (HyperLogLog.to_bytes) for shipping."""
+        if self.window is not None:
+            raise ValueError(
+                "windowed boards serialize the whole ring: use window_bytes()"
+            )
         self.flush()
         return {name: sk.to_bytes() for name, sk in self.sketches.items()}
 
@@ -190,9 +316,17 @@ class StreamSketch:
     def report(
         self, exact: bool = False, estimator: Optional[str] = None
     ) -> Dict[str, dict]:
-        """Per-stream estimates; batched device finalization by default."""
+        """Per-stream estimates; batched device finalization by default.
+
+        Windowed boards report ROLLING distinct counts over the sliding
+        W-epoch window (one fused ring fold + one batched estimate_many);
+        ``items_seen``/``duplication`` likewise cover only the live
+        window.  Same row schema as flat boards.
+        """
         self.flush()
         estimator = self._estimator(estimator)
+        if self.window is not None:
+            return self._report_window(exact, estimator)
         names = list(self.sketches)
         if exact or not names:
             estimates = [
@@ -212,5 +346,44 @@ class StreamSketch:
                 "items_seen": sk.count,
                 "duplication": (sk.count / est) if est > 0 else float("nan"),
                 "stderr_expected": sk.standard_error,
+            }
+        return out
+
+    def _ensure_wbank(self) -> None:
+        """Materialize/grow the ring for every registered stream row."""
+        rows = max(1, len(self._wrows))
+        if self._wbank is None:
+            self._wbank = WindowedBank.empty(self.window, rows, self.cfg)
+            self._wfold_cache = None
+        elif rows > self._wbank.rows:
+            self._wbank = self._wbank.with_rows(rows)
+            self._wfold_cache = None
+
+    def _report_window(self, exact: bool, estimator: str) -> Dict[str, dict]:
+        names = self.window_rows()
+        if not names:
+            return {}
+        self._ensure_wbank()
+        # ONE (cached) ring fold; finalization is one batched estimate_many
+        # or, for exact=True, the host finalizer per row — same split as
+        # the flat board path above
+        folded = self._window_fold()
+        if exact:
+            estimates = [
+                folded.estimate(self._wrows[n], estimator) for n in names
+            ]
+        else:
+            ests = np.asarray(folded.estimate_many(estimator))
+            estimates = [float(ests[self._wrows[n]]) for n in names]
+        counts = folded.counts
+        stderr = hll_standard_error(self.cfg)
+        out = {}
+        for name, est in zip(names, estimates):
+            seen = int(counts[self._wrows[name]])
+            out[name] = {
+                "estimate": est,
+                "items_seen": seen,
+                "duplication": (seen / est) if est > 0 else float("nan"),
+                "stderr_expected": stderr,
             }
         return out

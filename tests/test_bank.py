@@ -241,6 +241,32 @@ def test_bank_bytes_rejects_garbage():
         SketchBank.from_bytes(blob[:-1])
 
 
+@pytest.mark.parametrize("frac", [0.0, 0.05, 0.2, 0.45, 0.7, 0.9, 0.999])
+def test_bank_bytes_rejects_truncation_anywhere(frac):
+    """A blob cut at ANY point — mid-header, mid-counts, mid-row — must
+    raise ValueError cleanly, never hand back a short-read bank (the same
+    contract RHLW enforces per bucket, tests/test_window.py)."""
+    bank = _filled_bank(rows=5, n=4000)
+    blob = bank.to_bytes()
+    cut = int(len(blob) * frac)
+    with pytest.raises(ValueError):
+        SketchBank.from_bytes(blob[:cut])
+    with pytest.raises(ValueError):
+        SketchBank.from_bytes(blob + b"\x00")  # trailing garbage too
+
+
+def test_bank_bytes_rejects_cut_mid_row():
+    rows = 4
+    bank = _filled_bank(rows=rows)
+    blob = bank.to_bytes()
+    header_end = 20 + rows * 8
+    # end the payload halfway through row 2's registers
+    cut = header_end + 2 * CFG.m + CFG.m // 2
+    assert cut < len(blob)
+    with pytest.raises(ValueError, match="payload"):
+        SketchBank.from_bytes(blob[:cut])
+
+
 def test_corrupted_blob_never_leaks_across_rows():
     """The ingest-side extension of PR 2's histogram guard: flipping row
     j's registers to out-of-range values must not move ANY other row's

@@ -1,0 +1,487 @@
+"""WindowedBank: ring rotation, fused sliding-window estimates, RHLW format.
+
+Acceptance property for the windowed subsystem (DESIGN.md §11): for EVERY
+registered window backend (local and mesh placement), ``estimate_window``
+over any suffix window is bit-identical to the naive
+merge-each-bucket-then-estimate reference, for W up to 64 and B up to 256.
+Plus: rotation/expiry exactness (after W rotations a bucket contributes
+nothing, and a full-window estimate equals the merged-HyperLogLog union
+bit-for-bit), exact per-bucket counters, the RHLW wire format with
+garbage/truncation rejection, StreamSketch's windowed mode, and the
+empty-ingest short-circuit (no backend dispatch for zero-length streams).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sketch import (
+    ExecutionPlan,
+    HLLConfig,
+    HyperLogLog,
+    SketchBank,
+    WindowedBank,
+    available_window_backends,
+    estimate_many,
+    get_window_backend,
+    register_backend,
+    register_bank_backend,
+    update_many,
+)
+from repro.sketch.backends import bank_update_jnp, update_pipelined
+from repro.telemetry.sketchboard import StreamSketch
+
+CFG = HLLConfig(p=6, hash_bits=64)  # small m so the pallas paths run
+
+
+def _chunk(n, rows, seed):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, rows, n, dtype=np.int32))
+    items = jnp.asarray(rng.integers(0, 2**31, n, dtype=np.int32))
+    return keys, items
+
+
+def _ring_from_chunks(window, rows, chunks, plan=None):
+    """One epoch per chunk: observe, then advance into the next epoch."""
+    win = WindowedBank.empty(window, rows, CFG)
+    for e, (keys, items) in enumerate(chunks):
+        if e:
+            win = win.advance()
+        win = win.observe(keys, items, plan)
+    return win
+
+
+def _naive_window(win, last_k):
+    """The reference: merge each live bucket one by one, then estimate."""
+    ring = np.asarray(win.registers)
+    mask = np.asarray(win._live_mask(last_k))
+    acc = np.zeros(ring.shape[1:], ring.dtype)
+    for w in range(ring.shape[0]):
+        if mask[w]:
+            acc = np.maximum(acc, ring[w])
+    return acc, np.asarray(estimate_many(jnp.asarray(acc), CFG))
+
+
+def _plans():
+    plans = [ExecutionPlan(backend=b) for b in available_window_backends()]
+    plans += [
+        ExecutionPlan(backend=b, pipelines=3) for b in available_window_backends()
+    ]
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    plans += [
+        ExecutionPlan(backend=b).with_mesh(mesh)
+        for b in available_window_backends()
+    ]
+    return plans
+
+
+# ----------------------------------------------------------------------------
+# the fused fold vs the naive merge loop (the acceptance property)
+# ----------------------------------------------------------------------------
+
+
+def test_window_backends_registered():
+    assert set(available_window_backends()) >= {
+        "jnp",
+        "pallas",
+        "pallas_pipelined",
+    }
+
+
+def test_unknown_window_backend_raises_targeted():
+    with pytest.raises(ValueError, match="no window fold path"):
+        get_window_backend("definitely_not_registered")
+
+
+@pytest.mark.parametrize("backend", available_window_backends())
+def test_estimate_window_matches_naive_suffixes(backend):
+    window, rows = 8, 17  # prime row count: divides no row block evenly
+    chunks = [_chunk(700, rows, seed=100 + e) for e in range(11)]  # rotates past W
+    win = _ring_from_chunks(window, rows, chunks)
+    for last_k in (1, 2, 5, 8):
+        ref_regs, ref_est = _naive_window(win, last_k)
+        for pipelines in (1, 3, 8):
+            plan = ExecutionPlan(backend=backend, pipelines=pipelines)
+            fold = np.asarray(win._fold_registers(last_k, plan))
+            np.testing.assert_array_equal(fold, ref_regs)
+            got = np.asarray(win.estimate_window(last_k, plan))
+            np.testing.assert_array_equal(got, ref_est)
+
+
+def test_acceptance_w64_b256_bit_identical_all_plans():
+    window, rows = 64, 256
+    rng = np.random.default_rng(7)
+    base = WindowedBank.empty(window, rows, CFG).advance_to(1000)
+    regs = rng.integers(0, CFG.max_rank + 1, (window, rows, CFG.m), np.uint8)
+    win = dataclasses.replace(base, registers=jnp.asarray(regs))
+    for last_k in (1, 17, 64):
+        ref_regs, ref_est = _naive_window(win, last_k)
+        for plan in _plans():
+            got = np.asarray(win.estimate_window(last_k, plan))
+            np.testing.assert_array_equal(
+                got, ref_est, err_msg=f"{plan.backend}/{plan.placement}/k={last_k}"
+            )
+        np.testing.assert_array_equal(
+            np.asarray(win._fold_registers(last_k, None)), ref_regs
+        )
+
+
+def test_estimate_window_validates_last_k():
+    win = WindowedBank.empty(4, 3, CFG)
+    with pytest.raises(ValueError, match="last_k"):
+        win.estimate_window(0)
+    with pytest.raises(ValueError, match="last_k"):
+        win.estimate_window(5)
+
+
+# ----------------------------------------------------------------------------
+# rotation, expiry, and the merged-union equivalence
+# ----------------------------------------------------------------------------
+
+
+def test_advance_expiry_is_exact():
+    """After W rotations a bucket's items contribute nothing to any window."""
+    window, rows = 4, 5
+    poison = _chunk(3000, rows, seed=1)
+    later = [_chunk(800, rows, seed=10 + e) for e in range(window)]
+    nothing = (jnp.zeros((0,), jnp.int32),) * 2
+    with_poison = _ring_from_chunks(window, rows, [poison] + later)
+    without = _ring_from_chunks(window, rows, [nothing] + later)
+    assert with_poison.epoch == without.epoch == window
+    for last_k in range(1, window + 1):
+        np.testing.assert_array_equal(
+            np.asarray(with_poison._fold_registers(last_k, None)),
+            np.asarray(without._fold_registers(last_k, None)),
+        )
+
+
+@pytest.mark.parametrize("backend", available_window_backends())
+def test_full_window_equals_merged_union_bit_for_bit(backend):
+    """Windowed estimate over all live buckets == merged-HLL union estimate."""
+    window, rows = 5, 6
+    chunks = [_chunk(1200, rows, seed=40 + e) for e in range(window)]
+    win = _ring_from_chunks(window, rows, chunks)
+    merged = []
+    for b in range(rows):
+        sk = HyperLogLog.empty(CFG)
+        for keys, items in chunks:
+            sel = np.asarray(items)[np.asarray(keys) == b]
+            sk = sk.merge(HyperLogLog.of(jnp.asarray(sel), CFG))
+        merged.append(sk)
+    plan = ExecutionPlan(backend=backend)
+    folded = win.fold_window(plan=plan)
+    np.testing.assert_array_equal(
+        np.asarray(folded.registers),
+        np.stack([np.asarray(sk.registers) for sk in merged]),
+    )
+    # device path: one fused fold + estimate_many == union registers finalized
+    np.testing.assert_array_equal(
+        np.asarray(win.estimate_window(plan=plan)),
+        np.asarray(estimate_many(jnp.stack([sk.registers for sk in merged]), CFG)),
+    )
+    # exact host path agrees row by row, bit for bit
+    for b in range(rows):
+        assert folded.row(b).estimate() == merged[b].estimate()
+
+
+def test_advance_to_jump_expires_everything():
+    rows = 3
+    win = _ring_from_chunks(4, rows, [_chunk(500, rows, seed=2)])
+    far = win.advance_to(win.epoch + 4)
+    assert far.counts.sum() == 0
+    assert np.asarray(far.registers).sum() == 0
+    assert far.epoch == win.epoch + 4
+
+
+def test_advance_to_is_monotone_and_keeps_invariants():
+    win = _ring_from_chunks(4, 2, [_chunk(300, 2, seed=3)])
+    win = win.advance_to(9)
+    assert win.epoch == 9
+    noop = win.advance_to(5)  # the past never returns
+    assert noop.epoch == 9
+    np.testing.assert_array_equal(
+        np.asarray(noop.registers), np.asarray(win.registers)
+    )
+    for steps in (1, 2, 3, 5):
+        win = win.advance(steps)
+    epochs = np.asarray(win.epochs)
+    window = win.window
+    np.testing.assert_array_equal(np.mod(epochs, window), np.arange(window))
+    assert epochs.max() == win.epoch and epochs.max() - epochs.min() == window - 1
+    with pytest.raises(ValueError, match="steps"):
+        win.advance(0)
+
+
+def test_observe_counts_current_bucket_and_drops_bad_keys():
+    rows = 7
+    win = WindowedBank.empty(3, rows, CFG)
+    keys, items = _chunk(2000, rows, seed=5)
+    bad = np.asarray(keys).copy()
+    bad[::5] = -1
+    bad[::7] = rows + 2
+    win = win.observe(jnp.asarray(bad), items)
+    in_range = bad[(bad >= 0) & (bad < rows)]
+    np.testing.assert_array_equal(win.counts[0], np.bincount(in_range, minlength=rows))
+    assert win.counts[1:].sum() == 0  # only the current bucket moved
+    ref = update_many(SketchBank.empty(rows, CFG), jnp.asarray(bad), items)
+    np.testing.assert_array_equal(
+        np.asarray(win.registers[0]), np.asarray(ref.registers)
+    )
+    win2 = win.advance()
+    win2 = win2.observe(keys, items)
+    assert int(win2.counts[1].sum()) == 2000  # epoch 1 lives in slot 1
+    with pytest.raises(ValueError, match="same length"):
+        win.observe(jnp.zeros((3,), jnp.int32), jnp.zeros((4,), jnp.int32))
+
+
+def test_window_counts_sum_live_buckets():
+    rows = 4
+    chunks = [_chunk(600, rows, seed=60 + e) for e in range(5)]
+    win = _ring_from_chunks(3, rows, chunks)
+    per_epoch = [np.bincount(np.asarray(k), minlength=rows) for k, _ in chunks]
+    np.testing.assert_array_equal(
+        win.window_counts(), sum(per_epoch[2:])  # epochs 2..4 are live
+    )
+    np.testing.assert_array_equal(win.window_counts(1), per_epoch[4])
+
+
+def test_with_rows_grows_and_refuses_shrink():
+    win = _ring_from_chunks(3, 2, [_chunk(400, 2, seed=8)])
+    grown = win.with_rows(5)
+    assert grown.rows == 5 and grown.window == 3
+    np.testing.assert_array_equal(
+        np.asarray(grown.registers[:, :2]), np.asarray(win.registers)
+    )
+    assert np.asarray(grown.registers[:, 2:]).sum() == 0
+    assert grown.with_rows(5) is grown
+    with pytest.raises(ValueError, match="shrink"):
+        grown.with_rows(4)
+
+
+def test_empty_validates_shape():
+    with pytest.raises(ValueError, match="bucket"):
+        WindowedBank.empty(0, 4, CFG)
+    with pytest.raises(ValueError, match="row"):
+        WindowedBank.empty(4, 0, CFG)
+
+
+def test_windowed_bank_is_a_pytree_and_jits():
+    win = _ring_from_chunks(3, 4, [_chunk(300, 4, seed=9)])
+    leaves = jax.tree_util.tree_leaves(win)
+    assert len(leaves) == 4  # registers, counters, cursor, epochs; cfg static
+
+    @jax.jit
+    def step(w, keys, items):
+        return w.advance().observe(keys, items)
+
+    keys, items = _chunk(256, 4, seed=10)
+    out = step(win, keys, items)
+    assert isinstance(out, WindowedBank) and out.cfg == CFG
+    ref = win.advance().observe(keys, items)
+    np.testing.assert_array_equal(np.asarray(out.registers), np.asarray(ref.registers))
+    np.testing.assert_array_equal(np.asarray(out.epochs), np.asarray(ref.epochs))
+
+
+# ----------------------------------------------------------------------------
+# RHLW wire format (roundtrip + garbage/truncation rejection)
+# ----------------------------------------------------------------------------
+
+
+def test_rhlw_roundtrip():
+    win = _ring_from_chunks(3, 5, [_chunk(900, 5, seed=20 + e) for e in range(4)])
+    blob = win.to_bytes()
+    bucket = 20 + 5 * 8 + 5 * CFG.m
+    assert len(blob) == 28 + 3 * 4 + 3 * bucket
+    back = WindowedBank.from_bytes(blob)
+    assert back.cfg == win.cfg
+    assert int(back.cursor) == int(win.cursor) and back.epoch == win.epoch
+    np.testing.assert_array_equal(
+        np.asarray(back.registers), np.asarray(win.registers)
+    )
+    np.testing.assert_array_equal(np.asarray(back.epochs), np.asarray(win.epochs))
+    np.testing.assert_array_equal(back.counts, win.counts)
+    np.testing.assert_array_equal(
+        np.asarray(back.estimate_window()), np.asarray(win.estimate_window())
+    )
+
+
+def test_rhlw_rejects_garbage():
+    win = _ring_from_chunks(2, 3, [_chunk(500, 3, seed=30)])
+    blob = win.to_bytes()
+    with pytest.raises(ValueError, match="magic"):
+        WindowedBank.from_bytes(b"NOPE" + blob[4:])
+    with pytest.raises(ValueError, match="version"):
+        WindowedBank.from_bytes(blob[:4] + b"\x09" + blob[5:])
+    bad_cursor = bytearray(blob)
+    bad_cursor[24:28] = (7).to_bytes(4, "little")  # cursor >= W
+    with pytest.raises(ValueError, match="cursor"):
+        WindowedBank.from_bytes(bytes(bad_cursor))
+    bad_epochs = bytearray(blob)
+    bad_epochs[28:36] = b"\xff" * 8  # epoch labels off the ring
+    with pytest.raises(ValueError, match="epoch"):
+        WindowedBank.from_bytes(bytes(bad_epochs))
+    bucket_magic = bytearray(blob)
+    bucket_magic[36:40] = b"JUNK"  # first bucket's RHLB magic
+    with pytest.raises(ValueError, match="magic"):
+        WindowedBank.from_bytes(bytes(bucket_magic))
+
+
+@pytest.mark.parametrize("frac", [0.0, 0.1, 0.3, 0.5, 0.8, 0.99])
+def test_rhlw_rejects_truncation_anywhere(frac):
+    win = _ring_from_chunks(3, 4, [_chunk(700, 4, seed=31)])
+    blob = win.to_bytes()
+    cut = int(len(blob) * frac)
+    with pytest.raises(ValueError):
+        WindowedBank.from_bytes(blob[:cut])
+    with pytest.raises(ValueError, match="payload|truncated"):
+        WindowedBank.from_bytes(blob + b"\x00")
+
+
+# ----------------------------------------------------------------------------
+# StreamSketch windowed mode
+# ----------------------------------------------------------------------------
+
+
+def _windowed_board(window=3, plan=None):
+    return StreamSketch(CFG, plan=plan, window=window)
+
+
+def test_board_window_mode_reports_rolling_counts():
+    board = _windowed_board(window=2)
+    rng = np.random.default_rng(0)
+    old = jnp.asarray(rng.integers(0, 1 << 20, 4000, np.int32))
+    board.observe("users", old)
+    board.advance()
+    fresh = jnp.asarray(rng.integers(0, 50, 4000, np.int32))
+    board.observe("users", fresh)
+    both = board.report()["users"]
+    assert both["items_seen"] == 8000
+    board.advance()  # `old` slides out of the 2-epoch window
+    rolled = board.report()["users"]
+    assert rolled["items_seen"] == 4000
+    assert rolled["estimate"] < both["estimate"] / 10
+    # flat-board schema is preserved
+    assert set(rolled) == {
+        "estimate",
+        "items_seen",
+        "duplication",
+        "stderr_expected",
+    }
+
+
+def test_board_window_reads_flush_first():
+    board = _windowed_board(window=3)
+    items = jnp.arange(1000, dtype=jnp.int32)
+    board.observe("s", items)  # buffered, not yet flushed
+    rep = board.report()  # must flush before reading
+    assert rep["s"]["items_seen"] == 1000
+    board.observe("s", items)
+    assert board.stream("s").count == 2000  # stream() flushes too
+    est = board.estimate("s")
+    assert abs(est - rep["s"]["estimate"]) / rep["s"]["estimate"] < 1e-6
+
+
+def test_board_window_exact_report_matches_batched():
+    board = _windowed_board(window=2)
+    rng = np.random.default_rng(4)
+    for e in range(3):
+        if e:
+            board.advance()
+        board.observe("a", jnp.asarray(rng.integers(0, 9000, 3000, np.int32)))
+        board.observe("b", jnp.asarray(rng.integers(0, 80, 3000, np.int32)))
+    fast = board.report()
+    exact = board.report(exact=True)
+    for name in ("a", "b"):
+        assert fast[name]["items_seen"] == exact[name]["items_seen"]
+        rel = abs(fast[name]["estimate"] - exact[name]["estimate"])
+        assert rel / exact[name]["estimate"] < 1e-4
+
+
+def test_board_window_bytes_roundtrip_and_rows():
+    board = _windowed_board(window=2)
+    board.observe("x", jnp.arange(500, dtype=jnp.int32))
+    board.observe("y", jnp.arange(300, dtype=jnp.int32))
+    assert board.window_rows() == ("x", "y")
+    back = WindowedBank.from_bytes(board.window_bytes())
+    assert back.window == 2 and back.rows == 2
+    np.testing.assert_array_equal(
+        back.window_counts(), np.asarray([500, 300], np.uint64)
+    )
+
+
+def test_board_window_mode_guards():
+    flat = StreamSketch(CFG)
+    with pytest.raises(ValueError, match="windowed board"):
+        flat.advance()
+    with pytest.raises(ValueError, match="windowed board"):
+        flat.window_bytes()
+    with pytest.raises(ValueError, match="at least one bucket"):
+        StreamSketch(CFG, window=0)
+    board = _windowed_board()
+    board.observe("s", jnp.arange(10, dtype=jnp.int32))
+    with pytest.raises(ValueError, match="window_bytes"):
+        board.serialize()
+    with pytest.raises(ValueError, match="do not merge"):
+        board.merge_from(_windowed_board())
+    with pytest.raises(ValueError, match="do not merge"):
+        flat.merge_from(board)
+
+
+# ----------------------------------------------------------------------------
+# empty-ingest short-circuit (no backend dispatch for zero-length streams)
+# ----------------------------------------------------------------------------
+
+_SPY_CALLS = {"n": 0}
+
+
+# the spies delegate to the real jnp paths so bit-identity suites that sweep
+# every registered backend at runtime keep passing even with them registered
+@register_backend("spy_counting_jnp")
+def _spy_backend(registers, items, cfg, plan):
+    _SPY_CALLS["n"] += 1
+    return update_pipelined(registers, items, cfg, plan.pipelines)
+
+
+@register_bank_backend("spy_counting_jnp")
+def _spy_bank_backend(registers, keys, items, cfg, plan):
+    _SPY_CALLS["n"] += 1
+    return bank_update_jnp(registers, keys, items, cfg)
+
+
+def test_empty_update_dispatches_no_backend():
+    plan = ExecutionPlan(backend="spy_counting_jnp")
+    sk = HyperLogLog.empty(CFG)
+    _SPY_CALLS["n"] = 0
+    out = sk.update(jnp.zeros((0,), jnp.int32), plan)
+    assert _SPY_CALLS["n"] == 0 and out is sk
+    out = out.update(jnp.zeros((0, 7), jnp.int32), plan)  # empty 2-d too
+    assert _SPY_CALLS["n"] == 0
+    out = out.update(jnp.arange(8, dtype=jnp.int32), plan)
+    assert _SPY_CALLS["n"] == 1 and out.count == 8
+
+
+def test_empty_update_many_dispatches_no_backend():
+    plan = ExecutionPlan(backend="spy_counting_jnp")
+    bank = SketchBank.empty(4, CFG)
+    _SPY_CALLS["n"] = 0
+    empty = jnp.zeros((0,), jnp.int32)
+    out = bank.update_many(empty, empty, plan)
+    assert _SPY_CALLS["n"] == 0 and out is bank
+    with pytest.raises(ValueError, match="same length"):
+        bank.update_many(jnp.zeros((2,), jnp.int32), empty, plan)
+    assert _SPY_CALLS["n"] == 0  # validation still precedes the short-circuit
+    keys, items = _chunk(64, 4, seed=50)
+    out = out.update_many(keys, items, plan)
+    assert _SPY_CALLS["n"] == 1 and out.counts.sum() == 64
+
+
+def test_empty_windowed_observe_dispatches_no_backend():
+    plan = ExecutionPlan(backend="spy_counting_jnp")
+    win = WindowedBank.empty(2, 3, CFG)
+    _SPY_CALLS["n"] = 0
+    empty = jnp.zeros((0,), jnp.int32)
+    assert win.observe(empty, empty, plan) is win
+    assert _SPY_CALLS["n"] == 0
