@@ -1,0 +1,183 @@
+"""Sparse vs dense tenant-row storage: memory footprint + ingest latency.
+
+The §12 acceptance experiment: B-row banks under Zipf-skewed tenant
+traffic (<= 10% of rows hot, the rest nearly empty) ingested into a dense
+``SketchBank`` and a hybrid ``HybridBank`` side by side, at
+B in {64, 1024, 16384}.  For each size the bench measures
+
+  * actual storage bytes of both representations and the reduction factor
+    (the acceptance gate: >= 4x at B=16384),
+  * full-stream ingest latency for both paths,
+  * estimate quality: hybrid estimates vs the TRUE per-row distinct
+    counts, asserted within the estimator's 3-sigma band (+ small-count
+    slack), and
+  * bit-identity: the hybrid bank materialized to dense must equal the
+    dense bank register-for-register — promoted rows included, which
+    pins "promoted == dense-from-scratch" at benchmark scale.
+
+Writes ``BENCH_sparse.json`` (smoke runs write the gitignored
+``BENCH_sparse.smoke.json`` sibling, like every other JSON bench).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.sketch import HLLConfig, HybridBank, SketchBank
+
+JSON_PATH = "BENCH_sparse.json"
+BANK_SIZES = (64, 1024, 16384)
+HOT_FRAC = 0.1  # <= 10% of rows take ~90% of the traffic (acceptance)
+HOT_SHARE = 0.9
+CHUNKS = 4
+
+
+def _zipf_traffic(rows: int, n: int, rng):
+    """Keyed stream: HOT_FRAC of the rows receive HOT_SHARE of the items."""
+    hot = max(1, int(rows * HOT_FRAC))
+    hot_keys = rng.integers(0, hot, n)
+    cold_keys = rng.integers(hot, rows, n) if rows > hot else hot_keys
+    keys = np.where(rng.random(n) < HOT_SHARE, hot_keys, cold_keys)
+    items = rng.integers(0, 2**31, n, dtype=np.int32)
+    return keys.astype(np.int32), items
+
+
+def _true_distinct(keys: np.ndarray, items: np.ndarray, rows: int):
+    """(B,) exact distinct item counts per row (the oracle)."""
+    combo = keys.astype(np.int64) * (1 << 31) + items.astype(np.int64)
+    uniq = np.unique(combo)
+    return np.bincount((uniq >> 31).astype(np.int64), minlength=rows)
+
+
+def _ingest_all(empty_bank, key_chunks, item_chunks):
+    bank = empty_bank
+    for k, it in zip(key_chunks, item_chunks):
+        bank = bank.update_many(k, it)
+    if isinstance(bank, SketchBank):
+        jax.block_until_ready(bank.registers)
+    else:
+        jax.block_until_ready(bank.dense if bank.dense_rows else bank.pairs)
+    return bank
+
+
+def _time(fn, iters: int) -> float:
+    fn()  # warmup (compiles the fixed chunk shapes)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run(full: bool = False, smoke: bool = False):
+    cfg = HLLConfig(p=8, hash_bits=64) if smoke else HLLConfig(p=12, hash_bits=64)
+    sizes = (16, 64) if smoke else BANK_SIZES
+    sigma = 1.04 / np.sqrt(cfg.m)
+
+    results = []
+    for rows in sizes:
+        rng = np.random.default_rng(rows)
+        # enough hot traffic to push hot rows well past the m//4 threshold
+        n = 64 * rows if smoke else 222 * rows
+        keys, items = _zipf_traffic(rows, n, rng)
+        key_chunks = [
+            jnp.asarray(c) for c in np.array_split(keys, CHUNKS)
+        ]
+        item_chunks = [
+            jnp.asarray(c) for c in np.array_split(items, CHUNKS)
+        ]
+
+        iters = 1 if rows >= 16384 else 3
+        dense_s = _time(
+            lambda: _ingest_all(
+                SketchBank.empty(rows, cfg), key_chunks, item_chunks
+            ),
+            iters,
+        )
+        hybrid_s = _time(
+            lambda: _ingest_all(
+                HybridBank.empty(rows, cfg), key_chunks, item_chunks
+            ),
+            iters,
+        )
+        dense = _ingest_all(SketchBank.empty(rows, cfg), key_chunks, item_chunks)
+        hybrid = _ingest_all(HybridBank.empty(rows, cfg), key_chunks, item_chunks)
+
+        # bit-identity: promoted rows (and everything else) must equal the
+        # dense-from-scratch bank exactly — the documented CI gate
+        if not np.array_equal(
+            np.asarray(hybrid.to_dense().registers), np.asarray(dense.registers)
+        ):
+            raise AssertionError(
+                f"hybrid ingest diverged from dense registers at B={rows}"
+            )
+
+        # 3-sigma band vs the exact oracle (small-count slack for the
+        # near-empty cold rows, where sigma*true is sub-collision-sized)
+        true = _true_distinct(keys, items, rows)
+        est = np.asarray(hybrid.estimate_many(), np.float64)
+        tol = 3.0 * sigma * true + 3.0 * np.sqrt(true + 1.0)
+        err = np.abs(est - true)
+        if not (err <= tol).all():
+            worst = int(np.argmax(err - tol))
+            raise AssertionError(
+                f"B={rows} row {worst}: estimate {est[worst]:.1f} vs true "
+                f"{true[worst]} leaves the 3-sigma band (tol {tol[worst]:.1f})"
+            )
+
+        density = hybrid.density()
+        reduction = dense.nbytes / hybrid.nbytes
+        row = dict(
+            B=rows,
+            n_items=int(n),
+            hot_rows=max(1, int(rows * HOT_FRAC)),
+            promoted_rows=hybrid.dense_rows,
+            sparse_capacity=hybrid.capacity,
+            dense_nbytes=dense.nbytes,
+            hybrid_nbytes=hybrid.nbytes,
+            memory_reduction=reduction,
+            dense_ingest_us=dense_s * 1e6,
+            hybrid_ingest_us=hybrid_s * 1e6,
+            occupancy_mean=density["occupancy_mean"],
+            max_err_sigma=float((err / np.maximum(sigma * true, 1e-9)).max()),
+            bit_identical=True,
+        )
+        results.append(row)
+        emit(
+            "sparse_bank",
+            hybrid_s * 1e6,
+            f"B={rows} mem {dense.nbytes / 2**20:.1f}MiB->"
+            f"{hybrid.nbytes / 2**20:.1f}MiB ({reduction:.1f}x) "
+            f"promoted={hybrid.dense_rows} ingest dense={dense_s * 1e6:.0f}us "
+            f"hybrid={hybrid_s * 1e6:.0f}us",
+        )
+
+    if not smoke and results[-1]["memory_reduction"] < 4.0:
+        # the §12 acceptance gate: >= 4x at the largest bank size
+        raise AssertionError(
+            f"memory reduction {results[-1]['memory_reduction']:.2f}x at "
+            f"B={results[-1]['B']} is below the 4x acceptance bar"
+        )
+
+    out = {
+        "config": {"p": cfg.p, "hash_bits": cfg.hash_bits, "m": cfg.m},
+        "traffic": {"hot_frac": HOT_FRAC, "hot_share": HOT_SHARE},
+        "smoke": smoke,
+        "banks": results,
+    }
+    path = JSON_PATH.replace(".json", ".smoke.json") if smoke else JSON_PATH
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run(full=True)

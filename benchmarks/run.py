@@ -16,6 +16,8 @@ job runs this, so benchmark scripts can no longer rot unexecuted).
         also writes BENCH_bank_streaming.json
   window  sliding-window query (fused ring fold vs per-bucket merge loop);
           also writes BENCH_window.json
+  sparse  hybrid sparse/dense tenant-row storage (memory + ingest latency
+          vs the dense bank under Zipf traffic); writes BENCH_sparse.json
 
 JSON-writing benches write in every mode: full runs update the tracked
 ``BENCH_*.json`` perf trajectory, smoke runs write sibling
@@ -47,6 +49,7 @@ SUITE = {
     "estimators": "bench_estimators",
     "bank": "bench_bank_streaming",
     "window": "bench_window",
+    "sparse": "bench_sparse",
 }
 
 
@@ -57,7 +60,7 @@ def main() -> None:
                     help="tiny sizes: just prove every bench still runs")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig4a,fig4b,tab2,tab3,tab4,"
-                         "estimators,bank,window")
+                         "estimators,bank,window,sparse")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")

@@ -22,7 +22,7 @@ from repro.sketch import (
     DEFAULT_ESTIMATOR,
     ExecutionPlan,
     HLLConfig,
-    SketchBank,
+    HybridBank,
     WindowedBank,
     available_estimators,
 )
@@ -43,6 +43,9 @@ def main():
                     help="phase-4 finalizer for the telemetry board")
     ap.add_argument("--window-epochs", type=int, default=4,
                     help="ring buckets for the sliding request window")
+    ap.add_argument("--sparse-threshold", type=int, default=None,
+                    help="distinct-bucket promotion threshold for the "
+                         "hybrid per-request bank (default: m // 4)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
@@ -55,7 +58,9 @@ def main():
     # streams with one batched estimate_many dispatch
     board = StreamSketch(
         HLLConfig(p=12, hash_bits=64),
-        plan=ExecutionPlan(estimator=args.estimator),
+        plan=ExecutionPlan(
+            estimator=args.estimator, sparse_threshold=args.sparse_threshold
+        ),
     )
 
     B, S, T = args.requests, args.prompt_len, args.gen_len
@@ -92,17 +97,28 @@ def main():
         f"{args.arch}: prefill {B * S / prefill_s:,.0f} tok/s, "
         f"decode {B * T / decode_s:,.0f} tok/s"
     )
-    for name, row in board.report().items():
+    for name, row in board.report(density=True).items():
         print(
             f"  sketch[{name}] distinct~{row['estimate']:.0f} "
-            f"seen={row['items_seen']} dup={row['duplication']:.2f}"
+            f"seen={row['items_seen']} dup={row['duplication']:.2f} "
+            f"occ={row['register_occupancy']:.1%}"
         )
+    bd = board.density()
+    print(
+        f"  board density: {bd['sparse_eligible']}/{bd['streams']} streams "
+        f"sparse-eligible, occupancy {bd['occupancy_mean']:.1%}, hybrid "
+        f"~{bd['hybrid_nbytes_estimate']}B vs dense {bd['dense_nbytes']}B"
+    )
 
-    # per-request distinct-token telemetry: one SketchBank row per request,
-    # every (prompt + generated) token routed by its request index and
-    # ingested with ONE keyed update_many dispatch (DESIGN.md §9); the bank
-    # shares the board's config + plan so both readings stay comparable
-    bank = SketchBank.empty(B, board.cfg)
+    # per-request distinct-token telemetry: one HybridBank row per request,
+    # every (prompt + generated) token routed by its request index with ONE
+    # hybrid-routed update_many pass (DESIGN.md §9, §12); requests with few
+    # distinct tokens stay in the sparse COO layout and the bank reports
+    # its own storage win.  The bank shares the board's config + plan so
+    # both readings stay comparable.
+    bank = HybridBank.empty(
+        B, board.cfg, threshold=board.plan.sparse_threshold
+    )
     rows = jnp.arange(B, dtype=jnp.int32)[:, None]
     req_keys = jnp.broadcast_to(rows, prompts.shape)
     gen_keys = jnp.broadcast_to(rows, out.shape)
@@ -112,10 +128,16 @@ def main():
         board.plan,
     )
     per_req = np.asarray(bank.estimate_many(args.estimator))
+    bank_d = bank.density()
     print(
         f"  bank[{B} requests] distinct tokens/request "
         f"min={per_req.min():.0f} mean={per_req.mean():.0f} "
-        f"max={per_req.max():.0f} (one update_many dispatch)"
+        f"max={per_req.max():.0f} (one hybrid update_many pass)"
+    )
+    print(
+        f"  bank density: {bank_d['dense_rows']}/{bank_d['rows']} rows "
+        f"promoted, occupancy {bank_d['occupancy_mean']:.1%}, "
+        f"{bank_d['reduction']:.1f}x smaller than dense"
     )
 
     # sliding-window telemetry (DESIGN.md §11): a WindowedBank ring over

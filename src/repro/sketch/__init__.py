@@ -95,7 +95,11 @@ from repro.sketch.bank import (  # noqa: F401
     update_bank_registers,
     update_many,
 )
-from repro.sketch.window import WindowedBank  # noqa: F401
+from repro.sketch.sparse import HybridBank, default_threshold  # noqa: F401
+from repro.sketch.window import (  # noqa: F401
+    HybridWindowedBank,
+    WindowedBank,
+)
 from repro.sketch.setops import (  # noqa: F401
     difference_estimate,
     intersection_estimate,

@@ -87,7 +87,8 @@ def update_bank_registers(
             f"keys ({flat_keys.shape[0]}) and items ({flat_items.shape[0]}) "
             f"must flatten to the same length"
         )
-    if flat_items.shape[0] == 0:
+    if flat_items.shape[0] == 0 or registers.shape[0] == 0:
+        # nothing to land (or nowhere to land it): no backend dispatch
         return registers
     if plan.placement == "local":
         return backend(registers, flat_keys, flat_items, cfg, plan)
@@ -169,6 +170,38 @@ class SketchBank:
         lo = limbs[:, 1].astype(np.uint64)
         return (hi << np.uint64(32)) | lo
 
+    @property
+    def nbytes(self) -> int:
+        """Storage footprint of the dense representation."""
+        return int(self.registers.nbytes + self.n_items.nbytes)
+
+    def density(self) -> dict:
+        """Storage introspection, schema-compatible with the hybrid bank's.
+
+        A dense bank is all-dense by construction; ``occupancy_mean``
+        reports how full the registers actually are, which is what decides
+        whether ``to_hybrid()`` would pay off (DESIGN.md §12).
+        """
+        rows = len(self)
+        occ = (np.asarray(self.registers) > 0).sum(axis=1)
+        return {
+            "rows": rows,
+            "dense_rows": rows,
+            "sparse_rows": 0,
+            "capacity": 0,
+            "threshold": None,
+            "occupancy_mean": float(occ.mean() / self.cfg.m) if rows else 0.0,
+            "nbytes": self.nbytes,
+            "dense_nbytes": self.nbytes,
+            "reduction": 1.0,
+        }
+
+    def to_hybrid(self, threshold: Optional[int] = None, dense_rows=None):
+        """Demote to the sparse/dense ``HybridBank`` layout (DESIGN.md §12)."""
+        from repro.sketch.sparse import HybridBank
+
+        return HybridBank.from_dense(self, threshold, dense_rows=dense_rows)
+
     # ------------------------------------------------------------------
     # aggregation (paper phase 3, bank-wide)
     # ------------------------------------------------------------------
@@ -182,7 +215,8 @@ class SketchBank:
         """Route each item to row ``keys[i]`` and apply one fused update.
 
         A zero-length stream returns ``self`` without dispatching any
-        backend (and without touching the counters).
+        backend (and without touching the counters); so does a zero-row
+        bank, where every key is out of range by definition.
         """
         flat_keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
         flat_items = jnp.asarray(items).reshape(-1)
@@ -191,7 +225,7 @@ class SketchBank:
                 f"keys ({flat_keys.shape[0]}) and items ({flat_items.shape[0]}) "
                 f"must flatten to the same length"
             )
-        if flat_items.shape[0] == 0:
+        if flat_items.shape[0] == 0 or len(self) == 0:
             return self
         regs = update_bank_registers(self.registers, flat_keys, items, self.cfg, plan)
         rows = len(self)
@@ -234,9 +268,15 @@ class SketchBank:
     # ------------------------------------------------------------------
 
     def estimate_many(self, estimator: Optional[str] = None) -> jnp.ndarray:
-        """(B,) float32 estimates in one jitted dispatch (DESIGN.md §8)."""
+        """(B,) float32 estimates in one jitted dispatch (DESIGN.md §8).
+
+        A zero-row bank short-circuits to an empty result instead of
+        tracing a degenerate zero-batch histogram.
+        """
         from repro.sketch import estimators as _estimators
 
+        if len(self) == 0:
+            return jnp.zeros((0,), jnp.float32)
         return _estimators.estimate_many(self.registers, self.cfg, estimator=estimator)
 
     def estimate(self, i: int, estimator: Optional[str] = None) -> float:
@@ -272,7 +312,13 @@ class SketchBank:
         if magic != _BANK_MAGIC:
             raise ValueError(f"bad magic {magic!r}; not a serialized bank")
         if version != _BANK_VERSION:
-            raise ValueError(f"unsupported bank version {version}")
+            hint = (
+                "; version 2 is the hybrid sparse format — parse it with "
+                "repro.sketch.sparse.HybridBank.from_bytes"
+                if version == 2
+                else ""
+            )
+            raise ValueError(f"unsupported bank version {version}{hint}")
         if rows < 1:
             raise ValueError(f"bank header claims {rows} rows")
         cfg = HLLConfig(p=p, hash_bits=hash_bits, seed=seed)

@@ -164,6 +164,12 @@ class ExecutionPlan:
     # phase-4 finalizer, resolved against repro.sketch.estimators'
     # registry ("original" | "ertl_improved" | "ertl_mle" | plugins)
     estimator: str = DEFAULT_ESTIMATOR
+    # storage hint for hybrid carriers (DESIGN.md §12): rows of a
+    # HybridBank built under this plan promote from the sparse COO layout
+    # to dense registers once their distinct-bucket count exceeds this.
+    # None defers to the carrier default (m // 4); the carrier re-validates
+    # against its config (must stay <= m // 2 for the LC-regime guarantee).
+    sparse_threshold: Optional[int] = None
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
@@ -172,6 +178,10 @@ class ExecutionPlan:
             )
         if self.pipelines < 1:
             raise ValueError(f"pipelines must be >= 1, got {self.pipelines}")
+        if self.sparse_threshold is not None and self.sparse_threshold < 1:
+            raise ValueError(
+                f"sparse_threshold must be >= 1, got {self.sparse_threshold}"
+            )
         if self.placement == "mesh" and self.mesh is None:
             raise ValueError("placement='mesh' requires a mesh")
         object.__setattr__(self, "data_axes", tuple(self.data_axes))

@@ -1,0 +1,936 @@
+"""Sparse tenant-row storage with automatic dense promotion (DESIGN.md §12).
+
+The paper's premise is sub-linear memory on the input domain, yet a
+``SketchBank`` allocates a dense (B, m) register block no matter how empty
+its rows are — at "millions of users" scale most tenant rows hold a
+handful of distinct items and waste ~m bytes each.  HyperLogLogLog
+(arXiv:2205.11327) and the memory-efficient FPGA sketch follow-up
+(arXiv:2504.16896) both show compressed/sparse register storage preserves
+estimate quality while cutting memory by an order of magnitude; this
+module is that idea over the bank subsystem of DESIGN.md §9.
+
+A ``HybridBank`` keeps every row in one of two representations:
+
+* **sparse** — the row's distinct ``(bucket_idx, rank)`` pairs, packed as
+  ``bucket << 8 | rank`` int32 values in a capped per-row COO buffer of
+  shape (B, C).  C adapts to the actual occupancy of the sparse rows
+  (grown/shrunk at ingest), so near-empty tenants cost a few dozen bytes
+  instead of m.
+* **dense** — the usual (m,) uint8 register row, held in a compact
+  (D, m) block that only promoted rows occupy (``dense_slot`` maps row ->
+  block slot, -1 for sparse rows).
+
+**Promotion contract.** A row is promoted exactly when its distinct-bucket
+count crosses ``threshold`` (default m // 4): sparse rows always satisfy
+``len <= threshold``.  Promotion materializes the row's full
+bucket -> max-rank map with one scatter, so a promoted row's registers are
+**bit-identical** to dense-from-scratch ingestion of the same stream, and
+estimates cannot shift at the boundary (tests/test_sparse.py).  Promotion
+is one-way; ``merge`` keeps dense mode infectious (a row dense on either
+side stays dense).
+
+**Fused ingest.** ``update_many(keys, items, plan)`` routes the whole
+keyed stream in one pass with no python loop over rows: dense-destined
+items dispatch through the registered bank backend of ``plan`` (the §9
+scatter — jnp or the Pallas bank kernel), sparse-destined items merge
+through ONE two-pass stable sort over (row*m + bucket) cells that
+deduplicates to per-cell max rank, recompacts every sparse row, and
+detects promotions for the whole bank at once.  The §9 key-routing
+contract holds unchanged: out-of-range keys are dropped, never leaked,
+and never counted.
+
+**Estimation.** ``estimate_many`` finalizes sparse rows with the
+linear-counting fast path: a sparse row has at most ``threshold <= m/2``
+non-zero registers, which provably pins the ``original`` estimator to its
+small-range LinearCounting branch (E_raw <= 2*alpha*m < 2.5m and V > 0),
+so ``m * log(m / (m - len))`` is bit-identical to the dense device path
+while reading only the per-row pair count.  Other registered estimators
+build the (B, K) register histogram straight from the pairs
+(C[0] = m - len) and run their normal device finalizer — also
+bit-identical to the dense path, because the histogram is.
+
+**Wire format v2.** ``to_bytes`` reuses the RHLB framing with
+``version=2``: header + u32 threshold + per-row u64 counts + per-row mode
+flags + per-row payloads (dense rows: m register bytes; sparse rows: u16
+pair count + sorted (u16 bucket, u8 rank) pairs).  ``from_bytes`` parses
+v2 strictly (mode flags, pair ordering, rank ranges, exact length) and
+still accepts v1 dense blobs — version-gated, producing an all-dense
+hybrid — while ``SketchBank.from_bytes`` keeps rejecting v2 with a
+targeted error.
+
+``HybridBank`` is host-orchestrated (promotion reshapes the dense block),
+so unlike ``SketchBank`` it is NOT a jit-traceable pytree; the fused
+device work happens inside the jitted sort-merge/scatter kernels below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sketch import hll, u64 as u64lib
+from repro.sketch.bank import (
+    _BANK_HEADER,
+    _BANK_MAGIC,
+    _ROW_COUNT,
+    SketchBank,
+    _counter_add_rows,
+    update_bank_registers,
+)
+from repro.sketch.carrier import HyperLogLog
+from repro.sketch.hll import HLLConfig
+from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan
+
+_PACK_SHIFT = 8  # packed pair = bucket << 8 | rank (rank <= 61 fits a byte)
+_PACK_MASK = (1 << _PACK_SHIFT) - 1
+_EMPTY = -1  # empty-slot sentinel in the packed pair buffer
+_SPARSE_VERSION = 2
+_THRESHOLD = struct.Struct("<I")
+_NPAIRS = struct.Struct("<H")
+_PAIR = struct.Struct("<HB")
+MODE_SPARSE, MODE_DENSE = 0, 1
+
+
+def default_threshold(cfg: HLLConfig) -> int:
+    """The default promotion threshold: m // 4 distinct buckets."""
+    return max(1, cfg.m // 4)
+
+
+def _check_threshold(threshold: int, cfg: HLLConfig) -> int:
+    """Thresholds above m // 2 would leave the LC-regime guarantee (the
+    proof in the module docstring needs V = m - len >= m/2)."""
+    threshold = int(threshold)
+    if not 1 <= threshold <= max(1, cfg.m // 2):
+        raise ValueError(
+            f"sparse threshold must be in [1, {max(1, cfg.m // 2)}] "
+            f"(m // 2 keeps sparse rows in the LinearCounting regime), "
+            f"got {threshold}"
+        )
+    return threshold
+
+
+def _fit_capacity(needed: int, threshold: int) -> int:
+    """Smallest pow2-ish pair capacity holding ``needed`` entries."""
+    if needed <= 0:
+        return 0
+    return min(threshold, max(4, 1 << (needed - 1).bit_length()))
+
+
+# ----------------------------------------------------------------------------
+# fused device kernels (jitted; static shapes per (stream, capacity) pair)
+# ----------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _hash_stream(items, cfg: HLLConfig):
+    """Jitted phase-1+3a hash of the sparse-destined sub-stream.
+
+    ``hash_index_rank`` is ~a hundred murmur3 ops; running it eagerly
+    would dominate the whole hybrid ingest pass.
+    """
+    return hll.hash_index_rank(items, cfg)
+
+
+@partial(jax.jit, static_argnames=("rows", "m"))
+def _sort_merge(row, bucket, rank, *, rows, m):
+    """Dedup a (row, bucket, rank) triple stream to per-cell max rank.
+
+    The caller concatenates the existing sparse pairs (extracted to
+    triples, pow2-padded so the sort cost tracks LIVE pairs rather than
+    allocated buffer slots) with the newly hashed stream.  ONE two-pass
+    stable sort over ``row * m + bucket`` cell ids: first by rank
+    ascending, then (stably) by cell, so within each equal-cell run ranks
+    ascend and the LAST element of the run carries the cell's max.
+    Invalid entries (padding, out-of-range rows) sort to a trailing
+    sentinel cell and never survive.  Returns the sorted cells, ranks,
+    the survivor mask (per-cell max of live cells), and the (B,)
+    distinct-bucket counts — everything ingest needs to recompact sparse
+    rows and to detect promotions in one pass, with no loop over rows.
+    """
+    valid = (row >= 0) & (row < rows)
+    cell = jnp.where(valid, row * m + bucket, rows * m)
+    order1 = jnp.argsort(rank, stable=True)
+    cell1, rank1 = cell[order1], rank[order1]
+    order2 = jnp.argsort(cell1, stable=True)
+    cell_s, rank_s = cell1[order2], rank1[order2]
+    is_last = jnp.concatenate(
+        [cell_s[1:] != cell_s[:-1], jnp.ones((1,), bool)]
+    )
+    survivor = is_last & (cell_s < rows * m)
+    row_s = cell_s // m
+    distinct = jnp.bincount(
+        jnp.where(survivor, row_s, rows), length=rows + 1
+    )[:rows]
+    return cell_s, rank_s, survivor, distinct.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("rows", "m", "cap"))
+def _compact_pairs(cell_s, rank_s, survivor, keep_row, *, rows, m, cap):
+    """Scatter surviving pairs of still-sparse rows into a (B, cap) buffer.
+
+    Survivors arrive sorted by (row, bucket); each kept entry's slot is
+    its running index within its row, so the output rows are bucket-sorted
+    with ``-1`` padding — the invariant the v2 wire format serializes.
+    """
+    row_s = cell_s // m
+    bucket_s = cell_s - row_s * m
+    safe_row = jnp.clip(row_s, 0, rows - 1)
+    take = survivor & keep_row[safe_row] & (row_s < rows)
+    pos = jnp.cumsum(take.astype(jnp.int32)) - 1
+    row_counts = jnp.bincount(
+        jnp.where(take, row_s, rows), length=rows + 1
+    )[:rows]
+    row_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(row_counts)[:-1].astype(jnp.int32)]
+    )
+    offset = pos - row_start[safe_row]
+    idx = jnp.where(take & (offset < cap), safe_row * cap + offset, rows * cap)
+    packed = (bucket_s << _PACK_SHIFT) | rank_s
+    out = jnp.full((rows * cap,), _EMPTY, jnp.int32)
+    out = out.at[idx].set(packed, mode="drop")
+    return out.reshape(rows, cap)
+
+
+@partial(jax.jit, static_argnames=("slots", "rows", "m"))
+def _materialize_rows(cell_s, rank_s, survivor, slot_of_row, *, slots, rows, m):
+    """Scatter surviving pairs of promoted rows into fresh dense registers.
+
+    ``slot_of_row`` maps each promoted row to a local slot in [0, slots);
+    every other row maps to -1 and contributes nothing.  The scatter sees
+    the row's FULL deduped bucket -> max-rank map, so the produced
+    registers are bit-identical to dense-from-scratch ingestion.
+    """
+    row_s = cell_s // m
+    bucket_s = cell_s - row_s * m
+    slot = slot_of_row[jnp.clip(row_s, 0, rows - 1)]
+    take = survivor & (row_s < rows) & (slot >= 0)
+    seg = jnp.where(take, slot * m + bucket_s, slots * m)
+    regs = jax.ops.segment_max(
+        jnp.where(take, rank_s, 0).astype(hll.REGISTER_DTYPE),
+        seg,
+        num_segments=slots * m + 1,
+    )
+    return regs[: slots * m].reshape(slots, m)
+
+
+@partial(jax.jit, static_argnames=("rows", "m"))
+def _scatter_pairs_dense(pairs, *, rows, m):
+    """(B, C) packed pairs -> (B, m) uint8 registers (one scatter-max)."""
+    regs = jnp.zeros((rows, m), hll.REGISTER_DTYPE)
+    if pairs.shape[1] == 0:
+        return regs
+    valid = pairs >= 0
+    row = jnp.broadcast_to(
+        jnp.arange(rows, dtype=jnp.int32)[:, None], pairs.shape
+    )
+    bucket = jnp.where(valid, pairs >> _PACK_SHIFT, 0)
+    rank = jnp.where(valid, pairs & _PACK_MASK, 0)
+    return regs.at[row, bucket].max(rank.astype(hll.REGISTER_DTYPE))
+
+
+@partial(jax.jit, static_argnames=("m",))
+def _lc_estimate(sparse_len, *, m):
+    """Closed-form LinearCounting over per-row distinct counts.
+
+    Jitted (not eager) so the float32 log lowers through the same XLA
+    codegen as the dense device finalizer — eager batched transcendentals
+    can differ in the last ulp, and the sparse fast path is pinned
+    bit-identical to the dense path (tests/test_sparse.py).
+    """
+    fm = float(m)
+    v = (fm - sparse_len).astype(jnp.float32)
+    return fm * jnp.log(fm / jnp.maximum(v, 1.0))
+
+
+@partial(jax.jit, static_argnames=("cfg", "estimator"))
+def _finalize_histograms(hist, cfg: HLLConfig, estimator: str):
+    """Jitted registry finalizer over prebuilt (B, K) histograms."""
+    from repro.sketch import estimators as _estimators
+
+    return _estimators.get_estimator(estimator).device(
+        hist.astype(jnp.float32), cfg
+    )
+
+
+# ----------------------------------------------------------------------------
+# the hybrid carrier
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridBank:
+    """B same-config sketches, each row sparse (COO pairs) or dense."""
+
+    pairs: jnp.ndarray  # (B, C) int32 packed bucket<<8|rank, -1 = empty
+    sparse_len: jnp.ndarray  # (B,) int32 distinct buckets (0 for dense rows)
+    dense: jnp.ndarray  # (D, m) uint8 registers of promoted rows
+    dense_slot: jnp.ndarray  # (B,) int32 slot into dense, -1 = sparse
+    n_items: jnp.ndarray  # (B, 2) uint32 limb pairs, exact per-row counts
+    cfg: HLLConfig
+    threshold: int  # promote when a row's distinct buckets exceed this
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def empty(
+        cls,
+        rows: int,
+        cfg: Optional[HLLConfig] = None,
+        threshold: Optional[int] = None,
+    ) -> "HybridBank":
+        cfg = cfg or HLLConfig()
+        if rows < 1:
+            raise ValueError(f"a bank needs at least one row, got {rows}")
+        threshold = _check_threshold(
+            default_threshold(cfg) if threshold is None else threshold, cfg
+        )
+        return cls(
+            jnp.zeros((rows, 0), jnp.int32),
+            jnp.zeros((rows,), jnp.int32),
+            jnp.zeros((0, cfg.m), hll.REGISTER_DTYPE),
+            jnp.full((rows,), -1, jnp.int32),
+            jnp.zeros((rows, 2), jnp.uint32),
+            cfg,
+            threshold,
+        )
+
+    @classmethod
+    def from_dense(
+        cls,
+        bank: SketchBank,
+        threshold: Optional[int] = None,
+        dense_rows=None,
+    ) -> "HybridBank":
+        """Demote a dense bank: rows at or under ``threshold`` distinct
+        buckets become sparse unless forced dense via ``dense_rows``."""
+        cfg = bank.cfg
+        threshold = _check_threshold(
+            default_threshold(cfg) if threshold is None else threshold, cfg
+        )
+        regs = np.asarray(bank.registers)
+        rows = regs.shape[0]
+        occ = (regs > 0).sum(axis=1).astype(np.int64)
+        force = (
+            np.zeros(rows, bool)
+            if dense_rows is None
+            else np.asarray(dense_rows, bool)
+        )
+        if force.shape != (rows,):
+            raise ValueError(
+                f"dense_rows must be a ({rows},) mask, got {force.shape}"
+            )
+        dense_mask = force | (occ > threshold)
+        sparse_mask = ~dense_mask
+        sr, sb = np.nonzero(np.where(sparse_mask[:, None], regs, 0))
+        counts = np.bincount(sr, minlength=rows)
+        cap = _fit_capacity(int(counts.max(initial=0)), threshold)
+        pairs = np.full((rows, cap), _EMPTY, np.int32)
+        if sr.size:
+            start = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            off = np.arange(sr.size) - start[sr]
+            pairs[sr, off] = (sb.astype(np.int32) << _PACK_SHIFT) | regs[
+                sr, sb
+            ].astype(np.int32)
+        dense_idx = np.nonzero(dense_mask)[0]
+        dense_slot = np.full(rows, -1, np.int32)
+        dense_slot[dense_idx] = np.arange(dense_idx.size, dtype=np.int32)
+        return cls(
+            jnp.asarray(pairs),
+            jnp.asarray(np.where(sparse_mask, occ, 0).astype(np.int32)),
+            jnp.asarray(regs[dense_idx]),
+            jnp.asarray(dense_slot),
+            bank.n_items,
+            cfg,
+            threshold,
+        )
+
+    @classmethod
+    def from_sketches(
+        cls,
+        sketches: Sequence[HyperLogLog],
+        threshold: Optional[int] = None,
+    ) -> "HybridBank":
+        return cls.from_dense(SketchBank.from_sketches(sketches), threshold)
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return int(self.n_items.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        """Current per-row sparse pair capacity C."""
+        return int(self.pairs.shape[1])
+
+    @property
+    def dense_rows(self) -> int:
+        """Number of promoted rows (the D of the dense block)."""
+        return int(self.dense.shape[0])
+
+    @property
+    def modes(self) -> np.ndarray:
+        """(B,) uint8 row modes: MODE_SPARSE (0) or MODE_DENSE (1)."""
+        return (np.asarray(self.dense_slot) >= 0).astype(np.uint8)
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(B,) exact per-row observation counts as uint64."""
+        limbs = np.asarray(self.n_items)
+        hi = limbs[:, 0].astype(np.uint64)
+        lo = limbs[:, 1].astype(np.uint64)
+        return (hi << np.uint64(32)) | lo
+
+    @property
+    def nbytes(self) -> int:
+        """Actual storage footprint of the hybrid representation."""
+        return int(
+            self.pairs.nbytes
+            + self.sparse_len.nbytes
+            + self.dense.nbytes
+            + self.dense_slot.nbytes
+            + self.n_items.nbytes
+        )
+
+    def density(self) -> dict:
+        """Storage introspection: modes, occupancy, and the memory win."""
+        rows = len(self)
+        m = self.cfg.m
+        d = self.dense_rows
+        occ = np.asarray(self.sparse_len).astype(np.int64)
+        if d:
+            dense_occ = (np.asarray(self.dense) > 0).sum(axis=1)
+            occ = occ + np.zeros_like(occ)
+            occ[np.asarray(self.dense_slot) >= 0] = dense_occ[
+                np.asarray(self.dense_slot)[np.asarray(self.dense_slot) >= 0]
+            ]
+        dense_nbytes = rows * m + rows * 8  # what a SketchBank would cost
+        return {
+            "rows": rows,
+            "dense_rows": d,
+            "sparse_rows": rows - d,
+            "capacity": self.capacity,
+            "threshold": self.threshold,
+            "occupancy_mean": float(occ.mean() / m) if rows else 0.0,
+            "nbytes": self.nbytes,
+            "dense_nbytes": dense_nbytes,
+            "reduction": dense_nbytes / self.nbytes if self.nbytes else 0.0,
+        }
+
+    def row(self, i: int) -> HyperLogLog:
+        """Row ``i`` materialized as a standalone dense carrier."""
+        rows = len(self)
+        if not -rows <= i < rows:
+            raise IndexError(f"row {i} out of range for a {rows}-row bank")
+        i = i % rows
+        slot = int(self.dense_slot[i])
+        if slot >= 0:
+            regs = self.dense[slot]
+        else:
+            regs_np = np.zeros(self.cfg.m, np.uint8)
+            p = np.asarray(self.pairs[i])
+            p = p[p >= 0]
+            regs_np[p >> _PACK_SHIFT] = (p & _PACK_MASK).astype(np.uint8)
+            regs = jnp.asarray(regs_np)
+        return HyperLogLog(regs, self.n_items[i], self.cfg)
+
+    # ------------------------------------------------------------------
+    # conversion
+    # ------------------------------------------------------------------
+
+    def _pair_triples(self):
+        """Live pairs as (row, bucket, rank) int32 triples, pow2-padded.
+
+        The pair buffer allocates capacity C for every row, but only
+        ``sum(sparse_len)`` slots are live; extracting them (host-side,
+        one vectorized pass) keeps the sort-merge cost proportional to
+        LIVE pairs, not B*C, and the pow2 padding (row = -1, dropped by
+        the kernel's validity mask) bounds jit recompiles.
+        """
+        pairs_np = np.asarray(self.pairs)
+        rows_np, slots = np.nonzero(pairs_np >= 0)
+        packed = pairs_np[rows_np, slots]
+        p = packed.size
+        pad = 1 << max(6, (p - 1).bit_length()) if p else 64
+        row = np.full(pad, -1, np.int32)
+        bucket = np.zeros(pad, np.int32)
+        rank = np.zeros(pad, np.int32)
+        row[:p] = rows_np
+        bucket[:p] = packed >> _PACK_SHIFT
+        rank[:p] = packed & _PACK_MASK
+        return row, bucket, rank
+
+    def _dense_registers(self) -> jnp.ndarray:
+        """The whole bank materialized as (B, m) uint8 registers."""
+        rows = len(self)
+        regs = _scatter_pairs_dense(self.pairs, rows=rows, m=self.cfg.m)
+        if self.dense_rows:
+            slot = jnp.clip(self.dense_slot, 0, self.dense_rows - 1)
+            regs = jnp.where(
+                (self.dense_slot >= 0)[:, None], self.dense[slot], regs
+            )
+        return regs
+
+    def to_dense(self) -> SketchBank:
+        """Materialize to a plain dense ``SketchBank`` (lossless)."""
+        return SketchBank(self._dense_registers(), self.n_items, self.cfg)
+
+    def to_sketches(self) -> list:
+        return [self.row(i) for i in range(len(self))]
+
+    # ------------------------------------------------------------------
+    # aggregation (paper phase 3, hybrid-routed)
+    # ------------------------------------------------------------------
+
+    def update_many(
+        self,
+        keys: jnp.ndarray,
+        items: jnp.ndarray,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> "HybridBank":
+        """Route each item to row ``keys[i]``'s current representation.
+
+        One host-orchestrated pass, no python loop over rows: the
+        dense-destined sub-stream dispatches through the bank backend
+        registered under ``plan.backend`` (§9), the sparse-destined
+        sub-stream merges through the fused sort-dedup kernel, and rows
+        whose distinct-bucket count crosses ``threshold`` promote at the
+        end of the batch (order-independent: the register lattice is a
+        max).  Zero-length streams and zero-row banks return ``self``
+        without dispatching any backend.
+        """
+        flat_keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
+        flat_items = jnp.asarray(items).reshape(-1)
+        if flat_keys.shape[0] != flat_items.shape[0]:
+            raise ValueError(
+                f"keys ({flat_keys.shape[0]}) and items "
+                f"({flat_items.shape[0]}) must flatten to the same length"
+            )
+        rows = len(self)
+        if flat_items.shape[0] == 0 or rows == 0:
+            return self
+        m = self.cfg.m
+        if rows * m >= 1 << 31:
+            raise ValueError(
+                f"bank cell space B*m = {rows}*{m} overflows int32 sort "
+                f"cells; split the fleet across multiple banks"
+            )
+        plan = (DEFAULT_PLAN if plan is None else plan).validate()
+        keys_np = np.asarray(flat_keys)
+        items_np = np.asarray(flat_items)
+        slot_np = np.asarray(self.dense_slot)
+        valid = (keys_np >= 0) & (keys_np < rows)
+        dest = np.where(valid, slot_np[np.clip(keys_np, 0, rows - 1)], -1)
+        dense_sel = valid & (dest >= 0)
+        sparse_sel = valid & (dest < 0)
+
+        new_dense = self.dense
+        if dense_sel.any():
+            new_dense = update_bank_registers(
+                self.dense,
+                jnp.asarray(dest[dense_sel]),
+                jnp.asarray(items_np[dense_sel]),
+                self.cfg,
+                plan,
+            )
+
+        new_pairs, new_len, new_slot = self.pairs, self.sparse_len, slot_np
+        if sparse_sel.any():
+            idx, rank = _hash_stream(jnp.asarray(items_np[sparse_sel]), self.cfg)
+            old_rows, old_buckets, old_ranks = self._pair_triples()
+            cell_s, rank_s, survivor, distinct = _sort_merge(
+                jnp.concatenate(
+                    [jnp.asarray(old_rows), jnp.asarray(keys_np[sparse_sel])]
+                ),
+                jnp.concatenate([jnp.asarray(old_buckets), idx]),
+                jnp.concatenate([jnp.asarray(old_ranks), rank]),
+                rows=rows,
+                m=m,
+            )
+            distinct_np = np.asarray(distinct)
+            was_sparse = slot_np < 0
+            promote = was_sparse & (distinct_np > self.threshold)
+            keep = was_sparse & ~promote
+            needed = int(distinct_np[keep].max(initial=0))
+            cap = _fit_capacity(needed, self.threshold)
+            new_pairs = _compact_pairs(
+                cell_s,
+                rank_s,
+                survivor,
+                jnp.asarray(keep),
+                rows=rows,
+                m=m,
+                cap=cap,
+            )
+            new_len = jnp.asarray(np.where(keep, distinct_np, 0).astype(np.int32))
+            if promote.any():
+                promoted = np.nonzero(promote)[0]
+                slot_of_row = np.full(rows, -1, np.int32)
+                slot_of_row[promoted] = np.arange(promoted.size, dtype=np.int32)
+                fresh = _materialize_rows(
+                    cell_s,
+                    rank_s,
+                    survivor,
+                    jnp.asarray(slot_of_row),
+                    slots=promoted.size,
+                    rows=rows,
+                    m=m,
+                )
+                new_dense = (
+                    jnp.concatenate([new_dense, fresh])
+                    if new_dense.shape[0]
+                    else fresh
+                )
+                new_slot = slot_np.copy()
+                new_slot[promoted] = self.dense_rows + np.arange(
+                    promoted.size, dtype=np.int32
+                )
+
+        routed = jnp.where(valid, flat_keys, rows)
+        counts = jnp.bincount(routed, length=rows + 1)[:rows]
+        return dataclasses.replace(
+            self,
+            pairs=new_pairs,
+            sparse_len=new_len,
+            dense=new_dense,
+            dense_slot=jnp.asarray(new_slot),
+            n_items=_counter_add_rows(self.n_items, counts),
+        )
+
+    def merge(self, other: "HybridBank") -> "HybridBank":
+        """Row-wise Merge-buckets fold; dense mode is infectious.
+
+        The fold never materializes a (B, m) block: both sides' live
+        sparse pairs dedup through the same sort-merge kernel as ingest,
+        rows staying sparse recompact, and only the dense result rows
+        (dense on either side, or a sparse union crossing the threshold)
+        scatter into a compact block overlaid with each side's dense
+        registers — cost tracks live pairs + promoted rows, which is what
+        lets ``HybridWindowedBank.fold_window`` stay sparse-sized.
+        """
+        if self.cfg != other.cfg:
+            raise ValueError(
+                f"cannot merge banks with different configs: "
+                f"{self.cfg} vs {other.cfg}"
+            )
+        if len(self) != len(other):
+            raise ValueError(
+                f"cannot merge banks of different sizes: "
+                f"{len(self)} vs {len(other)} rows"
+            )
+        if self.threshold != other.threshold:
+            raise ValueError(
+                f"cannot merge banks with different sparse thresholds: "
+                f"{self.threshold} vs {other.threshold}"
+            )
+        rows = len(self)
+        m = self.cfg.m
+        limbs = u64lib.add(
+            u64lib.U64(self.n_items[:, 0], self.n_items[:, 1]),
+            u64lib.U64(other.n_items[:, 0], other.n_items[:, 1]),
+        )
+        n_items = jnp.stack([limbs.hi, limbs.lo], axis=-1)
+        if rows == 0:
+            return dataclasses.replace(self, n_items=n_items)
+        if rows * m >= 1 << 31:
+            raise ValueError(
+                f"bank cell space B*m = {rows}*{m} overflows int32 sort "
+                f"cells; split the fleet across multiple banks"
+            )
+        slot_a = np.asarray(self.dense_slot)
+        slot_b = np.asarray(other.dense_slot)
+        force_dense = (slot_a >= 0) | (slot_b >= 0)
+        # a row dense on one side still contributes the OTHER side's pairs
+        # through the triple stream; its dense registers overlay below
+        ra, ba, ka = self._pair_triples()
+        rb, bb, kb = other._pair_triples()
+        cell_s, rank_s, survivor, distinct = _sort_merge(
+            jnp.asarray(np.concatenate([ra, rb])),
+            jnp.asarray(np.concatenate([ba, bb])),
+            jnp.asarray(np.concatenate([ka, kb])),
+            rows=rows,
+            m=m,
+        )
+        distinct_np = np.asarray(distinct)
+        promote = ~force_dense & (distinct_np > self.threshold)
+        keep = ~force_dense & ~promote
+        cap = _fit_capacity(int(distinct_np[keep].max(initial=0)), self.threshold)
+        pairs = _compact_pairs(
+            cell_s, rank_s, survivor, jnp.asarray(keep), rows=rows, m=m, cap=cap
+        )
+        dense_idx = np.nonzero(force_dense | promote)[0]
+        slot_of_row = np.full(rows, -1, np.int32)
+        slot_of_row[dense_idx] = np.arange(dense_idx.size, dtype=np.int32)
+        if dense_idx.size:
+            dense = _materialize_rows(
+                cell_s,
+                rank_s,
+                survivor,
+                jnp.asarray(slot_of_row),
+                slots=dense_idx.size,
+                rows=rows,
+                m=m,
+            )
+            for side, side_slot in ((self, slot_a), (other, slot_b)):
+                if side.dense_rows:
+                    sel = side_slot[dense_idx]
+                    contrib = jnp.where(
+                        (jnp.asarray(sel) >= 0)[:, None],
+                        side.dense[
+                            jnp.clip(jnp.asarray(sel), 0, side.dense_rows - 1)
+                        ],
+                        0,
+                    )
+                    dense = jnp.maximum(dense, contrib)
+        else:
+            dense = jnp.zeros((0, m), hll.REGISTER_DTYPE)
+        return dataclasses.replace(
+            self,
+            pairs=pairs,
+            sparse_len=jnp.asarray(np.where(keep, distinct_np, 0).astype(np.int32)),
+            dense=dense,
+            dense_slot=jnp.asarray(slot_of_row),
+            n_items=n_items,
+        )
+
+    __or__ = merge
+
+    # ------------------------------------------------------------------
+    # estimation (paper phase 4, sparse-aware)
+    # ------------------------------------------------------------------
+
+    def _sparse_histograms(self) -> jnp.ndarray:
+        """(B, K) int32 histograms straight from the pairs (C[0] = m - len)."""
+        from repro.sketch import estimators as _estimators
+
+        rows = len(self)
+        k = _estimators.histogram_size(self.cfg)
+        flat = self.pairs.reshape(-1)
+        valid = flat >= 0
+        rank = jnp.where(valid, flat & _PACK_MASK, 0)
+        row = jnp.repeat(jnp.arange(rows, dtype=jnp.int32), max(1, self.capacity))
+        if self.capacity == 0:
+            counts = jnp.zeros((rows, k), jnp.int32)
+        else:
+            idx = jnp.where(valid, row * k + rank, rows * k)
+            counts = jnp.bincount(idx, length=rows * k + 1)[: rows * k]
+            counts = counts.reshape(rows, k).astype(jnp.int32)
+        return counts.at[:, 0].set(self.cfg.m - self.sparse_len)
+
+    def estimate_many(
+        self, estimator: Optional[str] = None, *, lc_fast: bool = True
+    ) -> jnp.ndarray:
+        """(B,) float32 estimates, sparse rows via the LC fast path.
+
+        For the default ``original`` estimator, sparse rows finalize with
+        the closed-form LinearCounting read (bit-identical to the dense
+        device path — see the module docstring proof); other estimators
+        (or ``lc_fast=False``) build histograms from the pairs and run
+        the registered device finalizer.  Dense rows always finalize
+        through the §8 batched ``estimate_many``.
+        """
+        from repro.sketch import estimators as _estimators
+
+        rows = len(self)
+        if rows == 0:
+            return jnp.zeros((0,), jnp.float32)
+        name = _estimators.resolve_estimator(estimator)
+        if name == "original" and lc_fast:
+            sparse_est = _lc_estimate(self.sparse_len, m=self.cfg.m)
+        else:
+            hist = self._sparse_histograms()
+            sparse_est = _finalize_histograms(hist, self.cfg, name)
+        if self.dense_rows:
+            dense_est = _estimators.estimate_many(
+                self.dense, self.cfg, estimator=name
+            )
+            slot = jnp.clip(self.dense_slot, 0, self.dense_rows - 1)
+            return jnp.where(self.dense_slot >= 0, dense_est[slot], sparse_est)
+        return sparse_est
+
+    def estimate(self, i: int, estimator: Optional[str] = None) -> float:
+        """Exact host-side estimate of one row."""
+        return self.row(i).estimate(estimator)
+
+    # ------------------------------------------------------------------
+    # serialization (RHLB v2: per-row mode flags + sparse payloads)
+    # ------------------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """RHLB v2: header + threshold + counts + mode flags + payloads."""
+        rows = len(self)
+        header = _BANK_HEADER.pack(
+            _BANK_MAGIC,
+            _SPARSE_VERSION,
+            self.cfg.p,
+            self.cfg.hash_bits,
+            0,
+            self.cfg.seed,
+            rows,
+        )
+        out = [header, _THRESHOLD.pack(self.threshold)]
+        out.append(self.counts.astype("<u8").tobytes())
+        modes = self.modes
+        out.append(modes.tobytes())
+        pairs_np = np.asarray(self.pairs)
+        dense_np = np.asarray(self.dense, dtype=np.uint8)
+        slot_np = np.asarray(self.dense_slot)
+        for i in range(rows):
+            if modes[i] == MODE_DENSE:
+                out.append(dense_np[slot_np[i]].tobytes())
+            else:
+                p = pairs_np[i]
+                p = p[p >= 0]
+                out.append(_NPAIRS.pack(p.size))
+                buckets = (p >> _PACK_SHIFT).astype("<u2")
+                ranks = (p & _PACK_MASK).astype(np.uint8)
+                pair_bytes = np.zeros((p.size, 3), np.uint8)
+                pair_bytes[:, :2] = buckets.view(np.uint8).reshape(-1, 2)
+                pair_bytes[:, 2] = ranks
+                out.append(pair_bytes.tobytes())
+        return b"".join(out)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "HybridBank":
+        """Parse RHLB v2 strictly; v1 dense blobs parse as all-dense."""
+        if len(data) < _BANK_HEADER.size:
+            raise ValueError(f"truncated bank: {len(data)} bytes")
+        magic, version, p, hash_bits, _flags, seed, rows = _BANK_HEADER.unpack(
+            data[: _BANK_HEADER.size]
+        )
+        if magic != _BANK_MAGIC:
+            raise ValueError(f"bad magic {magic!r}; not a serialized bank")
+        if version == 1:
+            # dense blobs still parse, version-gated: every row stays dense
+            bank = SketchBank.from_bytes(data)
+            return cls.from_dense(
+                bank, dense_rows=np.ones(len(bank), bool)
+            )
+        if version != _SPARSE_VERSION:
+            raise ValueError(f"unsupported bank version {version}")
+        if rows < 1:
+            raise ValueError(f"bank header claims {rows} rows")
+        cfg = HLLConfig(p=p, hash_bits=hash_bits, seed=seed)
+        off = _BANK_HEADER.size
+        if len(data) < off + _THRESHOLD.size:
+            raise ValueError("truncated bank: threshold missing")
+        (threshold,) = _THRESHOLD.unpack_from(data, off)
+        threshold = _check_threshold(threshold, cfg)
+        off += _THRESHOLD.size
+        counts_end = off + rows * _ROW_COUNT.size
+        modes_end = counts_end + rows
+        if len(data) < modes_end:
+            raise ValueError("truncated bank: counts/mode flags cut short")
+        raw_counts = np.frombuffer(data[off:counts_end], dtype="<u8")
+        modes = np.frombuffer(data[counts_end:modes_end], dtype=np.uint8)
+        if not np.isin(modes, (MODE_SPARSE, MODE_DENSE)).all():
+            raise ValueError(
+                f"corrupt mode flag {int(modes.max())}; rows are sparse (0) "
+                f"or dense (1)"
+            )
+        off = modes_end
+        sparse_pairs, dense_regs = [], []
+        for i in range(rows):
+            if modes[i] == MODE_DENSE:
+                if len(data) < off + cfg.m:
+                    raise ValueError(f"row {i}: dense payload cut short")
+                dense_regs.append(
+                    np.frombuffer(data[off : off + cfg.m], np.uint8)
+                )
+                off += cfg.m
+                continue
+            if len(data) < off + _NPAIRS.size:
+                raise ValueError(f"row {i}: pair count cut short")
+            (npairs,) = _NPAIRS.unpack_from(data, off)
+            off += _NPAIRS.size
+            if npairs > threshold:
+                raise ValueError(
+                    f"row {i}: {npairs} pairs exceeds threshold {threshold}"
+                )
+            end = off + npairs * 3
+            if len(data) < end:
+                raise ValueError(f"row {i}: pair list cut short")
+            raw = np.frombuffer(data[off:end], np.uint8).reshape(npairs, 3)
+            buckets = raw[:, :2].copy().view("<u2").reshape(-1).astype(np.int64)
+            ranks = raw[:, 2].astype(np.int64)
+            if npairs:
+                if buckets.max() >= cfg.m:
+                    raise ValueError(
+                        f"row {i}: bucket {int(buckets.max())} out of range "
+                        f"for m={cfg.m}"
+                    )
+                if not (np.diff(buckets) > 0).all():
+                    raise ValueError(
+                        f"row {i}: pair buckets must be strictly increasing"
+                    )
+                if ranks.min() < 1 or ranks.max() > cfg.max_rank:
+                    raise ValueError(
+                        f"row {i}: rank outside [1, {cfg.max_rank}]"
+                    )
+            sparse_pairs.append(
+                ((buckets << _PACK_SHIFT) | ranks).astype(np.int32)
+            )
+            off = end
+        if off != len(data):
+            raise ValueError(
+                f"bank payload is {len(data)} bytes, expected {off}"
+            )
+        cap = _fit_capacity(
+            max((p.size for p in sparse_pairs), default=0), threshold
+        )
+        pairs = np.full((rows, cap), _EMPTY, np.int32)
+        sparse_len = np.zeros(rows, np.int32)
+        dense_slot = np.full(rows, -1, np.int32)
+        # assign dense slots in row order (matching to_bytes)
+        d = s = 0
+        for i in range(rows):
+            if modes[i] == MODE_DENSE:
+                dense_slot[i] = d
+                d += 1
+            else:
+                pr = sparse_pairs[s]
+                pairs[i, : pr.size] = pr
+                sparse_len[i] = pr.size
+                s += 1
+        limbs = np.stack(
+            [(raw_counts >> 32).astype(np.uint32), raw_counts.astype(np.uint32)],
+            axis=-1,
+        )
+        dense = (
+            np.stack(dense_regs)
+            if dense_regs
+            else np.zeros((0, cfg.m), np.uint8)
+        )
+        return cls(
+            jnp.asarray(pairs),
+            jnp.asarray(sparse_len),
+            jnp.asarray(dense),
+            jnp.asarray(dense_slot),
+            jnp.asarray(limbs),
+            cfg,
+            threshold,
+        )
+
+
+# ----------------------------------------------------------------------------
+# module-level entry point (mirrors bank.update_many)
+# ----------------------------------------------------------------------------
+
+
+def update_many(
+    bank: HybridBank,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    plan: Optional[ExecutionPlan] = None,
+) -> HybridBank:
+    """Batched hybrid ingestion: sparse/dense routing in one fused pass."""
+    return bank.update_many(keys, items, plan)

@@ -314,7 +314,13 @@ class WindowedBank:
         if magic != _WINDOW_MAGIC:
             raise ValueError(f"bad magic {magic!r}; not a serialized window")
         if version != _WINDOW_VERSION:
-            raise ValueError(f"unsupported window version {version}")
+            hint = (
+                "; version 2 is the hybrid sparse ring — parse it with "
+                "HybridWindowedBank.from_bytes"
+                if version == 2
+                else ""
+            )
+            raise ValueError(f"unsupported window version {version}{hint}")
         if window < 1 or rows < 1:
             raise ValueError(f"window header claims {window} buckets x {rows} rows")
         if cursor >= window:
@@ -331,13 +337,7 @@ class WindowedBank:
             )
         epochs = np.frombuffer(data[_WINDOW_HEADER.size : epochs_end], _EPOCH)
         epochs = epochs.astype(np.int64)
-        slots = np.arange(window, dtype=np.int64)
-        if not (
-            np.array_equal(np.mod(epochs, window), slots)
-            and int(np.argmax(epochs)) == cursor
-            and int(epochs.max() - epochs.min()) == window - 1
-        ):
-            raise ValueError("corrupt epoch labels: ring invariant violated")
+        _validate_epoch_ring(epochs, cursor, window)
         regs, limbs = [], []
         for w in range(window):
             start = epochs_end + w * bucket_size
@@ -353,3 +353,321 @@ class WindowedBank:
             jnp.asarray(epochs.astype(_EPOCH)),
             cfg,
         )
+
+
+# ----------------------------------------------------------------------------
+# hybrid (sparse-bucket) rings — DESIGN.md §12
+# ----------------------------------------------------------------------------
+
+_WINDOW_VERSION_SPARSE = 2
+_BUCKET_LEN = struct.Struct("<Q")
+
+
+def _validate_epoch_ring(epochs: np.ndarray, cursor: int, window: int) -> None:
+    """The slot-congruence invariant shared by RHLW v1 and v2 parsers."""
+    epochs = epochs.astype(np.int64)
+    slots = np.arange(window, dtype=np.int64)
+    if not (
+        np.array_equal(np.mod(epochs, window), slots)
+        and int(np.argmax(epochs)) == cursor
+        and int(epochs.max() - epochs.min()) == window - 1
+    ):
+        raise ValueError("corrupt epoch labels: ring invariant violated")
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridWindowedBank:
+    """A ring of W sparse/dense ``HybridBank`` time buckets.
+
+    The dense ``WindowedBank`` above carries a (W, B, m) block no matter
+    how empty the tenants are; this ring carries one hybrid bank per time
+    bucket instead, so near-empty rows cost COO pairs per epoch rather
+    than m bytes per epoch.  The ring/rotation contract (epoch labels,
+    cursor, expiry-on-overwrite, monotone ``advance_to``) is identical to
+    ``WindowedBank``; promotion state is PER BUCKET and rides the slot as
+    it ages — a bucket promoted while current stays dense until the slot
+    is overwritten, so ``advance()`` never demotes or re-ingests anything.
+
+    Like ``HybridBank``, the ring is host-orchestrated (bucket shapes
+    change under promotion), so it is not a jit-traceable pytree; each
+    bucket's ingest still runs the fused hybrid dispatch.  Window folds
+    merge the live hybrid buckets pairwise (W is small — the fused ring
+    fold of §11 stays the dense path's job) and finalize with one batched
+    ``estimate_many``.  ``to_bytes``/``from_bytes`` is RHLW v2: the window
+    header with version=2, the epoch labels, then W length-prefixed RHLB
+    v2 bucket payloads (v1 dense bucket payloads still parse,
+    version-gated, matching ``HybridBank.from_bytes``).
+    """
+
+    buckets: tuple  # W HybridBanks, slot order
+    cursor: int
+    epochs: np.ndarray  # (W,) int32 absolute epoch per slot
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def empty(
+        cls,
+        window: int,
+        rows: int,
+        cfg: Optional[HLLConfig] = None,
+        threshold: Optional[int] = None,
+    ) -> "HybridWindowedBank":
+        from repro.sketch.sparse import HybridBank
+
+        if window < 1:
+            raise ValueError(f"a window needs at least one bucket, got {window}")
+        return cls(
+            tuple(
+                HybridBank.empty(rows, cfg, threshold) for _ in range(window)
+            ),
+            0,
+            _initial_epochs(window),
+        )
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def window(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def rows(self) -> int:
+        return len(self.buckets[0])
+
+    def __len__(self) -> int:
+        return self.rows
+
+    @property
+    def cfg(self) -> HLLConfig:
+        return self.buckets[0].cfg
+
+    @property
+    def threshold(self) -> int:
+        return self.buckets[0].threshold
+
+    @property
+    def epoch(self) -> int:
+        return int(self.epochs[self.cursor])
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(W, B) exact per-bucket-per-row observation counts as uint64."""
+        return np.stack([b.counts for b in self.buckets])
+
+    def window_counts(self, last_k: Optional[int] = None) -> np.ndarray:
+        """(B,) exact observation counts over the last ``last_k`` epochs."""
+        mask = self._live_mask(self._check_last_k(last_k))
+        return self.counts[mask].sum(axis=0, dtype=np.uint64)
+
+    def density(self) -> dict:
+        """Ring-wide storage stats: the §12 introspection summed over W."""
+        per = [b.density() for b in self.buckets]
+        nbytes = sum(d["nbytes"] for d in per)
+        dense_nbytes = sum(d["dense_nbytes"] for d in per)
+        return {
+            "window": self.window,
+            "rows": self.rows,
+            "dense_rows": sum(d["dense_rows"] for d in per),
+            "sparse_rows": sum(d["sparse_rows"] for d in per),
+            "threshold": self.threshold,
+            "occupancy_mean": float(
+                np.mean([d["occupancy_mean"] for d in per])
+            ),
+            "nbytes": nbytes,
+            "dense_nbytes": dense_nbytes,
+            "reduction": dense_nbytes / nbytes if nbytes else 0.0,
+        }
+
+    def _check_last_k(self, last_k: Optional[int]) -> int:
+        if last_k is None:
+            return self.window
+        if not 1 <= int(last_k) <= self.window:
+            raise ValueError(f"last_k must be in [1, {self.window}], got {last_k}")
+        return int(last_k)
+
+    def _live_mask(self, last_k: int) -> np.ndarray:
+        newest = int(self.epochs[self.cursor])
+        return np.asarray(self.epochs) > newest - last_k
+
+    # ------------------------------------------------------------------
+    # ingestion + rotation
+    # ------------------------------------------------------------------
+
+    def observe(
+        self,
+        keys: jnp.ndarray,
+        items: jnp.ndarray,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> "HybridWindowedBank":
+        """Hybrid-route each item into the CURRENT time bucket.
+
+        Delegates to ``HybridBank.update_many`` wholesale (sparse/dense
+        routing, promotion, §9 drop/counter rules); empty streams return
+        ``self`` without dispatching anything.
+        """
+        cur = self.buckets[self.cursor]
+        new = cur.update_many(keys, items, plan)
+        if new is cur:  # the empty-stream short-circuit
+            return self
+        buckets = list(self.buckets)
+        buckets[self.cursor] = new
+        return dataclasses.replace(self, buckets=tuple(buckets))
+
+    def advance(self, steps: int = 1) -> "HybridWindowedBank":
+        if steps < 1:
+            raise ValueError(f"advance needs steps >= 1, got {steps}")
+        return self.advance_to(self.epoch + steps)
+
+    def advance_to(self, epoch: int) -> "HybridWindowedBank":
+        """Rotate forward; overwritten buckets expire (same rules as the
+        dense ring: monotone, whole-ring expiry on jumps >= W)."""
+        from repro.sketch.sparse import HybridBank
+
+        target = max(int(epoch), self.epoch)
+        window = self.window
+        slots = np.arange(window, dtype=np.int64)
+        new_epochs = target - np.mod(target - slots, window)
+        stale = new_epochs > np.asarray(self.epochs, np.int64)
+        fresh = lambda: HybridBank.empty(self.rows, self.cfg, self.threshold)
+        buckets = tuple(
+            fresh() if stale[s] else self.buckets[s] for s in range(window)
+        )
+        return dataclasses.replace(
+            self,
+            buckets=buckets,
+            cursor=int(target % window),
+            epochs=new_epochs.astype(_EPOCH),
+        )
+
+    # ------------------------------------------------------------------
+    # estimation
+    # ------------------------------------------------------------------
+
+    def fold_window(self, last_k: Optional[int] = None):
+        """The live ``last_k``-epoch suffix merged into one ``HybridBank``.
+
+        Pairwise hybrid merges over at most W (small) live buckets;
+        promotion stays infectious, so a row dense in ANY live bucket is
+        dense in the fold.
+        """
+        mask = self._live_mask(self._check_last_k(last_k))
+        live = [self.buckets[s] for s in range(self.window) if mask[s]]
+        out = live[0]
+        for b in live[1:]:
+            out = out.merge(b)
+        return out
+
+    def estimate_window(
+        self,
+        last_k: Optional[int] = None,
+        plan: Optional[ExecutionPlan] = None,
+        estimator: Optional[str] = None,
+    ) -> jnp.ndarray:
+        """(B,) float32 distinct counts over the ``last_k`` newest epochs."""
+        plan = DEFAULT_PLAN if plan is None else plan
+        return self.fold_window(last_k).estimate_many(
+            estimator or plan.estimator
+        )
+
+    # ------------------------------------------------------------------
+    # serialization (RHLW v2: length-prefixed hybrid bucket payloads)
+    # ------------------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        header = _WINDOW_HEADER.pack(
+            _WINDOW_MAGIC,
+            _WINDOW_VERSION_SPARSE,
+            self.cfg.p,
+            self.cfg.hash_bits,
+            0,
+            self.cfg.seed,
+            self.window,
+            self.rows,
+            self.cursor,
+        )
+        out = [header, np.asarray(self.epochs, dtype=_EPOCH).tobytes()]
+        for b in self.buckets:
+            blob = b.to_bytes()
+            out.append(_BUCKET_LEN.pack(len(blob)))
+            out.append(blob)
+        return b"".join(out)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "HybridWindowedBank":
+        from repro.sketch.sparse import HybridBank
+
+        if len(data) < _WINDOW_HEADER.size:
+            raise ValueError(f"truncated window: {len(data)} bytes")
+        magic, version, p, hash_bits, _flags, seed, window, rows, cursor = (
+            _WINDOW_HEADER.unpack(data[: _WINDOW_HEADER.size])
+        )
+        if magic != _WINDOW_MAGIC:
+            raise ValueError(f"bad magic {magic!r}; not a serialized window")
+        if version == _WINDOW_VERSION:
+            # dense rings still parse, version-gated: all-dense buckets
+            dense = WindowedBank.from_bytes(data)
+            buckets = tuple(
+                SketchBank(
+                    dense.registers[w], dense.n_items[w], dense.cfg
+                ).to_hybrid(dense_rows=np.ones(dense.rows, bool))
+                for w in range(dense.window)
+            )
+            return cls(
+                buckets, int(dense.cursor), np.asarray(dense.epochs, _EPOCH)
+            )
+        if version != _WINDOW_VERSION_SPARSE:
+            raise ValueError(f"unsupported window version {version}")
+        if window < 1 or rows < 1:
+            raise ValueError(f"window header claims {window} buckets x {rows} rows")
+        if cursor >= window:
+            raise ValueError(f"cursor {cursor} out of range for W={window}")
+        cfg = HLLConfig(p=p, hash_bits=hash_bits, seed=seed)
+        epochs_end = _WINDOW_HEADER.size + window * _EPOCH.itemsize
+        if len(data) < epochs_end:
+            raise ValueError("truncated window: epoch labels cut short")
+        epochs = np.frombuffer(data[_WINDOW_HEADER.size : epochs_end], _EPOCH)
+        _validate_epoch_ring(epochs, cursor, window)
+        off = epochs_end
+        buckets, was_v1 = [], []
+        for w in range(window):
+            if len(data) < off + _BUCKET_LEN.size:
+                raise ValueError(f"bucket {w}: length prefix cut short")
+            (blen,) = _BUCKET_LEN.unpack_from(data, off)
+            off += _BUCKET_LEN.size
+            if len(data) < off + blen:
+                raise ValueError(f"bucket {w}: payload cut short")
+            payload = data[off : off + blen]
+            bucket = HybridBank.from_bytes(payload)
+            if bucket.cfg != cfg or len(bucket) != rows:
+                raise ValueError(f"bucket {w} disagrees with the window header")
+            buckets.append(bucket)
+            # a version-gated v1 dense payload carries no threshold of its
+            # own; it adopts the ring's below instead of vetoing it
+            was_v1.append(len(payload) > 5 and payload[4] == 1)
+            off += blen
+        if off != len(data):
+            raise ValueError(
+                f"window payload is {len(data)} bytes, expected {off}"
+            )
+        v2_thresholds = {
+            b.threshold for b, v1 in zip(buckets, was_v1) if not v1
+        }
+        if len(v2_thresholds) > 1:
+            raise ValueError(
+                f"bucket thresholds disagree across the ring: "
+                f"{sorted(v2_thresholds)}"
+            )
+        if v2_thresholds:
+            (ring_threshold,) = v2_thresholds
+            buckets = [
+                dataclasses.replace(b, threshold=ring_threshold)
+                if v1
+                else b
+                for b, v1 in zip(buckets, was_v1)
+            ]
+        return cls(tuple(buckets), int(cursor), epochs.copy())

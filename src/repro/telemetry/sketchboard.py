@@ -313,20 +313,85 @@ class StreamSketch:
             raise ValueError("empty board: pass cfg= to deserialize it")
         return cls(cfg=cfg, plan=plan, sketches=sketches)
 
+    def _board_registers(self) -> tuple:
+        """(names, stacked (B, m) uint8 registers) of the live board.
+
+        Windowed boards read the memoized ring fold, so this costs at
+        most one fold regardless of how often density() is asked.
+        """
+        if self.window is not None:
+            names = self.window_rows()
+            if not names:
+                return (), np.zeros((0, self.cfg.m), np.uint8)
+            self._ensure_wbank()
+            folded = self._window_fold()
+            regs = np.asarray(folded.registers)[
+                [self._wrows[n] for n in names]
+            ]
+            return names, regs
+        names = tuple(self.sketches)
+        if not names:
+            return (), np.zeros((0, self.cfg.m), np.uint8)
+        return names, np.stack(
+            [np.asarray(self.sketches[n].registers) for n in names]
+        )
+
+    def density(self) -> Dict[str, object]:
+        """Per-board register-density stats (DESIGN.md §12).
+
+        Reports how full each stream's registers are, how many streams
+        are sparse-eligible (occupancy at or under the board plan's
+        ``sparse_threshold``, defaulting to m // 4 like the carrier), and
+        what the board would cost under the hybrid sparse layout vs the
+        dense carriers it holds — the signal for moving a fleet to
+        ``HybridBank`` storage.
+        """
+        self.flush()
+        names, regs = self._board_registers()
+        m = self.cfg.m
+        occ = (regs > 0).sum(axis=1)
+        thr = self.plan.sparse_threshold if self.plan is not None else None
+        if thr is None:
+            thr = max(1, m // 4)
+        # sparse rows cost ~4 bytes/pair + fixed per-row bookkeeping (§12)
+        hybrid = int(np.where(occ > thr, m, 4 * occ + 16).sum())
+        return {
+            "streams": len(names),
+            "occupancy": {n: float(occ[i] / m) for i, n in enumerate(names)},
+            "occupancy_mean": float(occ.mean() / m) if len(names) else 0.0,
+            "sparse_eligible": int((occ <= thr).sum()),
+            "dense_nbytes": int(len(names) * m),
+            "hybrid_nbytes_estimate": hybrid,
+        }
+
     def report(
-        self, exact: bool = False, estimator: Optional[str] = None
+        self,
+        exact: bool = False,
+        estimator: Optional[str] = None,
+        density: bool = False,
     ) -> Dict[str, dict]:
         """Per-stream estimates; batched device finalization by default.
 
         Windowed boards report ROLLING distinct counts over the sliding
         W-epoch window (one fused ring fold + one batched estimate_many);
         ``items_seen``/``duplication`` likewise cover only the live
-        window.  Same row schema as flat boards.
+        window.  Same row schema as flat boards.  ``density=True`` adds a
+        ``register_occupancy`` column per stream (board-level stats live
+        in :meth:`density`).
         """
         self.flush()
         estimator = self._estimator(estimator)
         if self.window is not None:
-            return self._report_window(exact, estimator)
+            out = self._report_window(exact, estimator)
+        else:
+            out = self._report_flat(exact, estimator)
+        if density:
+            occ = self.density()["occupancy"]
+            for name, row in out.items():
+                row["register_occupancy"] = occ[name]
+        return out
+
+    def _report_flat(self, exact: bool, estimator: str) -> Dict[str, dict]:
         names = list(self.sketches)
         if exact or not names:
             estimates = [

@@ -1,0 +1,339 @@
+"""Pure-python reference model + adapters for the differential harness.
+
+The oracle is a dict-of-sets model of everything the bank subsystem
+promises: per-row sets of observed item values (the TRUE distinct counts),
+exact per-row observation counters, §9 key-routing drop rules, window
+epochs as a bounded deque of per-row sets, and merge as set union.  It
+never touches jax, so any disagreement localizes to the implementation.
+
+``run_ops`` drives an op sequence through (oracle, system-under-test)
+pairs.  The SUT adapters wrap each storage carrier behind one uniform
+surface:
+
+  update(keys, items)   keyed ingest (out-of-range keys included)
+  merge(keys, items)    build a sibling carrier from a second stream and
+                        fold it in (flat carriers only)
+  advance(steps)        open new epochs (windowed carriers only)
+  roundtrip()           serialize -> deserialize, state must survive
+  estimates(estimator)  (B,) float estimates over the live window
+  canonical()           a tuple of numpy arrays that must be BIT-IDENTICAL
+                        across every registered backend for the same op
+                        sequence (registers, counters, and for hybrid
+                        carriers the per-row mode flags)
+
+Op sequences are plain tuples so the same grammar serves the
+deterministic fixed-seed sweeps and the hypothesis strategies in
+tests/test_differential.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sketch import (
+    ExecutionPlan,
+    HybridBank,
+    HybridWindowedBank,
+    SketchBank,
+    WindowedBank,
+)
+
+
+class ReferenceModel:
+    """Dict-of-sets oracle for (windowed) multi-tenant cardinality."""
+
+    def __init__(self, rows, window=None):
+        self.rows = rows
+        self.window = window
+        self.epoch_sets = [self._fresh_sets()]
+        self.epoch_counts = [np.zeros(rows, np.int64)]
+
+    def _fresh_sets(self):
+        return [set() for _ in range(self.rows)]
+
+    def update(self, keys, items):
+        cur_sets = self.epoch_sets[-1]
+        cur_counts = self.epoch_counts[-1]
+        for k, x in zip(np.asarray(keys), np.asarray(items)):
+            k = int(k)
+            if 0 <= k < self.rows:  # §9: out-of-range keys drop silently
+                cur_sets[k].add(int(x))
+                cur_counts[k] += 1
+
+    def merge(self, other):
+        assert self.window is None and other.window is None
+        for r in range(self.rows):
+            self.epoch_sets[-1][r] |= other.epoch_sets[-1][r]
+        self.epoch_counts[-1] += other.epoch_counts[-1]
+
+    def advance(self, steps=1):
+        assert self.window is not None
+        for _ in range(steps):
+            self.epoch_sets.append(self._fresh_sets())
+            self.epoch_counts.append(np.zeros(self.rows, np.int64))
+            if len(self.epoch_sets) > self.window:
+                self.epoch_sets.pop(0)
+                self.epoch_counts.pop(0)
+
+    def true_cardinalities(self):
+        """(B,) exact distinct counts over the live window."""
+        out = np.zeros(self.rows, np.int64)
+        for r in range(self.rows):
+            live = set()
+            for sets in self.epoch_sets:
+                live |= sets[r]
+            out[r] = len(live)
+        return out
+
+    def observed(self):
+        """(B,) exact observation counts over the live window."""
+        return np.sum(self.epoch_counts, axis=0).astype(np.uint64)
+
+
+# ----------------------------------------------------------------------------
+# systems under test
+# ----------------------------------------------------------------------------
+
+
+class DenseBankSUT:
+    """The dense (B, m) SketchBank under a given ExecutionPlan."""
+
+    windowed = False
+
+    def __init__(self, rows, cfg, plan=None, threshold=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.bank = SketchBank.empty(rows, cfg)
+
+    def update(self, keys, items):
+        self.bank = self.bank.update_many(
+            jnp.asarray(keys), jnp.asarray(items), self.plan
+        )
+
+    def merge(self, keys, items):
+        other = SketchBank.empty(len(self.bank), self.cfg).update_many(
+            jnp.asarray(keys), jnp.asarray(items), self.plan
+        )
+        self.bank = self.bank.merge(other)
+
+    def roundtrip(self):
+        self.bank = SketchBank.from_bytes(self.bank.to_bytes())
+
+    def estimates(self, estimator=None):
+        return np.asarray(self.bank.estimate_many(estimator))
+
+    def counts(self):
+        return self.bank.counts
+
+    def canonical(self):
+        return (
+            np.asarray(self.bank.registers),
+            self.bank.counts,
+        )
+
+
+class HybridBankSUT:
+    """The sparse/dense HybridBank; threshold picks sparse vs mixed."""
+
+    windowed = False
+
+    def __init__(self, rows, cfg, plan=None, threshold=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.threshold = threshold
+        self.bank = HybridBank.empty(rows, cfg, threshold)
+
+    def update(self, keys, items):
+        self.bank = self.bank.update_many(
+            jnp.asarray(keys), jnp.asarray(items), self.plan
+        )
+
+    def merge(self, keys, items):
+        other = HybridBank.empty(
+            len(self.bank), self.cfg, self.threshold
+        ).update_many(jnp.asarray(keys), jnp.asarray(items), self.plan)
+        self.bank = self.bank.merge(other)
+
+    def roundtrip(self):
+        self.bank = HybridBank.from_bytes(self.bank.to_bytes())
+
+    def estimates(self, estimator=None):
+        return np.asarray(self.bank.estimate_many(estimator))
+
+    def counts(self):
+        return self.bank.counts
+
+    def canonical(self):
+        return (
+            np.asarray(self.bank.to_dense().registers),
+            self.bank.counts,
+            self.bank.modes,
+        )
+
+
+class DenseWindowSUT:
+    """The dense (W, B, m) WindowedBank ring."""
+
+    windowed = True
+
+    def __init__(self, window, rows, cfg, plan=None, threshold=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.ring = WindowedBank.empty(window, rows, cfg)
+
+    def update(self, keys, items):
+        self.ring = self.ring.observe(
+            jnp.asarray(keys), jnp.asarray(items), self.plan
+        )
+
+    def advance(self, steps=1):
+        self.ring = self.ring.advance(steps)
+
+    def roundtrip(self):
+        self.ring = WindowedBank.from_bytes(self.ring.to_bytes())
+
+    def estimates(self, estimator=None):
+        return np.asarray(
+            self.ring.estimate_window(plan=self.plan, estimator=estimator)
+        )
+
+    def counts(self):
+        return self.ring.window_counts()
+
+    def canonical(self):
+        return (
+            np.asarray(self.ring._fold_registers(self.ring.window, self.plan)),
+            self.ring.window_counts(),
+            np.asarray(self.ring.epochs),
+        )
+
+
+class HybridWindowSUT:
+    """The hybrid ring: sparse buckets, promotion surviving advance()."""
+
+    windowed = True
+
+    def __init__(self, window, rows, cfg, plan=None, threshold=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.ring = HybridWindowedBank.empty(window, rows, cfg, threshold)
+
+    def update(self, keys, items):
+        self.ring = self.ring.observe(
+            jnp.asarray(keys), jnp.asarray(items), self.plan
+        )
+
+    def advance(self, steps=1):
+        self.ring = self.ring.advance(steps)
+
+    def roundtrip(self):
+        self.ring = HybridWindowedBank.from_bytes(self.ring.to_bytes())
+
+    def estimates(self, estimator=None):
+        return np.asarray(
+            self.ring.estimate_window(plan=self.plan, estimator=estimator)
+        )
+
+    def counts(self):
+        return self.ring.window_counts()
+
+    def canonical(self):
+        fold = self.ring.fold_window()
+        return (
+            np.asarray(fold.to_dense().registers),
+            self.ring.window_counts(),
+            np.asarray(self.ring.epochs),
+            fold.modes,
+        )
+
+
+# ----------------------------------------------------------------------------
+# op sequences
+# ----------------------------------------------------------------------------
+
+
+# stream lengths come from a fixed palette so the jitted sort-merge and
+# scatter kernels compile once per shape instead of once per op
+STREAM_SIZES = (16, 64, 128, 320)
+
+
+def gen_stream(rng, rows, n, hot_frac=0.2, oob_frac=0.05, value_space=None):
+    """A Zipf-ish keyed stream with a sprinkle of out-of-range keys."""
+    hot = max(1, int(rows * hot_frac))
+    hot_keys = rng.integers(0, hot, n)
+    cold_keys = rng.integers(0, rows, n)
+    keys = np.where(rng.random(n) < 0.8, hot_keys, cold_keys).astype(np.int32)
+    oob = rng.random(n) < oob_frac
+    keys = np.where(oob, rng.choice([-3, -1, rows, rows + 7], n), keys)
+    if value_space is None:
+        value_space = int(rng.choice([50, 500, 2**20]))
+    items = rng.integers(0, value_space, n, dtype=np.int32)
+    return keys.astype(np.int32), items
+
+
+def gen_ops(rng, rows, n_ops, windowed):
+    """A deterministic op sequence over the shared grammar."""
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.55:
+            n = int(rng.choice(STREAM_SIZES))
+            ops.append(("update", *gen_stream(rng, rows, n)))
+        elif r < 0.70:
+            if windowed:
+                ops.append(("advance", int(rng.integers(1, 3))))
+            else:
+                n = int(rng.choice(STREAM_SIZES[:2]))
+                ops.append(("merge", *gen_stream(rng, rows, n)))
+        elif r < 0.85:
+            ops.append(("roundtrip",))
+        else:
+            ops.append(("estimate",))
+    ops.append(("estimate",))
+    return ops
+
+
+def run_ops(ops, sut, oracle, on_estimate=None):
+    """Drive one op sequence; ``on_estimate(sut, oracle)`` checks bands."""
+    for op in ops:
+        kind = op[0]
+        if kind == "update":
+            sut.update(op[1], op[2])
+            oracle.update(op[1], op[2])
+        elif kind == "merge":
+            sut.merge(op[1], op[2])
+            side = ReferenceModel(oracle.rows)
+            side.update(op[1], op[2])
+            oracle.merge(side)
+        elif kind == "advance":
+            sut.advance(op[1])
+            oracle.advance(op[1])
+        elif kind == "roundtrip":
+            sut.roundtrip()
+        elif kind == "estimate":
+            if on_estimate is not None:
+                on_estimate(sut, oracle)
+        else:  # pragma: no cover - grammar bug
+            raise AssertionError(f"unknown op {kind!r}")
+    return sut
+
+
+def assert_within_band(estimates, true, m, sigma_mult=3.0):
+    """|est - true| <= sigma_mult * (1.04/sqrt(m)) * true + small-count slack.
+
+    The slack term 3*sqrt(true+1) covers the low-cardinality regime where
+    the relative-sigma band collapses below hash-collision granularity.
+    """
+    estimates = np.asarray(estimates, np.float64)
+    true = np.asarray(true, np.float64)
+    tol = sigma_mult * (1.04 / np.sqrt(m)) * true + 3.0 * np.sqrt(true + 1.0)
+    err = np.abs(estimates - true)
+    worst = int(np.argmax(err - tol))
+    assert (err <= tol).all(), (
+        f"row {worst}: estimate {estimates[worst]} vs true {true[worst]} "
+        f"(err {err[worst]:.2f} > tol {tol[worst]:.2f})"
+    )
+
+
+def make_plans(backends):
+    """One local plan per registered bank backend (the differential axis)."""
+    return {name: ExecutionPlan(backend=name) for name in backends}

@@ -311,6 +311,55 @@ def test_empty_returns_rejects_bad_row_count():
         SketchBank.from_sketches([])
 
 
+def _zero_row_bank():
+    # empty() refuses rows=0 by design; a zero-row bank can still arrive
+    # through slicing/deserialization layers, so build one directly
+    return SketchBank(
+        jnp.zeros((0, CFG.m), jnp.uint8), jnp.zeros((0, 2), jnp.uint32), CFG
+    )
+
+
+def test_zero_row_bank_update_many_short_circuits():
+    bank = _zero_row_bank()
+    keys, items = _stream(64, 4, seed=21)
+    out = bank.update_many(keys, items)  # every key is out of range
+    assert out is bank
+    assert out.counts.shape == (0,)
+    with pytest.raises(ValueError, match="same length"):
+        bank.update_many(jnp.zeros((2,), jnp.int32), jnp.zeros((3,), jnp.int32))
+
+
+def test_zero_row_bank_estimate_many_short_circuits():
+    bank = _zero_row_bank()
+    est = bank.estimate_many()
+    assert est.shape == (0,) and est.dtype == jnp.float32
+    for estimator in ("original", "ertl_improved", "ertl_mle"):
+        assert bank.estimate_many(estimator).shape == (0,)
+
+
+def test_v2_blob_rejected_with_pointer_and_fuzz():
+    """The v1 parser must refuse RHLB v2 (hybrid) blobs loudly at any cut
+    point — the wire-format mirror of the version-gated parse rule in
+    repro/sketch/sparse.py (DESIGN.md §12)."""
+    from repro.sketch import HybridBank
+
+    keys, items = _stream(2000, 6, seed=33)
+    hb = HybridBank.empty(6, CFG, threshold=8).update_many(keys, items)
+    blob = hb.to_bytes()
+    with pytest.raises(ValueError, match="HybridBank.from_bytes"):
+        SketchBank.from_bytes(blob)
+    for frac in (0.1, 0.5, 0.9):
+        with pytest.raises(ValueError):
+            SketchBank.from_bytes(blob[: int(len(blob) * frac)])
+        with pytest.raises(ValueError):
+            HybridBank.from_bytes(blob[: int(len(blob) * frac)])
+    # and the hybrid parser holds the same line on cut v1 blobs
+    v1 = _filled_bank(rows=3).to_bytes()
+    for frac in (0.1, 0.5, 0.9):
+        with pytest.raises(ValueError):
+            HybridBank.from_bytes(v1[: int(len(v1) * frac)])
+
+
 # ----------------------------------------------------------------------------
 # pytree / jit behavior
 # ----------------------------------------------------------------------------

@@ -1,0 +1,522 @@
+"""HybridBank: sparse rows, dense promotion, RHLB/RHLW v2, density stats.
+
+Acceptance properties for the sparse subsystem (DESIGN.md §12):
+
+* hybrid ingest under EVERY registered bank backend materializes to
+  registers bit-identical to dense ingestion of the same keyed stream
+  (promotion included), with the §9 drop/counter rules intact;
+* rows promote exactly when their distinct-bucket count crosses the
+  threshold, promoted registers are bit-identical to dense-from-scratch,
+  and the boundary (threshold-1 / threshold / threshold+1) round-trips
+  through RHLB v2 and estimates identically to a dense row — per backend;
+* the v2 wire formats reject garbage (truncation anywhere, mode-flag
+  flips, unsorted/oversized pair lists, v1<->v2 confusion) instead of
+  mis-parsing.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.sketch import (
+    ExecutionPlan,
+    HLLConfig,
+    HybridBank,
+    HybridWindowedBank,
+    SketchBank,
+    WindowedBank,
+    available_bank_backends,
+    available_estimators,
+    default_threshold,
+    hll,
+    update_many,
+)
+from repro.sketch.sparse import MODE_DENSE, MODE_SPARSE
+
+CFG = HLLConfig(p=8, hash_bits=64)  # m=256: small enough for pallas paths
+
+
+def _stream(n, rows, seed=0, space=2**31):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, rows, n, dtype=np.int32))
+    items = jnp.asarray(rng.integers(0, space, n, dtype=np.int32))
+    return keys, items
+
+
+def _skewed_stream(n, rows, seed=0, hot=3):
+    """Most traffic on ``hot`` rows; the rest stay nearly empty."""
+    rng = np.random.default_rng(seed)
+    keys = np.where(
+        rng.random(n) < 0.9,
+        rng.integers(0, hot, n),
+        rng.integers(hot, rows, n),
+    ).astype(np.int32)
+    items = rng.integers(0, 2**31, n, dtype=np.int32)
+    return jnp.asarray(keys), jnp.asarray(items)
+
+
+def _items_with_distinct_buckets(k, cfg=CFG, seed=0):
+    """Items hashing to exactly ``k`` distinct buckets (greedy pick)."""
+    rng = np.random.default_rng(seed)
+    chosen, seen = [], set()
+    while len(chosen) < k:
+        cand = rng.integers(0, 2**31, 4 * cfg.m, dtype=np.int32)
+        idx, _ = hll.hash_index_rank(jnp.asarray(cand), cfg)
+        for item, b in zip(cand, np.asarray(idx)):
+            if int(b) not in seen:
+                seen.add(int(b))
+                chosen.append(int(item))
+                if len(chosen) == k:
+                    break
+    return np.asarray(chosen, np.int32)
+
+
+# ----------------------------------------------------------------------------
+# ingest equivalence (per backend) + routing rules
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", available_bank_backends())
+def test_hybrid_ingest_matches_dense_per_backend(backend):
+    rows, n = 19, 3001
+    plan = ExecutionPlan(backend=backend)
+    keys, items = _skewed_stream(n, rows, seed=5)
+    dense = update_many(SketchBank.empty(rows, CFG), keys, items, plan)
+    hb = HybridBank.empty(rows, CFG, threshold=16)
+    for c in np.array_split(np.arange(n), 4):  # chunked: promotions mid-way
+        hb = hb.update_many(keys[jnp.asarray(c)], items[jnp.asarray(c)], plan)
+    np.testing.assert_array_equal(
+        np.asarray(hb.to_dense().registers), np.asarray(dense.registers)
+    )
+    np.testing.assert_array_equal(hb.counts, dense.counts)
+    assert hb.dense_rows > 0 and hb.dense_rows < rows  # genuinely mixed
+
+
+@pytest.mark.parametrize("backend", available_bank_backends())
+def test_hybrid_out_of_range_keys_dropped_not_leaked(backend):
+    rows, n = 11, 2001
+    keys, items = _stream(n, rows, seed=7)
+    bad = np.asarray(keys).copy()
+    bad[::5] = -2
+    bad[::7] = rows + 3
+    plan = ExecutionPlan(backend=backend)
+    dense = update_many(SketchBank.empty(rows, CFG), jnp.asarray(bad), items, plan)
+    hb = HybridBank.empty(rows, CFG).update_many(jnp.asarray(bad), items, plan)
+    np.testing.assert_array_equal(
+        np.asarray(hb.to_dense().registers), np.asarray(dense.registers)
+    )
+    in_range = bad[(bad >= 0) & (bad < rows)]
+    np.testing.assert_array_equal(
+        hb.counts, np.bincount(in_range, minlength=rows)
+    )
+
+
+def test_chunked_ingest_is_order_invariant():
+    rows, n = 13, 2000
+    keys, items = _skewed_stream(n, rows, seed=11)
+    one = HybridBank.empty(rows, CFG, threshold=16).update_many(keys, items)
+    perm = np.random.default_rng(0).permutation(n)
+    shuffled = HybridBank.empty(rows, CFG, threshold=16)
+    for c in np.array_split(perm, 7):
+        shuffled = shuffled.update_many(keys[jnp.asarray(c)], items[jnp.asarray(c)])
+    np.testing.assert_array_equal(
+        np.asarray(one.to_dense().registers),
+        np.asarray(shuffled.to_dense().registers),
+    )
+    np.testing.assert_array_equal(one.modes, shuffled.modes)
+    np.testing.assert_array_equal(one.counts, shuffled.counts)
+
+
+def test_estimates_bit_identical_to_dense_all_estimators():
+    rows = 31
+    keys, items = _skewed_stream(2500, rows, seed=3)
+    dense = update_many(SketchBank.empty(rows, CFG), keys, items)
+    hb = HybridBank.empty(rows, CFG, threshold=32).update_many(keys, items)
+    assert (hb.modes == MODE_SPARSE).any() and (hb.modes == MODE_DENSE).any()
+    for est in (None,) + tuple(available_estimators()):
+        np.testing.assert_array_equal(
+            np.asarray(hb.estimate_many(est)),
+            np.asarray(dense.estimate_many(est)),
+            err_msg=f"estimator {est}",
+        )
+    # the LC fast path and the histogram path agree with each other too
+    np.testing.assert_array_equal(
+        np.asarray(hb.estimate_many("original")),
+        np.asarray(hb.estimate_many("original", lc_fast=False)),
+    )
+    # exact host estimates agree row by row
+    for b in (0, rows // 2, rows - 1):
+        assert hb.estimate(b) == dense.estimate(b)
+
+
+# ----------------------------------------------------------------------------
+# promotion boundary (threshold-1 / threshold / threshold+1), per backend
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", available_bank_backends())
+@pytest.mark.parametrize("delta", [-1, 0, 1])
+def test_promotion_boundary_roundtrips_and_matches_dense(backend, delta):
+    t = 16
+    k = t + delta
+    items = jnp.asarray(_items_with_distinct_buckets(k, seed=k))
+    keys = jnp.zeros(k, jnp.int32)
+    plan = ExecutionPlan(backend=backend)
+    hb = HybridBank.empty(3, CFG, threshold=t).update_many(keys, items, plan)
+    # crossing means strictly exceeding the threshold
+    want_mode = MODE_DENSE if k > t else MODE_SPARSE
+    assert hb.modes[0] == want_mode and (hb.modes[1:] == MODE_SPARSE).all()
+    dense = update_many(SketchBank.empty(3, CFG), keys, items, plan)
+    np.testing.assert_array_equal(
+        np.asarray(hb.to_dense().registers), np.asarray(dense.registers)
+    )
+    if k > t:  # promoted registers are bit-identical to dense-from-scratch
+        np.testing.assert_array_equal(
+            np.asarray(hb.dense[0]), np.asarray(dense.registers[0])
+        )
+    back = HybridBank.from_bytes(hb.to_bytes())  # RHLB v2 round-trip
+    assert back.threshold == t
+    np.testing.assert_array_equal(back.modes, hb.modes)
+    np.testing.assert_array_equal(back.counts, hb.counts)
+    np.testing.assert_array_equal(
+        np.asarray(back.to_dense().registers),
+        np.asarray(hb.to_dense().registers),
+    )
+    for est in available_estimators():
+        np.testing.assert_array_equal(
+            np.asarray(back.estimate_many(est)),
+            np.asarray(dense.estimate_many(est)),
+            err_msg=f"estimator {est} at threshold{delta:+d}",
+        )
+        assert back.estimate(0, est) == dense.estimate(0, est)
+
+
+def test_promotion_is_sticky_and_merge_keeps_it_infectious():
+    t = 8
+    hot = jnp.asarray(_items_with_distinct_buckets(t + 1, seed=1))
+    a = HybridBank.empty(2, CFG, threshold=t).update_many(
+        jnp.zeros(t + 1, jnp.int32), hot
+    )
+    assert a.modes.tolist() == [MODE_DENSE, MODE_SPARSE]
+    # a tiny follow-up batch cannot demote the promoted row
+    a = a.update_many(jnp.zeros(1, jnp.int32), jnp.asarray([123], jnp.int32))
+    assert a.modes.tolist() == [MODE_DENSE, MODE_SPARSE]
+    b = HybridBank.empty(2, CFG, threshold=t).update_many(
+        jnp.ones(3, jnp.int32), jnp.arange(3, dtype=jnp.int32)
+    )
+    merged = a | b
+    assert merged.modes.tolist() == [MODE_DENSE, MODE_SPARSE]
+    np.testing.assert_array_equal(merged.counts, a.counts + b.counts)
+    # sparse + sparse whose union crosses the threshold promotes
+    half1 = jnp.asarray(_items_with_distinct_buckets(t, seed=2))
+    half2 = jnp.asarray(_items_with_distinct_buckets(t, seed=3))
+    u = HybridBank.empty(1, CFG, threshold=t).update_many(
+        jnp.zeros(t, jnp.int32), half1
+    ).merge(
+        HybridBank.empty(1, CFG, threshold=t).update_many(
+            jnp.zeros(t, jnp.int32), half2
+        )
+    )
+    assert u.modes[0] == MODE_DENSE  # 16 distinct buckets > t=8
+
+
+def test_merge_mismatches_raise():
+    a = HybridBank.empty(4, CFG, threshold=8)
+    with pytest.raises(ValueError, match="different sizes"):
+        a.merge(HybridBank.empty(5, CFG, threshold=8))
+    with pytest.raises(ValueError, match="different configs"):
+        a.merge(HybridBank.empty(4, HLLConfig(p=9, hash_bits=64), threshold=8))
+    with pytest.raises(ValueError, match="thresholds"):
+        a.merge(HybridBank.empty(4, CFG, threshold=16))
+
+
+# ----------------------------------------------------------------------------
+# capacity adaptation + density introspection
+# ----------------------------------------------------------------------------
+
+
+def test_capacity_adapts_and_density_reports_the_win():
+    rows = 64
+    hb = HybridBank.empty(rows, CFG)
+    assert hb.capacity == 0 and hb.nbytes < rows * CFG.m
+    keys, items = _skewed_stream(4000, rows, seed=13)
+    hb = hb.update_many(keys, items)
+    d = hb.density()
+    assert d["rows"] == rows and d["dense_rows"] == hb.dense_rows
+    assert 0 < d["occupancy_mean"] < 1
+    assert d["nbytes"] == hb.nbytes
+    assert d["reduction"] > 1.5  # skewed traffic: hybrid must actually win
+    # capacity tracks the largest sparse row, not the hot promoted rows
+    assert hb.capacity <= hb.threshold
+    assert hb.capacity >= int(np.asarray(hb.sparse_len).max())
+    # dense SketchBank exposes the same introspection schema
+    dd = update_many(SketchBank.empty(rows, CFG), keys, items).density()
+    assert set(dd) == set(d) and dd["reduction"] == 1.0
+
+
+def test_to_hybrid_and_from_dense_roundtrip():
+    rows = 12
+    keys, items = _skewed_stream(1500, rows, seed=17)
+    dense = update_many(SketchBank.empty(rows, CFG), keys, items)
+    hb = dense.to_hybrid(threshold=16)
+    np.testing.assert_array_equal(
+        np.asarray(hb.to_dense().registers), np.asarray(dense.registers)
+    )
+    np.testing.assert_array_equal(hb.counts, dense.counts)
+    # forced dense rows stay dense even when nearly empty
+    forced = dense.to_hybrid(threshold=16, dense_rows=np.ones(rows, bool))
+    assert (forced.modes == MODE_DENSE).all()
+    with pytest.raises(ValueError, match="mask"):
+        dense.to_hybrid(dense_rows=np.ones(rows + 1, bool))
+
+
+def test_row_and_to_sketches_match_dense():
+    rows = 6
+    keys, items = _skewed_stream(900, rows, seed=19)
+    dense = update_many(SketchBank.empty(rows, CFG), keys, items)
+    hb = HybridBank.empty(rows, CFG, threshold=16).update_many(keys, items)
+    for i in range(-rows, rows):
+        np.testing.assert_array_equal(
+            np.asarray(hb.row(i).registers), np.asarray(dense.row(i).registers)
+        )
+        assert hb.row(i).count == dense.row(i).count
+    with pytest.raises(IndexError, match="out of range"):
+        hb.row(rows)
+    assert len(hb.to_sketches()) == rows
+
+
+def test_threshold_validation():
+    with pytest.raises(ValueError, match="threshold"):
+        HybridBank.empty(4, CFG, threshold=0)
+    with pytest.raises(ValueError, match="threshold"):
+        HybridBank.empty(4, CFG, threshold=CFG.m)  # > m // 2: LC guarantee
+    with pytest.raises(ValueError, match="at least one row"):
+        HybridBank.empty(0, CFG)
+    assert HybridBank.empty(4, CFG).threshold == default_threshold(CFG)
+    with pytest.raises(ValueError, match="sparse_threshold"):
+        ExecutionPlan(sparse_threshold=0)
+    assert ExecutionPlan(sparse_threshold=7).sparse_threshold == 7
+
+
+# ----------------------------------------------------------------------------
+# B=0 and empty-stream short-circuits
+# ----------------------------------------------------------------------------
+
+
+def test_hybrid_empty_stream_and_zero_rows_short_circuit():
+    hb = HybridBank.empty(4, CFG)
+    empty = jnp.zeros((0,), jnp.int32)
+    assert hb.update_many(empty, empty) is hb
+    with pytest.raises(ValueError, match="same length"):
+        hb.update_many(jnp.zeros((2,), jnp.int32), empty)
+    zero = HybridBank(
+        jnp.zeros((0, 0), jnp.int32),
+        jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0, CFG.m), hll.REGISTER_DTYPE),
+        jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0, 2), jnp.uint32),
+        CFG,
+        8,
+    )
+    assert zero.update_many(jnp.zeros(5, jnp.int32), jnp.arange(5)) is zero
+    assert zero.estimate_many().shape == (0,)
+
+
+# ----------------------------------------------------------------------------
+# RHLB v2 wire format: round-trip + garbage rejection
+# ----------------------------------------------------------------------------
+
+
+def _mixed_bank(rows=9, n=1200, threshold=16, seed=23):
+    keys, items = _skewed_stream(n, rows, seed=seed)
+    return HybridBank.empty(rows, CFG, threshold).update_many(keys, items)
+
+
+def test_v2_roundtrip_mixed_modes():
+    hb = _mixed_bank()
+    assert (hb.modes == MODE_SPARSE).any() and (hb.modes == MODE_DENSE).any()
+    back = HybridBank.from_bytes(hb.to_bytes())
+    np.testing.assert_array_equal(back.modes, hb.modes)
+    np.testing.assert_array_equal(back.counts, hb.counts)
+    np.testing.assert_array_equal(
+        np.asarray(back.to_dense().registers),
+        np.asarray(hb.to_dense().registers),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(back.sparse_len), np.asarray(hb.sparse_len)
+    )
+
+
+def test_v1_dense_blob_parses_as_all_dense_hybrid():
+    rows = 5
+    keys, items = _stream(800, rows, seed=29)
+    dense = update_many(SketchBank.empty(rows, CFG), keys, items)
+    hb = HybridBank.from_bytes(dense.to_bytes())  # version-gated v1 parse
+    assert (hb.modes == MODE_DENSE).all()
+    np.testing.assert_array_equal(
+        np.asarray(hb.to_dense().registers), np.asarray(dense.registers)
+    )
+    np.testing.assert_array_equal(hb.counts, dense.counts)
+
+
+def test_sketchbank_rejects_v2_with_pointer():
+    blob = _mixed_bank().to_bytes()
+    with pytest.raises(ValueError, match="HybridBank.from_bytes"):
+        SketchBank.from_bytes(blob)
+
+
+@pytest.mark.parametrize("frac", [0.0, 0.05, 0.2, 0.45, 0.7, 0.9, 0.999])
+def test_v2_rejects_truncation_anywhere(frac):
+    """Cuts through the header, counts, mode flags, a dense row, and —
+    crucially — inside a sparse pair list must all raise, never mis-parse."""
+    blob = _mixed_bank().to_bytes()
+    cut = int(len(blob) * frac)
+    with pytest.raises(ValueError):
+        HybridBank.from_bytes(blob[:cut])
+    with pytest.raises(ValueError):
+        HybridBank.from_bytes(blob + b"\x00")
+
+
+def test_v2_rejects_cut_inside_pair_list():
+    hb = HybridBank.empty(2, CFG, threshold=16).update_many(
+        jnp.zeros(8, jnp.int32),
+        jnp.asarray(_items_with_distinct_buckets(8, seed=31)),
+    )
+    blob = hb.to_bytes()
+    header = 20 + 4 + 2 * 8 + 2  # header + threshold + counts + modes
+    cut = header + 2 + 4  # inside row 0's pair list (8 pairs x 3 bytes)
+    assert cut < len(blob)
+    with pytest.raises(ValueError, match="cut short|payload"):
+        HybridBank.from_bytes(blob[:cut])
+
+
+def test_v2_rejects_mode_flag_flips():
+    hb = _mixed_bank()
+    rows = len(hb)
+    blob = bytearray(hb.to_bytes())
+    modes_off = 20 + 4 + rows * 8
+    flip = int(np.argmax(hb.modes == MODE_SPARSE))
+    blob[modes_off + flip] = MODE_DENSE  # sparse row re-labeled dense
+    with pytest.raises(ValueError):
+        HybridBank.from_bytes(bytes(blob))
+    blob[modes_off + flip] = 7  # not a mode at all
+    with pytest.raises(ValueError, match="mode flag"):
+        HybridBank.from_bytes(bytes(blob))
+
+
+def test_v2_rejects_corrupt_pair_lists():
+    t = 16
+    hb = HybridBank.empty(1, CFG, threshold=t).update_many(
+        jnp.zeros(4, jnp.int32),
+        jnp.asarray(_items_with_distinct_buckets(4, seed=37)),
+    )
+    blob = bytearray(hb.to_bytes())
+    payload = 20 + 4 + 8 + 1  # header + threshold + count + mode
+    # npairs beyond the declared threshold
+    bad = bytearray(blob)
+    bad[payload : payload + 2] = (t + 1).to_bytes(2, "little")
+    with pytest.raises(ValueError, match="threshold|cut short"):
+        HybridBank.from_bytes(bytes(bad))
+    # unsorted buckets (swap the first two pairs)
+    bad = bytearray(blob)
+    first = bytes(bad[payload + 2 : payload + 5])
+    bad[payload + 2 : payload + 5] = bad[payload + 5 : payload + 8]
+    bad[payload + 5 : payload + 8] = first
+    with pytest.raises(ValueError, match="increasing"):
+        HybridBank.from_bytes(bytes(bad))
+    # rank 0 is not a value a present bucket can hold
+    bad = bytearray(blob)
+    bad[payload + 4] = 0
+    with pytest.raises(ValueError, match="rank"):
+        HybridBank.from_bytes(bytes(bad))
+    # rank beyond max_rank
+    bad = bytearray(blob)
+    bad[payload + 4] = CFG.max_rank + 1
+    with pytest.raises(ValueError, match="rank"):
+        HybridBank.from_bytes(bytes(bad))
+
+
+# ----------------------------------------------------------------------------
+# hybrid windowed ring: sparse buckets, promotion across advance, RHLW v2
+# ----------------------------------------------------------------------------
+
+
+def test_window_promotion_survives_advance():
+    t = 8
+    win = HybridWindowedBank.empty(3, 2, CFG, threshold=t)
+    hot = jnp.asarray(_items_with_distinct_buckets(t + 1, seed=41))
+    win = win.observe(jnp.zeros(t + 1, jnp.int32), hot)
+    assert win.buckets[win.cursor].modes[0] == MODE_DENSE
+    promoted_regs = np.asarray(win.buckets[win.cursor].dense[0])
+    win = win.advance()  # the promoted bucket ages but keeps its mode
+    aged = win.buckets[(win.cursor - 1) % win.window]
+    assert aged.modes[0] == MODE_DENSE
+    np.testing.assert_array_equal(np.asarray(aged.dense[0]), promoted_regs)
+    # the NEW current bucket starts sparse again
+    assert (win.buckets[win.cursor].modes == MODE_SPARSE).all()
+    # ...and the fold still sees the promoted epoch until it expires
+    assert win.fold_window().modes[0] == MODE_DENSE
+    win = win.advance(win.window)  # slide the promoted epoch out
+    assert win.window_counts().sum() == 0
+    assert (win.fold_window().modes == MODE_SPARSE).all()
+
+
+def test_hybrid_window_matches_dense_ring():
+    window, rows = 3, 10
+    wh = HybridWindowedBank.empty(window, rows, CFG, threshold=16)
+    wd = WindowedBank.empty(window, rows, CFG)
+    rng = np.random.default_rng(43)
+    for e in range(5):
+        if e:
+            wh, wd = wh.advance(), wd.advance()
+        keys = jnp.asarray(rng.integers(0, rows, 400, dtype=np.int32))
+        items = jnp.asarray(rng.integers(0, 2**31, 400, dtype=np.int32))
+        wh, wd = wh.observe(keys, items), wd.observe(keys, items)
+    assert wh.epoch == wd.epoch
+    for last_k in (1, 2, 3):
+        np.testing.assert_array_equal(
+            np.asarray(wh.fold_window(last_k).to_dense().registers),
+            np.asarray(wd._fold_registers(last_k, None)),
+        )
+        np.testing.assert_array_equal(
+            wh.window_counts(last_k), wd.window_counts(last_k)
+        )
+    with pytest.raises(ValueError, match="last_k"):
+        wh.estimate_window(0)
+    d = wh.density()
+    assert d["window"] == window and d["rows"] == rows
+
+
+def test_rhlw_v2_roundtrip_and_v1_interop():
+    window, rows = 3, 4
+    win = HybridWindowedBank.empty(window, rows, CFG, threshold=8)
+    rng = np.random.default_rng(47)
+    for e in range(4):
+        if e:
+            win = win.advance()
+        win = win.observe(
+            jnp.asarray(rng.integers(0, rows, 300, dtype=np.int32)),
+            jnp.asarray(rng.integers(0, 2**31, 300, dtype=np.int32)),
+        )
+    blob = win.to_bytes()
+    back = HybridWindowedBank.from_bytes(blob)
+    assert back.cursor == win.cursor and back.epoch == win.epoch
+    np.testing.assert_array_equal(back.epochs, win.epochs)
+    np.testing.assert_array_equal(back.window_counts(), win.window_counts())
+    np.testing.assert_array_equal(
+        np.asarray(back.fold_window().to_dense().registers),
+        np.asarray(win.fold_window().to_dense().registers),
+    )
+    # a v1 dense ring parses into an all-dense hybrid ring, version-gated
+    wd = WindowedBank.empty(window, rows, CFG).observe(
+        jnp.asarray(rng.integers(0, rows, 200, dtype=np.int32)),
+        jnp.asarray(rng.integers(0, 2**31, 200, dtype=np.int32)),
+    )
+    h1 = HybridWindowedBank.from_bytes(wd.to_bytes())
+    np.testing.assert_array_equal(
+        np.asarray(h1.fold_window().to_dense().registers),
+        np.asarray(wd._fold_registers(window, None)),
+    )
+    # ...while the dense parser refuses the v2 ring with a pointer
+    with pytest.raises(ValueError, match="HybridWindowedBank"):
+        WindowedBank.from_bytes(blob)

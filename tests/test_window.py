@@ -485,3 +485,96 @@ def test_empty_windowed_observe_dispatches_no_backend():
     empty = jnp.zeros((0,), jnp.int32)
     assert win.observe(empty, empty, plan) is win
     assert _SPY_CALLS["n"] == 0
+
+
+def test_zero_row_bank_dispatches_no_backend():
+    """B=0 regression (alongside the zero-length-ingest spies): a bank
+    with no rows must short-circuit before any backend dispatch even for
+    a NON-empty stream — every key is out of range by definition."""
+    plan = ExecutionPlan(backend="spy_counting_jnp")
+    bank = SketchBank(
+        jnp.zeros((0, CFG.m), jnp.uint8), jnp.zeros((0, 2), jnp.uint32), CFG
+    )
+    _SPY_CALLS["n"] = 0
+    keys, items = _chunk(32, 4, seed=51)
+    assert bank.update_many(keys, items, plan) is bank
+    assert _SPY_CALLS["n"] == 0
+    # the functional entry point short-circuits identically
+    from repro.sketch import update_bank_registers
+
+    regs = update_bank_registers(bank.registers, keys, items, CFG, plan)
+    assert _SPY_CALLS["n"] == 0 and regs.shape == (0, CFG.m)
+
+
+def test_hybrid_observe_empty_dispatches_no_backend():
+    from repro.sketch import HybridWindowedBank
+
+    plan = ExecutionPlan(backend="spy_counting_jnp")
+    win = HybridWindowedBank.empty(2, 3, CFG, threshold=8)
+    _SPY_CALLS["n"] = 0
+    empty = jnp.zeros((0,), jnp.int32)
+    assert win.observe(empty, empty, plan) is win
+    assert _SPY_CALLS["n"] == 0
+
+
+# ----------------------------------------------------------------------------
+# RHLW v2 interop fuzz: v1<->v2 mixed rings must raise, never mis-parse
+# ----------------------------------------------------------------------------
+
+
+def test_v1_parser_rejects_v2_ring_and_v1_ring_with_v2_bucket():
+    from repro.sketch import HybridWindowedBank
+
+    win = _ring_from_chunks(2, 3, [_chunk(500, 3, seed=61)])
+    v1 = win.to_bytes()
+    hybrid = HybridWindowedBank.empty(2, 3, CFG, threshold=8).observe(
+        *_chunk(500, 3, seed=61)
+    )
+    v2 = hybrid.to_bytes()
+    # the dense parser points v2 rings at the hybrid one
+    with pytest.raises(ValueError, match="version 2.*HybridWindowedBank"):
+        WindowedBank.from_bytes(v2)
+    # a v1 ring whose first bucket payload is spliced with v2 bucket bytes
+    # fails the fixed-size layout checks (length or bucket version)
+    v2_bucket = hybrid.buckets[0].to_bytes()
+    spliced = v1[:40] + v2_bucket + v1[40 + len(v2_bucket) :]
+    with pytest.raises(ValueError):
+        WindowedBank.from_bytes(spliced[: len(v1)])
+    # a v2 ring truncated anywhere (including inside a bucket payload)
+    for frac in (0.05, 0.3, 0.6, 0.95):
+        with pytest.raises(ValueError):
+            HybridWindowedBank.from_bytes(v2[: int(len(v2) * frac)])
+    with pytest.raises(ValueError):
+        HybridWindowedBank.from_bytes(v2 + b"\x00")
+
+
+def test_v2_ring_accepts_embedded_v1_dense_bucket():
+    """The length-prefixed v2 frame may legitimately carry a v1 dense
+    bucket blob (dense blobs still parse, version-gated); swapping one in
+    must round-trip, not raise."""
+    import struct as _struct
+
+    from repro.sketch import HybridWindowedBank, update_many as _um
+
+    keys, items = _chunk(400, 3, seed=62)
+    hybrid = HybridWindowedBank.empty(2, 3, CFG, threshold=8).observe(keys, items)
+    dense_bucket = _um(SketchBank.empty(3, CFG), keys, items)
+    blob = hybrid.to_bytes()
+    # rebuild the frame with bucket 0 replaced by the v1 dense payload
+    off = 28 + 2 * 4
+    out = [blob[:off]]
+    v1_payload = dense_bucket.to_bytes()
+    for w in range(2):
+        (blen,) = _struct.unpack_from("<Q", blob, off)
+        off += 8
+        payload = blob[off : off + blen]
+        off += blen
+        if w == 0:
+            payload = v1_payload
+        out.append(_struct.pack("<Q", len(payload)))
+        out.append(payload)
+    back = HybridWindowedBank.from_bytes(b"".join(out))
+    np.testing.assert_array_equal(
+        np.asarray(back.buckets[0].to_dense().registers),
+        np.asarray(dense_bucket.registers),
+    )
