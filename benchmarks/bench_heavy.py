@@ -1,0 +1,125 @@
+"""Heavy-hitter ingest throughput: fused d-hash scatter vs per-row loop.
+
+``CountMinBank.update_many`` lands a keyed stream into a (B, d, w)
+counter bank with ONE fused multi-row hash-increment scatter (DESIGN.md
+§13).  The pre-subsystem shape of the same ingest is a python loop that
+updates each tenant row separately — B device dispatches of (1, d, w)
+scatters over the per-row slices of the stream.  This bench times both
+at B in {1, 64, 1024} with the stream size held constant, asserts the
+resulting counter banks are bit-identical (the documented CI gate), and
+writes ``BENCH_heavy.json`` so the heavy-hitter perf trajectory
+populates across PRs next to ``BENCH_bank_streaming.json``.  (The
+Pallas flavors run in interpret mode off-TPU, so their wall-clock here
+is meaningless; their bit-identity is gated by tests/test_countmin.py.)
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.sketch import CMConfig, ExecutionPlan, update_cm_counters
+
+JSON_PATH = "BENCH_heavy.json"
+ROW_COUNTS = (1, 64, 1024)
+TOTAL_ITEMS = 65_536
+
+
+def _stream(rows: int, per_row: int, seed: int):
+    """per_row items for each row, shuffled into one keyed stream."""
+    rng = np.random.default_rng(seed)
+    keys = np.repeat(np.arange(rows, dtype=np.int32), per_row)
+    items = rng.integers(0, 2**31, rows * per_row, dtype=np.int32)
+    order = rng.permutation(keys.size)
+    return keys[order], items[order]
+
+
+def run(full: bool = False, smoke: bool = False):
+    cfg = CMConfig(depth=4, width=256 if smoke else 1024, seed=0)
+    row_counts = (1, 16) if smoke else ROW_COUNTS
+    total = 2_048 if smoke else TOTAL_ITEMS
+
+    results = []
+    for rows in row_counts:
+        per_row = max(1, total // rows)
+        keys, items = _stream(rows, per_row, seed=rows)
+        zero = jnp.zeros((rows, cfg.depth, cfg.width), jnp.uint32)
+        jnp_plan = ExecutionPlan(backend="jnp")
+
+        def fused(counters, ks, xs):
+            return update_cm_counters(counters, ks, xs, cfg, jnp_plan)
+
+        # the pre-subsystem ingest: one (1, d, w) scatter dispatch per
+        # tenant row; every row chunk shares one shape so the jitted
+        # update compiles once and the loop cost is pure dispatch fan-out
+        row_items = [
+            jnp.asarray(items[keys == b]) for b in range(rows)
+        ]
+        row_zero_keys = jnp.zeros((per_row,), jnp.int32)
+
+        def loop(counters):
+            out = []
+            for b in range(rows):
+                out.append(
+                    update_cm_counters(
+                        counters[b : b + 1],
+                        row_zero_keys,
+                        row_items[b],
+                        cfg,
+                        jnp_plan,
+                    )
+                )
+            return jnp.concatenate(out, axis=0)
+
+        jkeys, jitems = jnp.asarray(keys), jnp.asarray(items)
+        fused_s = time_fn(fused, zero, jkeys, jitems)
+        loop_s = time_fn(loop, zero)
+
+        want = np.asarray(loop(zero))
+        got = np.asarray(fused(zero, jkeys, jitems))
+        if not np.array_equal(got, want):
+            # the documented gate: CI bench-smoke must fail on divergence
+            raise AssertionError(
+                f"fused cm ingest diverged from the per-row loop at B={rows}"
+            )
+        row = dict(
+            B=rows,
+            n=int(keys.size),
+            depth=cfg.depth,
+            width=cfg.width,
+            fused_us=fused_s * 1e6,
+            loop_us=loop_s * 1e6,
+            speedup=loop_s / fused_s,
+            bit_identical=True,
+        )
+        results.append(row)
+        emit(
+            "heavy_ingest",
+            fused_s * 1e6,
+            f"B={rows} n={keys.size} fused={fused_s * 1e6:.0f}us "
+            f"loop={loop_s * 1e6:.0f}us "
+            f"speedup={loop_s / fused_s:.1f}x identical=True",
+        )
+
+    out = {
+        "config": {
+            "depth": cfg.depth,
+            "width": cfg.width,
+            "total_items": total,
+        },
+        "smoke": smoke,
+        "banks": results,
+    }
+    # smoke writes a SIBLING file (uploaded by CI, gitignored locally) so it
+    # can never clobber the tracked full-run perf trajectory
+    path = JSON_PATH.replace(".json", ".smoke.json") if smoke else JSON_PATH
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run(full=True)

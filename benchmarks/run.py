@@ -18,6 +18,8 @@ job runs this, so benchmark scripts can no longer rot unexecuted).
           also writes BENCH_window.json
   sparse  hybrid sparse/dense tenant-row storage (memory + ingest latency
           vs the dense bank under Zipf traffic); writes BENCH_sparse.json
+  heavy   heavy-hitter ingest (fused d-hash scatter vs per-row loop);
+          writes BENCH_heavy.json
 
 JSON-writing benches write in every mode: full runs update the tracked
 ``BENCH_*.json`` perf trajectory, smoke runs write sibling
@@ -50,6 +52,7 @@ SUITE = {
     "bank": "bench_bank_streaming",
     "window": "bench_window",
     "sparse": "bench_sparse",
+    "heavy": "bench_heavy",
 }
 
 
@@ -59,8 +62,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: just prove every bench still runs")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig4a,fig4b,tab2,tab3,tab4,"
-                         "estimators,bank,window,sparse")
+                    help=f"comma list of benchmarks: {','.join(SUITE)}")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -68,7 +70,8 @@ def main() -> None:
     selected = args.only.split(",") if args.only else list(SUITE)
     unknown = [name for name in selected if name not in SUITE]
     if unknown:
-        ap.error(f"unknown benchmark(s) {unknown}; known: {sorted(SUITE)}")
+        ap.error(f"unknown benchmark(s) {unknown}; "
+                 f"available: {', '.join(sorted(SUITE))}")
 
     print("name,us_per_call,derived")
     failures = []

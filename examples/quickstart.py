@@ -11,6 +11,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.sketch import (
+    CMConfig,
+    CountMinBank,
     ExecutionPlan,
     HLLConfig,
     HyperLogLog,
@@ -85,6 +87,25 @@ def main():
     print(f"\nwindowed (epoch {win.epoch}): last-4-epochs distinct"
           f"~{rolling:,.0f}, current-epoch~{newest:,.0f} "
           f"(epochs 0-1 expired)")
+
+    # 7) heavy hitters: "WHICH items dominate", not just how many distinct.
+    #    A CountMinBank rides the same plan/backend spine — one fused
+    #    d-hash scatter-add per update_many, query() for point frequency
+    #    upper bounds, topk(k) for Topkapi label recovery (DESIGN.md §13)
+    hcfg = CMConfig(depth=4, width=1024)
+    hot = np.repeat(np.arange(8, dtype=np.int32), 5_000)      # 8 heavy ids
+    tail = rng.integers(1_000, 2**20, 60_000).astype(np.int32)
+    stream = np.concatenate([hot, tail])
+    rng.shuffle(stream)
+    hh = CountMinBank.empty(1, hcfg)                           # one tenant row
+    hh = hh.update_many(np.zeros(stream.shape, np.int32), stream)
+    vals, cnts = hh.topk(8)
+    print(f"\nheavy hitters (d={hcfg.depth}, w={hcfg.width}, "
+          f"{hh.nbytes // 1024} KiB bank): "
+          + ", ".join(f"{v}x{c}" for v, c in zip(vals[0], cnts[0])))
+    est = np.asarray(hh.query(jnp.arange(8)))[0]
+    print(f"point queries for ids 0-7 (true 5,000 each, CM upper bounds): "
+          f"{est.tolist()}")
 
 
 if __name__ == "__main__":

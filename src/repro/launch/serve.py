@@ -19,6 +19,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch
 from repro.sketch import (
+    CMConfig,
+    CountMinBank,
     DEFAULT_ESTIMATOR,
     ExecutionPlan,
     HLLConfig,
@@ -46,6 +48,13 @@ def main():
     ap.add_argument("--sparse-threshold", type=int, default=None,
                     help="distinct-bucket promotion threshold for the "
                          "hybrid per-request bank (default: m // 4)")
+    ap.add_argument("--topk", type=int, default=5,
+                    help="heavy-hitter tokens to report per request stream "
+                         "(0 disables the count-min telemetry)")
+    ap.add_argument("--cm-depth", type=int, default=4,
+                    help="count-min depth rows for --topk tracking")
+    ap.add_argument("--cm-width", type=int, default=1024,
+                    help="count-min counters per depth row for --topk")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
@@ -55,12 +64,19 @@ def main():
         arch = arch.reduced()
     params = transformer.init_params(jax.random.PRNGKey(args.seed), arch)
     # the plan's estimator rides to board.report(), which finalizes all
-    # streams with one batched estimate_many dispatch
+    # streams with one batched estimate_many dispatch; --topk adds the
+    # count-min twin so the same flush also tracks heavy-hitter tokens
+    cm_cfg = (
+        CMConfig(depth=args.cm_depth, width=args.cm_width, seed=args.seed)
+        if args.topk > 0
+        else None
+    )
     board = StreamSketch(
         HLLConfig(p=12, hash_bits=64),
         plan=ExecutionPlan(
             estimator=args.estimator, sparse_threshold=args.sparse_threshold
         ),
+        track_topk=cm_cfg,
     )
 
     B, S, T = args.requests, args.prompt_len, args.gen_len
@@ -97,12 +113,18 @@ def main():
         f"{args.arch}: prefill {B * S / prefill_s:,.0f} tok/s, "
         f"decode {B * T / decode_s:,.0f} tok/s"
     )
-    for name, row in board.report(density=True).items():
+    report = board.report(
+        density=True, topk=args.topk if args.topk > 0 else None
+    )
+    for name, row in report.items():
         print(
             f"  sketch[{name}] distinct~{row['estimate']:.0f} "
             f"seen={row['items_seen']} dup={row['duplication']:.2f} "
             f"occ={row['register_occupancy']:.1%}"
         )
+        if args.topk > 0:
+            hits = ", ".join(f"{v}x{c}" for v, c in row["topk"])
+            print(f"    top-{args.topk} tokens: {hits}")
     bd = board.density()
     print(
         f"  board density: {bd['sparse_eligible']}/{bd['streams']} streams "
@@ -139,6 +161,33 @@ def main():
         f"promoted, occupancy {bank_d['occupancy_mean']:.1%}, "
         f"{bank_d['reduction']:.1f}x smaller than dense"
     )
+
+    # per-request heavy hitters (DESIGN.md §13): one CountMinBank row per
+    # request stream, every (prompt + generated) token routed by request
+    # index with ONE fused d-hash scatter-add, then a single batched
+    # Topkapi recovery answers "top-k tokens per request stream" — the
+    # frequency twin of the distinct-count bank above.
+    if args.topk > 0:
+        hh = CountMinBank.empty(B, cm_cfg)
+        hh = hh.update_many(
+            jnp.concatenate([req_keys.reshape(-1), gen_keys.reshape(-1)]),
+            jnp.concatenate([prompts.reshape(-1), out.reshape(-1)]),
+            board.plan,
+        )
+        vals, cnts = hh.topk(args.topk)
+        shown = min(B, 4)
+        print(
+            f"  heavy[{B} requests] top-{args.topk} tokens/request "
+            f"(d={args.cm_depth}, w={args.cm_width}, "
+            f"{hh.nbytes / 1024:.0f} KiB bank):"
+        )
+        for r in range(shown):
+            hits = ", ".join(
+                f"{v}x{c}" for v, c in zip(vals[r], cnts[r]) if c > 0
+            )
+            print(f"    request {r}: {hits}")
+        if B > shown:
+            print(f"    ... ({B - shown} more requests)")
 
     # sliding-window telemetry (DESIGN.md §11): a WindowedBank ring over
     # decode time — the prompt lands in epoch 0, each decode slice opens a

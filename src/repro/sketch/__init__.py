@@ -29,6 +29,14 @@ expire buckets, and ``estimate_window(last_k)`` answers "distinct per row
 over the last k epochs" with ONE masked ring fold (per-backend via
 ``register_window_backend``) + one batched ``estimate_many``.
 
+Heavy hitters (DESIGN.md §13): ``CountMinBank`` stacks B count-min
+sketches with Topkapi top-k labels into one (B, d, w) pytree —
+``update_many`` ingests a keyed stream with one fused d-hash scatter-add
+(per backend via ``register_cm_backend``), ``query`` answers point
+frequencies with a fused gather-min, ``topk(k)`` recovers per-row heavy
+hitters, and ``WindowedCountMinBank`` rides the same epoch ring with a
+fused window SUM-fold (``register_cm_window_backend``).
+
 Estimation (paper phase 4) dispatches through a pluggable registry over the
 register-value histogram (repro/sketch/estimators.py, DESIGN.md §8):
 ``estimator="original" | "ertl_improved" | "ertl_mle"`` on every estimate
@@ -56,19 +64,26 @@ from repro.sketch.hll import (  # noqa: F401
     update,
 )
 from repro.sketch.plan import (  # noqa: F401
+    CMBackend,
     DEFAULT_PIPELINES,
     DEFAULT_PLAN,
     ExecutionPlan,
     available_backends,
     available_bank_backends,
+    available_cm_backends,
+    available_cm_window_backends,
     available_window_backends,
     example_plans,
     get_backend,
     get_bank_backend,
+    get_cm_backend,
+    get_cm_window_backend,
     get_window_backend,
     reference_plan,
     register_backend,
     register_bank_backend,
+    register_cm_backend,
+    register_cm_window_backend,
     register_window_backend,
 )
 
@@ -99,6 +114,15 @@ from repro.sketch.sparse import HybridBank, default_threshold  # noqa: F401
 from repro.sketch.window import (  # noqa: F401
     HybridWindowedBank,
     WindowedBank,
+)
+from repro.sketch.countmin import (  # noqa: F401
+    CMConfig,
+    CountMinBank,
+    WindowedCountMinBank,
+    cm_hash_index,
+    cm_update_many,
+    query_cm_counters,
+    update_cm_counters,
 )
 from repro.sketch.setops import (  # noqa: F401
     difference_estimate,

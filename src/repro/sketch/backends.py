@@ -33,6 +33,8 @@ from repro.sketch.plan import (
     ExecutionPlan,
     register_backend,
     register_bank_backend,
+    register_cm_backend,
+    register_cm_window_backend,
     register_window_backend,
 )
 
@@ -469,3 +471,264 @@ def _pallas_pipelined_window_backend(
     _window = _window_kernel_module()
     row_block = min(row_block, max(1, _window.MAX_BLOCK_CELLS // cfg.m))
     return window_fold(ring, mask, row_block=row_block, interpret=plan.interpret)
+
+
+# ----------------------------------------------------------------------------
+# CountMinBank paths (keyed scatter-add + gather-min; DESIGN.md §13)
+# ----------------------------------------------------------------------------
+
+
+def _cm_kernel_module():
+    from repro.kernels import cm_scatter as _cms
+
+    assert _cms.LANES == LANES
+    return _cms
+
+
+def _cm_module():
+    # lazy for the same reason as the kernel modules: countmin pulls in the
+    # bank/window carriers, which must not load mid-way through this module
+    from repro.sketch import countmin as _cm
+
+    return _cm
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def cm_update_jnp(
+    counters: jnp.ndarray,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg,
+) -> jnp.ndarray:
+    """Reference cm ingest: ONE segment-sum over (key, depth, column) cells.
+
+    Item i with key b lands d increments, at flattened cells
+    ``b*d*w + r*w + idx_r(i)`` — the bank_update_jnp offset trick with the
+    depth lane folded into the cell id, so the whole (B, d, w) bank
+    ingests a keyed stream with a single fused scatter-add.  Out-of-range
+    keys route to a discarded trailing segment (the §9 drop rule; never
+    clamped into a neighboring row).  Counters wrap mod 2^32 by uint32
+    arithmetic.  Like the HLL bank, the flattened cell space must fit
+    int32 segment ids: B*d*w >= 2^31 is rejected loudly.
+    """
+    _cm = _cm_module()
+    rows, depth, width = counters.shape
+    cells = depth * width
+    if rows * cells >= 1 << 31:
+        raise ValueError(
+            f"cm cell space B*d*w = {rows}*{depth}*{width} overflows int32 "
+            f"segment ids; split the fleet across multiple banks or shards"
+        )
+    idx = _cm.cm_hash_index(items, cfg)  # (d, n)
+    valid = (keys >= 0) & (keys < rows)
+    lane = jnp.arange(depth, dtype=jnp.int32)[:, None] * width
+    seg = jnp.where(
+        valid[None, :], keys[None, :] * cells + lane + idx, rows * cells
+    ).reshape(-1)
+    hits = jnp.broadcast_to(
+        valid.astype(counters.dtype)[None, :], idx.shape
+    ).reshape(-1)
+    delta = jax.ops.segment_sum(hits, seg, num_segments=rows * cells + 1)
+    return counters + delta[: rows * cells].reshape(rows, depth, width)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def cm_query_jnp(
+    counters: jnp.ndarray, items: jnp.ndarray, cfg
+) -> jnp.ndarray:
+    """Reference cm point query: gather d cells per (row, item), min-reduce.
+
+    Returns (B, n) estimated counts — the classical count-min upper
+    bound.  One fused gather + reduce; there is no Pallas flavor because
+    a gather-min has no scatter hazard to fuse away, so every backend
+    pair shares this query.
+    """
+    _cm = _cm_module()
+    rows, depth, width = counters.shape
+    idx = _cm.cm_hash_index(items, cfg)  # (d, n)
+    r = jnp.broadcast_to(jnp.arange(depth, dtype=jnp.int32)[:, None], idx.shape)
+    gathered = counters[:, r, idx]  # (B, d, n)
+    return jnp.min(gathered, axis=1)
+
+
+def cm_update(
+    counters: jnp.ndarray,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg,
+    *,
+    row_block: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Pallas cm ingest: d-expanded stream through the cm_scatter kernel.
+
+    The d column indices per item come from the one-murmur double-hash
+    (shared with the jnp path, so routing is bit-identical); the stream is
+    then expanded d-fold into (key, cell, hit) triples and summed into
+    ``row_block`` whole (d, w) counter slabs held VMEM-resident per grid
+    step, exactly as ``bank_update`` tiles the HLL bank.  Padding and
+    foreign keys are masked to hit 0 (the additive identity), never
+    clamped into a neighbor.  Counters are bitcast uint32<->int32 around
+    the kernel: int32 two's-complement adds are bit-identical to uint32
+    mod-2^32 adds.  Small-slab banks only (d*w under the VMEM cell cap).
+    """
+    _cms = _cm_kernel_module()
+    _cm = _cm_module()
+    interpret = _default_interpret() if interpret is None else interpret
+    rows, depth, width = counters.shape
+    cells = depth * width
+    if cells > _cms.MAX_BLOCK_CELLS:
+        raise ValueError(
+            f"pallas cm ingest supports d*w <= {_cms.MAX_BLOCK_CELLS}; use "
+            f"the jnp scatter path for d*w={cells}"
+        )
+    flat_keys = keys.reshape(-1).astype(jnp.int32)
+    flat_items = items.reshape(-1)
+    valid = (flat_keys >= 0) & (flat_keys < rows)
+    idx = _cm.cm_hash_index(flat_items, cfg)  # (d, n)
+    keys_d = jnp.broadcast_to(flat_keys[None, :], idx.shape)
+    col_d = jnp.arange(depth, dtype=jnp.int32)[:, None] * width + idx
+    val_d = jnp.broadcast_to(valid[None, :], idx.shape)
+    # same drop rule as the jnp path: foreign keys mask to hit 0 aimed at
+    # cell 0 of row 0 — a no-op under the cell sum
+    keys_d = jnp.where(val_d, keys_d, 0).reshape(-1)
+    col_d = jnp.where(val_d, col_d, 0).reshape(-1)
+    val_d = val_d.astype(jnp.int32).reshape(-1)
+    tile_items = _cms.DEFAULT_BLOCK_ROWS * LANES
+    keys_t, _ = _pad_to_tiles(keys_d, tile_items)
+    col_t, _ = _pad_to_tiles(col_d, tile_items)
+    val_t, _ = _pad_to_tiles(val_d, tile_items)
+
+    if row_block is None:
+        row_block = max(1, _cms.MAX_BLOCK_CELLS // cells)
+    row_block = min(row_block, rows)
+    padded_rows = -(-rows // row_block) * row_block
+    cnt32 = jax.lax.bitcast_convert_type(counters, jnp.int32).reshape(rows, cells)
+    if padded_rows != rows:
+        # phantom rows receive nothing (keys < rows) and are sliced off
+        cnt32 = jnp.pad(cnt32, ((0, padded_rows - rows), (0, 0)))
+    out = _cms.cm_scatter_add(
+        cnt32,
+        keys_t,
+        col_t,
+        val_t,
+        cells_per_row=cells,
+        row_block=row_block,
+        interpret=interpret,
+    )
+    out = out[:rows].reshape(rows, depth, width)
+    return jax.lax.bitcast_convert_type(out, counters.dtype)
+
+
+@jax.jit
+def cm_window_fold_jnp(ring: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Reference cm ring fold: ONE masked SUM-reduce over the W axis.
+
+    Expired/unselected buckets fold as all-zero counters (0 is the
+    identity of the cell sum), so any suffix window is bit-identical to
+    summing its live buckets one by one.  uint32 arithmetic wraps.
+    """
+    masked = jnp.where(mask[:, None, None, None], ring, jnp.zeros_like(ring))
+    return jnp.sum(masked, axis=0, dtype=ring.dtype)
+
+
+def cm_window_fold(
+    ring: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    row_block: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Pallas cm ring fold: the cm_window_fold_sum kernel over row blocks.
+
+    The fourth sibling of ``window_fold`` — same (W, B, ·) sweep with a
+    VMEM scratch accumulator, + replacing max.  Counters are bitcast
+    uint32<->int32 around the kernel (two's-complement adds are exact mod
+    2^32).  Small-slab banks only (d*w under the VMEM cell cap).
+    """
+    _cms = _cm_kernel_module()
+    interpret = _default_interpret() if interpret is None else interpret
+    window, rows, depth, width = ring.shape
+    cells = depth * width
+    if cells > _cms.MAX_BLOCK_CELLS:
+        raise ValueError(
+            f"pallas cm window fold supports d*w <= {_cms.MAX_BLOCK_CELLS}; "
+            f"use the jnp fold for d*w={cells}"
+        )
+    if row_block is None:
+        row_block = max(1, _cms.MAX_BLOCK_CELLS // cells)
+    row_block = min(row_block, rows)
+    padded_rows = -(-rows // row_block) * row_block
+    ring32 = jax.lax.bitcast_convert_type(ring, jnp.int32).reshape(
+        window, rows, cells
+    )
+    if padded_rows != rows:
+        # phantom rows fold all-zero counters and are sliced off
+        ring32 = jnp.pad(ring32, ((0, 0), (0, padded_rows - rows), (0, 0)))
+    out = _cms.cm_window_fold_sum(
+        ring32,
+        mask.astype(jnp.int32),
+        cells_per_row=cells,
+        row_block=row_block,
+        interpret=interpret,
+    )
+    out = out[:rows].reshape(rows, depth, width)
+    return jax.lax.bitcast_convert_type(out, ring.dtype)
+
+
+def _jnp_cm_ingest(counters, keys, items, cfg, plan: ExecutionPlan):
+    # the scatter-add is already one fused op; `pipelines` has no fold to
+    # parallelize, exactly as in bank_update_jnp
+    return cm_update_jnp(counters, keys, items, cfg)
+
+
+def _jnp_cm_query(counters, items, cfg, plan: ExecutionPlan):
+    return cm_query_jnp(counters, items, cfg)
+
+
+def _pallas_cm_ingest(counters, keys, items, cfg, plan: ExecutionPlan):
+    # one datapath, widest row block under the VMEM cap
+    return cm_update(counters, keys, items, cfg, interpret=plan.interpret)
+
+
+def _pallas_pipelined_cm_ingest(counters, keys, items, cfg, plan: ExecutionPlan):
+    # tile the bank over k pipelines (paper Fig. 3 applied to rows): each
+    # grid block owns ceil(B/k) sketches, still under the VMEM cell cap
+    rows, depth, width = counters.shape
+    row_block = max(1, -(-rows // plan.pipelines))
+    _cms = _cm_kernel_module()
+    row_block = min(row_block, max(1, _cms.MAX_BLOCK_CELLS // (depth * width)))
+    return cm_update(
+        counters, keys, items, cfg, row_block=row_block, interpret=plan.interpret
+    )
+
+
+# the query side is the same fused gather-min everywhere: a gather has no
+# scatter hazard for a Pallas kernel to fuse away
+register_cm_backend("jnp", _jnp_cm_ingest, _jnp_cm_query)
+register_cm_backend("pallas", _pallas_cm_ingest, _jnp_cm_query)
+register_cm_backend("pallas_pipelined", _pallas_pipelined_cm_ingest, _jnp_cm_query)
+
+
+@register_cm_window_backend("jnp")
+def _jnp_cm_window_backend(ring, mask, cfg, plan: ExecutionPlan):
+    return cm_window_fold_jnp(ring, mask)
+
+
+@register_cm_window_backend("pallas")
+def _pallas_cm_window_backend(ring, mask, cfg, plan: ExecutionPlan):
+    # one datapath, widest row block under the VMEM cap
+    return cm_window_fold(ring, mask, interpret=plan.interpret)
+
+
+@register_cm_window_backend("pallas_pipelined")
+def _pallas_pipelined_cm_window_backend(ring, mask, cfg, plan: ExecutionPlan):
+    # tile the fold over k pipelines: each grid block owns ceil(B/k)
+    # sketches, still under the VMEM cell cap
+    rows, depth, width = ring.shape[1], ring.shape[2], ring.shape[3]
+    row_block = max(1, -(-rows // plan.pipelines))
+    _cms = _cm_kernel_module()
+    row_block = min(row_block, max(1, _cms.MAX_BLOCK_CELLS // (depth * width)))
+    return cm_window_fold(
+        ring, mask, row_block=row_block, interpret=plan.interpret
+    )

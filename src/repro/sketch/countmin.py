@@ -1,0 +1,925 @@
+"""CountMinBank: heavy-hitter (frequency) sketches on the registry spine.
+
+The paper's thesis — sketch ingest is one fused scatter over a register
+file — holds for frequency sketches just as it does for HyperLogLog
+(arXiv:2504.16896 runs count-min banks through the same FPGA datapath).
+This module is the second tenant of the spine PRs 1-5 built: a
+``CountMinBank`` carries B per-tenant count-min sketches as one frozen
+pytree — a (B, d, w) uint32 counter bank plus a Topkapi-style (B, d, w)
+label table — and every verb dispatches through the same ``ExecutionPlan``
+registries as the HLL family (DESIGN.md §13).
+
+Count-min core (Cormode & Muthukrishnan): each item increments one cell
+per depth row, at the column picked by an independent hash; a point query
+reads the d cells back and takes the min (an upper bound on the true
+count, off by at most the collision mass).  The d hashes derive from ONE
+murmur3_64 evaluation by Kirsch-Mitzenmacher double hashing —
+``idx_r = (h.lo + r * h.hi) mod w`` in uint32 — so ingest hashes exactly
+as cheaply as the HLL path.
+
+Top-k recovery follows Topkapi (NeurIPS 2018): each cell carries a
+(label, label_count) majority-vote pair next to its counter, and the
+heavy hitters are recovered by querying the surviving labels.  The
+classical per-item vote is order-dependent, which would break the
+bit-identity contract under fused/tiled ingest, so ``update_many``
+applies a BATCH-CANONICAL vote instead: per update call and per cell,
+the batch winner is the max-multiplicity item (ties to the larger
+value), its surplus ``s = 2*mc - total`` is the net vote of any serial
+order, and the stored pair absorbs (winner, s) with the deterministic
+rules documented on ``_label_update``.  The vote is one shared jnp
+routine across ALL backends — backends differ only on the counter
+scatter — so label state is bit-identical by construction.
+
+Key routing, drop rules, exact per-row observation counters, and the
+zero-length/zero-row short-circuits mirror ``SketchBank`` (DESIGN.md §9).
+``WindowedCountMinBank`` rides the same epoch-ring contract as
+``WindowedBank`` (DESIGN.md §11) with a fused window SUM-fold.  The wire
+formats are RCMB/RCMW, strict-rejection siblings of RHLB/RHLW.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sketch import murmur3, u64 as u64lib
+from repro.sketch.bank import _counter_add_rows
+from repro.sketch.dispatch import cm_mesh_sum
+from repro.sketch.plan import (
+    DEFAULT_PLAN,
+    ExecutionPlan,
+    get_cm_backend,
+    get_cm_window_backend,
+)
+from repro.sketch.window import _initial_epochs, _validate_epoch_ring
+
+COUNTER_DTYPE = jnp.uint32
+LABEL_DTYPE = jnp.int32
+
+_CM_HEADER = struct.Struct("<4sBBHQII")  # magic, ver, depth, flags, seed, w, B
+_CM_MAGIC = b"RCMB"
+_CM_VERSION = 1
+_ROW_COUNT = struct.Struct("<Q")
+
+_CMW_HEADER = struct.Struct("<4sBBHQIIII")
+# magic, ver, depth, flags, seed, width, W, B, cursor
+_CMW_MAGIC = b"RCMW"
+_CMW_VERSION = 1
+_EPOCH = np.dtype("<i4")
+
+
+@dataclasses.dataclass(frozen=True)
+class CMConfig:
+    """Static count-min parameters: d depth rows x w counters per row.
+
+    The classical guarantees: a point query overestimates by at most
+    ``2n/w`` with probability ``1 - 2^-d`` (n = stream length), so width
+    buys accuracy and depth buys confidence.  ``seed`` feeds the single
+    murmur3_64 evaluation both derived hash families share.
+    """
+
+    depth: int = 4
+    width: int = 1024
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 1 <= self.depth <= 16:
+            raise ValueError(f"depth must be in [1,16], got {self.depth}")
+        if not 1 <= self.width <= 1 << 24:
+            raise ValueError(f"width must be in [1, 2^24], got {self.width}")
+        if not 0 <= self.seed < 1 << 64:
+            # keeps the serialized header (uint64 seed) total, like HLLConfig
+            raise ValueError(f"seed must be a uint64, got {self.seed}")
+
+    @property
+    def cells(self) -> int:
+        return self.depth * self.width
+
+    @property
+    def memory_footprint_bits(self) -> int:
+        # counter + label + label_count, all 32-bit, per cell
+        return self.cells * 3 * 32
+
+
+def cm_hash_index(items: jnp.ndarray, cfg: CMConfig) -> jnp.ndarray:
+    """The d column indices of each item: (d, n) int32 in [0, w).
+
+    Kirsch-Mitzenmacher double hashing over the two uint32 limbs of one
+    murmur3_64 evaluation: ``idx_r = (h.lo + r * h.hi) mod w``, computed
+    entirely in uint32 so the very same arithmetic lowers on TPU.
+    """
+    h = murmur3.murmur3_64(items.reshape(-1), cfg.seed)
+    r = jnp.arange(cfg.depth, dtype=jnp.uint32)[:, None]
+    mixed = h.lo[None, :] + r * h.hi[None, :]
+    return (mixed % jnp.uint32(cfg.width)).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# functional dispatch (mirrors bank.update_bank_registers)
+# ----------------------------------------------------------------------------
+
+
+def update_cm_counters(
+    counters: jnp.ndarray,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: CMConfig,
+    plan: Optional[ExecutionPlan] = None,
+) -> jnp.ndarray:
+    """Keyed scatter-add of ``items`` into a raw (B, d, w) counter bank.
+
+    The cm-capable backend registered under ``plan.backend`` runs the
+    fused ingest; placement="mesh" shards the (keys, items) pair through
+    :func:`repro.sketch.dispatch.cm_mesh_sum` (per-device zero-based
+    deltas + one lax.psum; drop-key padding, because edge-padding would
+    double-count under a sum).
+    """
+    plan = (DEFAULT_PLAN if plan is None else plan).validate()
+    backend = get_cm_backend(plan.backend)
+    flat_keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
+    flat_items = jnp.asarray(items).reshape(-1)
+    if flat_keys.shape[0] != flat_items.shape[0]:
+        raise ValueError(
+            f"keys ({flat_keys.shape[0]}) and items ({flat_items.shape[0]}) "
+            f"must flatten to the same length"
+        )
+    if flat_items.shape[0] == 0 or counters.shape[0] == 0:
+        # nothing to land (or nowhere to land it): no backend dispatch
+        return counters
+    if plan.placement == "local":
+        return backend.ingest(counters, flat_keys, flat_items, cfg, plan)
+    return cm_mesh_sum(
+        plan,
+        counters,
+        (flat_keys, flat_items),
+        lambda cnt, ks, xs: backend.ingest(cnt, ks, xs, cfg, plan),
+    )
+
+
+def query_cm_counters(
+    counters: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: CMConfig,
+    plan: Optional[ExecutionPlan] = None,
+) -> jnp.ndarray:
+    """(B, n) point-query estimates of ``items`` against every bank row.
+
+    Queries read replicated counter state, so mesh plans query locally —
+    placement only moves ingest streams.  Zero-length probes and zero-row
+    banks short-circuit without dispatching any backend.
+    """
+    plan = (DEFAULT_PLAN if plan is None else plan).validate()
+    backend = get_cm_backend(plan.backend)
+    flat = jnp.asarray(items).reshape(-1)
+    rows = counters.shape[0]
+    if rows == 0:
+        return jnp.zeros((0, flat.shape[0]), counters.dtype)
+    if flat.shape[0] == 0:
+        return jnp.zeros((rows, 0), counters.dtype)
+    return backend.query(counters, flat, cfg, plan)
+
+
+# ----------------------------------------------------------------------------
+# Topkapi label voting (shared jnp routine — every backend bit-identical)
+# ----------------------------------------------------------------------------
+
+
+def _merge_label_tables(
+    l1: jnp.ndarray, c1: jnp.ndarray, l2: jnp.ndarray, c2: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Topkapi cell merge: same labels add, differing labels fight.
+
+    Same label -> counts add.  Different labels -> the bigger count wins
+    and keeps the difference; an exact tie keeps the larger label value
+    with count 0 (deterministic and symmetric, so ``a | b == b | a``).
+    """
+    same = l1 == l2
+    lab_diff = jnp.where(c1 > c2, l1, jnp.where(c2 > c1, l2, jnp.maximum(l1, l2)))
+    label = jnp.where(same, l1, lab_diff)
+    count = jnp.where(same, c1 + c2, jnp.abs(c1 - c2))
+    return label, count
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _label_update(
+    labels: jnp.ndarray,
+    label_counts: jnp.ndarray,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    cfg: CMConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One batch-canonical Topkapi vote over every touched cell.
+
+    Per cell, over THIS batch: the winner ``x*`` is the item with the
+    highest multiplicity ``mc`` among the batch's hits (ties to the
+    larger item value) and its surplus is ``s = 2*mc - total`` — the net
+    count a serial majority vote would leave if every non-winner vote
+    cancelled a winner vote.  The stored (l, lc) pair then absorbs
+    (x*, s) deterministically:
+
+      lc == 0      -> the cell is vacant: (x*, max(s, 0))
+      x* == l      -> votes reinforce:    (l, max(lc + s, 0))
+      otherwise    -> t = s - lc decides: t > 0 -> (x*, t)
+                                          t < 0 -> (l, -t)
+                                          t == 0 -> (max(l, x*), 0)
+
+    Cells with no valid hits this batch are untouched.  The rule is a
+    pure function of the batch MULTISET, so every backend and every tile
+    order yields bit-identical label state.
+    """
+    rows, depth, width = labels.shape
+    cells = depth * width
+    total_cells = rows * cells
+    idx = cm_hash_index(items, cfg)  # (d, n)
+    valid = (keys >= 0) & (keys < rows)
+    lane = jnp.arange(depth, dtype=jnp.int32)[:, None] * width
+    cell = jnp.where(
+        valid[None, :], keys[None, :] * cells + lane + idx, total_cells
+    ).reshape(-1)
+    vals = jnp.broadcast_to(
+        items.astype(LABEL_DTYPE)[None, :], idx.shape
+    ).reshape(-1)
+
+    # per-(cell, value) multiplicity via one lexsort + run-length count
+    order = jnp.lexsort((vals, cell))
+    sc = cell[order]
+    sv = vals[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (sc[1:] != sc[:-1]) | (sv[1:] != sv[:-1])]
+    )
+    run_id = jnp.cumsum(first.astype(jnp.int32)) - 1
+    run_len = jax.ops.segment_sum(
+        jnp.ones_like(run_id), run_id, num_segments=sc.shape[0]
+    )
+    pc = run_len[run_id]  # multiplicity of each element's (cell, value) pair
+
+    live = sc < total_cells
+    neg = jnp.iinfo(jnp.int32).min
+    total_f = jax.ops.segment_sum(
+        live.astype(jnp.int32), sc, num_segments=total_cells + 1
+    )
+    mc_f = jax.ops.segment_max(
+        jnp.where(live, pc, neg), sc, num_segments=total_cells + 1
+    )
+    is_best = live & (pc == mc_f[sc])
+    winner_f = jax.ops.segment_max(
+        jnp.where(is_best, sv, neg), sc, num_segments=total_cells + 1
+    )
+    total = total_f[:total_cells]
+    mc = jnp.maximum(mc_f[:total_cells], 0)
+    winner = winner_f[:total_cells]
+
+    s = 2 * mc - total
+    l = labels.reshape(total_cells)
+    lc = label_counts.reshape(total_cells)
+    vacant = lc == 0
+    same = winner == l
+    t = s - lc
+    new_l = jnp.where(
+        vacant,
+        winner,
+        jnp.where(
+            same,
+            l,
+            jnp.where(t > 0, winner, jnp.where(t < 0, l, jnp.maximum(l, winner))),
+        ),
+    )
+    new_c = jnp.where(
+        vacant,
+        jnp.maximum(s, 0),
+        jnp.where(same, jnp.maximum(lc + s, 0), jnp.abs(t)),
+    )
+    touched = total > 0
+    out_l = jnp.where(touched, new_l, l).reshape(rows, depth, width)
+    out_c = jnp.where(touched, new_c, lc).reshape(rows, depth, width)
+    return out_l, out_c
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _query_rowwise(
+    counters: jnp.ndarray, cand: jnp.ndarray, cfg: CMConfig
+) -> jnp.ndarray:
+    """Estimate (B, C) per-row candidates against their OWN rows only."""
+    rows, depth, width = counters.shape
+    n_cand = cand.shape[1]
+    idx = cm_hash_index(cand.reshape(-1), cfg).reshape(depth, rows, n_cand)
+    b = jnp.arange(rows, dtype=jnp.int32)[:, None, None]
+    r = jnp.arange(depth, dtype=jnp.int32)[None, :, None]
+    gathered = counters[b, r, jnp.transpose(idx, (1, 0, 2))]  # (B, d, C)
+    return jnp.min(gathered, axis=1)
+
+
+# ----------------------------------------------------------------------------
+# the carrier
+# ----------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CountMinBank:
+    """B same-config count-min sketches (+ Topkapi labels) as one pytree."""
+
+    counters: jnp.ndarray  # (B, d, w) uint32
+    labels: jnp.ndarray  # (B, d, w) int32 Topkapi majority labels
+    label_counts: jnp.ndarray  # (B, d, w) int32 majority-vote counts
+    n_items: jnp.ndarray  # (B, 2) uint32 limb pairs, exact per-row counts
+    cfg: CMConfig = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def empty(cls, rows: int, cfg: Optional[CMConfig] = None) -> "CountMinBank":
+        cfg = cfg or CMConfig()
+        if rows < 1:
+            raise ValueError(f"a bank needs at least one row, got {rows}")
+        shape = (rows, cfg.depth, cfg.width)
+        return cls(
+            jnp.zeros(shape, COUNTER_DTYPE),
+            jnp.zeros(shape, LABEL_DTYPE),
+            jnp.zeros(shape, LABEL_DTYPE),
+            jnp.zeros((rows, 2), jnp.uint32),
+            cfg,
+        )
+
+    def with_rows(self, rows: int) -> "CountMinBank":
+        """Grow the bank axis to ``rows`` (new rows start empty)."""
+        have = len(self)
+        if rows < have:
+            raise ValueError(f"cannot shrink a {have}-row bank to {rows}")
+        if rows == have:
+            return self
+        grow = ((0, rows - have),) + ((0, 0),) * 2
+        return dataclasses.replace(
+            self,
+            counters=jnp.pad(self.counters, grow),
+            labels=jnp.pad(self.labels, grow),
+            label_counts=jnp.pad(self.label_counts, grow),
+            n_items=jnp.pad(self.n_items, ((0, rows - have), (0, 0))),
+        )
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return int(self.counters.shape[0])
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(B,) exact per-row observation counts as uint64."""
+        limbs = np.asarray(self.n_items)
+        hi = limbs[:, 0].astype(np.uint64)
+        lo = limbs[:, 1].astype(np.uint64)
+        return (hi << np.uint64(32)) | lo
+
+    @property
+    def nbytes(self) -> int:
+        return int(
+            self.counters.nbytes
+            + self.labels.nbytes
+            + self.label_counts.nbytes
+            + self.n_items.nbytes
+        )
+
+    # ------------------------------------------------------------------
+    # aggregation (paper phase 3, frequency flavor)
+    # ------------------------------------------------------------------
+
+    def update_many(
+        self,
+        keys: jnp.ndarray,
+        items: jnp.ndarray,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> "CountMinBank":
+        """Route each item to row ``keys[i]``: one fused d-hash scatter-add.
+
+        Counters go through the cm backend registered under
+        ``plan.backend`` (one segment-sum / Pallas scatter for the whole
+        batch); the Topkapi label vote is the shared jnp routine, always
+        on the full stream, so label state cannot drift across backends
+        or placements.  A zero-length stream or a zero-row bank returns
+        ``self`` without dispatching anything.
+        """
+        flat_keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
+        flat_items = jnp.asarray(items).reshape(-1)
+        if flat_keys.shape[0] != flat_items.shape[0]:
+            raise ValueError(
+                f"keys ({flat_keys.shape[0]}) and items ({flat_items.shape[0]}) "
+                f"must flatten to the same length"
+            )
+        if flat_items.shape[0] == 0 or len(self) == 0:
+            return self
+        counters = update_cm_counters(
+            self.counters, flat_keys, flat_items, self.cfg, plan
+        )
+        labels, label_counts = _label_update(
+            self.labels, self.label_counts, flat_keys, flat_items, self.cfg
+        )
+        rows = len(self)
+        routed = jnp.where((flat_keys >= 0) & (flat_keys < rows), flat_keys, rows)
+        landed = jnp.bincount(routed, length=rows + 1)[:rows]
+        return dataclasses.replace(
+            self,
+            counters=counters,
+            labels=labels,
+            label_counts=label_counts,
+            n_items=_counter_add_rows(self.n_items, landed),
+        )
+
+    def merge(self, other: "CountMinBank") -> "CountMinBank":
+        """Cell-wise counter sum + Topkapi label merge; counters are exact
+        mod 2^32 and the exact observation counters add to 2^64."""
+        if self.cfg != other.cfg:
+            raise ValueError(
+                f"cannot merge banks with different configs: "
+                f"{self.cfg} vs {other.cfg}"
+            )
+        if len(self) != len(other):
+            raise ValueError(
+                f"cannot merge banks of different sizes: "
+                f"{len(self)} vs {len(other)} rows"
+            )
+        labels, label_counts = _merge_label_tables(
+            self.labels, self.label_counts, other.labels, other.label_counts
+        )
+        limbs = u64lib.add(
+            u64lib.U64(self.n_items[:, 0], self.n_items[:, 1]),
+            u64lib.U64(other.n_items[:, 0], other.n_items[:, 1]),
+        )
+        return dataclasses.replace(
+            self,
+            counters=self.counters + other.counters,
+            labels=labels,
+            label_counts=label_counts,
+            n_items=jnp.stack([limbs.hi, limbs.lo], axis=-1),
+        )
+
+    __or__ = merge
+
+    # ------------------------------------------------------------------
+    # queries (paper phase 4, frequency flavor)
+    # ------------------------------------------------------------------
+
+    def query(
+        self,
+        items: jnp.ndarray,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> jnp.ndarray:
+        """(B, n) estimated counts of each probe item in every row."""
+        return query_cm_counters(self.counters, items, self.cfg, plan)
+
+    def topk(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-row heavy hitters from the Topkapi label slots.
+
+        Candidates are the d*w surviving labels of each row — any item
+        that dominated at least one of its cells is present, which is
+        what makes recall high for genuinely heavy items — deduplicated
+        and ranked by their count-min estimate (one batched device
+        gather; the top-k selection itself is host-side finalization,
+        like the exact estimate paths).
+
+        Returns ``(values, counts)`` as (B, k) int32 / uint64 arrays,
+        ranked by descending estimate (ties to the larger value); rows
+        with fewer than k distinct labels pad with value -1 / count 0.
+        """
+        if k < 1:
+            raise ValueError(f"topk needs k >= 1, got {k}")
+        rows = len(self)
+        values = np.full((rows, k), -1, np.int32)
+        counts = np.zeros((rows, k), np.uint64)
+        if rows == 0:
+            return values, counts
+        cand = self.labels.reshape(rows, -1)
+        ests = np.asarray(_query_rowwise(self.counters, cand, self.cfg))
+        cand = np.asarray(cand)
+        for b in range(rows):
+            uniq, where_first = np.unique(cand[b], return_index=True)
+            est = ests[b][where_first].astype(np.uint64)
+            top = np.lexsort((uniq, est))[::-1][:k]
+            values[b, : top.size] = uniq[top]
+            counts[b, : top.size] = est[top]
+        return values, counts
+
+    # ------------------------------------------------------------------
+    # serialization (RCMB: strict sibling of RHLB)
+    # ------------------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """24-byte header + B uint64 counts + counter/label/vote tables."""
+        header = _CM_HEADER.pack(
+            _CM_MAGIC,
+            _CM_VERSION,
+            self.cfg.depth,
+            0,
+            self.cfg.seed,
+            self.cfg.width,
+            len(self),
+        )
+        counts = self.counts.astype("<u8").tobytes()
+        return (
+            header
+            + counts
+            + np.asarray(self.counters, np.uint32).astype("<u4").tobytes()
+            + np.asarray(self.labels, np.int32).astype("<i4").tobytes()
+            + np.asarray(self.label_counts, np.int32).astype("<i4").tobytes()
+        )
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "CountMinBank":
+        if len(data) < _CM_HEADER.size:
+            raise ValueError(f"truncated count-min bank: {len(data)} bytes")
+        magic, version, depth, _flags, seed, width, rows = _CM_HEADER.unpack(
+            data[: _CM_HEADER.size]
+        )
+        if magic != _CM_MAGIC:
+            raise ValueError(
+                f"bad magic {magic!r}; not a serialized count-min bank"
+            )
+        if version != _CM_VERSION:
+            raise ValueError(f"unsupported count-min bank version {version}")
+        if rows < 1:
+            raise ValueError(f"count-min header claims {rows} rows")
+        cfg = CMConfig(depth=depth, width=width, seed=seed)
+        cells = rows * cfg.cells
+        counts_end = _CM_HEADER.size + rows * _ROW_COUNT.size
+        expected = counts_end + 3 * 4 * cells
+        if len(data) != expected:
+            # covers payloads cut anywhere: mid-counts, mid-counter, and
+            # mid-label-table alike
+            raise ValueError(
+                f"count-min payload is {len(data)} bytes, expected "
+                f"{expected} for {rows} rows of d={depth}, w={width}"
+            )
+        raw_counts = np.frombuffer(data[_CM_HEADER.size : counts_end], "<u8")
+        limbs = np.stack(
+            [(raw_counts >> 32).astype(np.uint32), raw_counts.astype(np.uint32)],
+            axis=-1,
+        )
+        shape = (rows, cfg.depth, cfg.width)
+        cnt_end = counts_end + 4 * cells
+        lab_end = cnt_end + 4 * cells
+        counters = np.frombuffer(data[counts_end:cnt_end], "<u4").reshape(shape)
+        labels = np.frombuffer(data[cnt_end:lab_end], "<i4").reshape(shape)
+        votes = np.frombuffer(data[lab_end:], "<i4").reshape(shape)
+        return cls(
+            jnp.asarray(counters.copy()),
+            jnp.asarray(labels.copy()),
+            jnp.asarray(votes.copy()),
+            jnp.asarray(limbs),
+            cfg,
+        )
+
+
+# ----------------------------------------------------------------------------
+# the windowed ring (DESIGN.md §11 contract, sum-fold flavor)
+# ----------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WindowedCountMinBank:
+    """A (W, B, d, w) ring of time-bucket count-min banks as one pytree.
+
+    The ring/rotation contract is identical to ``WindowedBank`` (epoch
+    labels, cursor, expiry-on-overwrite, monotone ``advance_to``); the
+    window fold differs in lattice only — counters SUM over the live
+    buckets (counts are additive across disjoint time slices) and label
+    tables merge pairwise with the Topkapi rule in slot order.
+    """
+
+    counters: jnp.ndarray  # (W, B, d, w) uint32
+    labels: jnp.ndarray  # (W, B, d, w) int32
+    label_counts: jnp.ndarray  # (W, B, d, w) int32
+    n_items: jnp.ndarray  # (W, B, 2) uint32 limb pairs per bucket row
+    cursor: jnp.ndarray  # () int32: ring slot of the newest epoch
+    epochs: jnp.ndarray  # (W,) int32: absolute epoch held by each slot
+    cfg: CMConfig = dataclasses.field(metadata=dict(static=True))
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def empty(
+        cls, window: int, rows: int, cfg: Optional[CMConfig] = None
+    ) -> "WindowedCountMinBank":
+        cfg = cfg or CMConfig()
+        if window < 1:
+            raise ValueError(f"a window needs at least one bucket, got {window}")
+        if rows < 1:
+            raise ValueError(f"a bank needs at least one row, got {rows}")
+        shape = (window, rows, cfg.depth, cfg.width)
+        return cls(
+            jnp.zeros(shape, COUNTER_DTYPE),
+            jnp.zeros(shape, LABEL_DTYPE),
+            jnp.zeros(shape, LABEL_DTYPE),
+            jnp.zeros((window, rows, 2), jnp.uint32),
+            jnp.zeros((), jnp.int32),
+            jnp.asarray(_initial_epochs(window)),
+            cfg,
+        )
+
+    def with_rows(self, rows: int) -> "WindowedCountMinBank":
+        """Grow the bank axis to ``rows`` (new rows start empty)."""
+        have = self.rows
+        if rows < have:
+            raise ValueError(f"cannot shrink a {have}-row window to {rows}")
+        if rows == have:
+            return self
+        grow = ((0, 0), (0, rows - have)) + ((0, 0),) * 2
+        return dataclasses.replace(
+            self,
+            counters=jnp.pad(self.counters, grow),
+            labels=jnp.pad(self.labels, grow),
+            label_counts=jnp.pad(self.label_counts, grow),
+            n_items=jnp.pad(self.n_items, ((0, 0), (0, rows - have), (0, 0))),
+        )
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def window(self) -> int:
+        return int(self.counters.shape[0])
+
+    @property
+    def rows(self) -> int:
+        return int(self.counters.shape[1])
+
+    def __len__(self) -> int:
+        return self.rows
+
+    @property
+    def epoch(self) -> int:
+        """The newest (current) absolute epoch — host-side read."""
+        return int(self.epochs[self.cursor])
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(W, B) exact per-bucket-per-row observation counts as uint64."""
+        limbs = np.asarray(self.n_items)
+        hi = limbs[..., 0].astype(np.uint64)
+        lo = limbs[..., 1].astype(np.uint64)
+        return (hi << np.uint64(32)) | lo
+
+    def window_counts(self, last_k: Optional[int] = None) -> np.ndarray:
+        """(B,) exact observation counts over the last ``last_k`` epochs."""
+        mask = np.asarray(self._live_mask(self._check_last_k(last_k)))
+        return self.counts[mask].sum(axis=0, dtype=np.uint64)
+
+    def _check_last_k(self, last_k: Optional[int]) -> int:
+        if last_k is None:
+            return self.window
+        if not 1 <= int(last_k) <= self.window:
+            raise ValueError(f"last_k must be in [1, {self.window}], got {last_k}")
+        return int(last_k)
+
+    def _live_mask(self, last_k: int) -> jnp.ndarray:
+        """(W,) bool: slots holding one of the ``last_k`` newest epochs."""
+        newest = self.epochs[self.cursor]
+        return self.epochs > newest - last_k
+
+    # ------------------------------------------------------------------
+    # ingestion (current bucket)
+    # ------------------------------------------------------------------
+
+    def observe(
+        self,
+        keys: jnp.ndarray,
+        items: jnp.ndarray,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> "WindowedCountMinBank":
+        """Route each item to row ``keys[i]`` of the CURRENT time bucket.
+
+        The current bucket IS a ``CountMinBank``, so ingest delegates to
+        ``CountMinBank.update_many`` wholesale — the §9 validation, drop,
+        counter, and short-circuit rules cannot drift from the flat path.
+        """
+        pick = lambda a: jax.lax.dynamic_index_in_dim(
+            a, self.cursor, 0, keepdims=False
+        )
+        cur = CountMinBank(
+            pick(self.counters),
+            pick(self.labels),
+            pick(self.label_counts),
+            pick(self.n_items),
+            self.cfg,
+        )
+        new = cur.update_many(keys, items, plan)
+        if new is cur:  # the empty-stream short-circuit: nothing to write back
+            return self
+        put = lambda ring, slab: jax.lax.dynamic_update_index_in_dim(
+            ring, slab, self.cursor, 0
+        )
+        return dataclasses.replace(
+            self,
+            counters=put(self.counters, new.counters),
+            labels=put(self.labels, new.labels),
+            label_counts=put(self.label_counts, new.label_counts),
+            n_items=put(self.n_items, new.n_items),
+        )
+
+    # ------------------------------------------------------------------
+    # rotation
+    # ------------------------------------------------------------------
+
+    def advance(self, steps: int = 1) -> "WindowedCountMinBank":
+        """Open ``steps`` new epochs, expiring the buckets they overwrite."""
+        if steps < 1:
+            raise ValueError(f"advance needs steps >= 1, got {steps}")
+        return self.advance_to(self.epochs[self.cursor] + steps)
+
+    def advance_to(self, epoch) -> "WindowedCountMinBank":
+        """Rotate forward so ``epoch`` is current; the past never returns.
+
+        Same rules as ``WindowedBank.advance_to``: overwritten slots
+        zero-fill (counters, labels, AND votes), jumps >= W expire the
+        whole ring, and a target at or before the current epoch is a
+        no-op.
+        """
+        target = jnp.maximum(jnp.asarray(epoch, jnp.int32), self.epochs[self.cursor])
+        window = self.window
+        slots = jnp.arange(window, dtype=jnp.int32)
+        new_epochs = target - jnp.mod(target - slots, window)
+        stale = new_epochs > self.epochs  # slots being overwritten
+        wipe = lambda a: jnp.where(
+            stale.reshape((window,) + (1,) * (a.ndim - 1)), 0, a
+        ).astype(a.dtype)
+        return dataclasses.replace(
+            self,
+            counters=wipe(self.counters),
+            labels=wipe(self.labels),
+            label_counts=wipe(self.label_counts),
+            n_items=wipe(self.n_items),
+            cursor=jnp.mod(target, window).astype(jnp.int32),
+            epochs=new_epochs.astype(jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    # windowed queries
+    # ------------------------------------------------------------------
+
+    def fold_window(
+        self,
+        last_k: Optional[int] = None,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> CountMinBank:
+        """The ``last_k``-epoch suffix collapsed to a flat ``CountMinBank``.
+
+        Counters fold with ONE fused masked SUM-reduce over the ring axis
+        (the cm window backend registered under ``plan.backend`` — the
+        fourth sibling of ``window_fold``); label tables merge pairwise
+        in slot order with the shared Topkapi rule; the exact per-row
+        counters sum the live buckets host-side.  A zero-row ring folds
+        to a zero-row bank without dispatching any backend.
+        """
+        last_k = self._check_last_k(last_k)
+        plan = (DEFAULT_PLAN if plan is None else plan).validate()
+        mask = self._live_mask(last_k)
+        if self.rows == 0:
+            shape = (0, self.cfg.depth, self.cfg.width)
+            return CountMinBank(
+                jnp.zeros(shape, COUNTER_DTYPE),
+                jnp.zeros(shape, LABEL_DTYPE),
+                jnp.zeros(shape, LABEL_DTYPE),
+                jnp.zeros((0, 2), jnp.uint32),
+                self.cfg,
+            )
+        backend = get_cm_window_backend(plan.backend)
+        counters = backend(self.counters, mask, self.cfg, plan)
+        live = np.flatnonzero(np.asarray(mask))  # never empty: cursor is live
+        labels = self.labels[int(live[0])]
+        votes = self.label_counts[int(live[0])]
+        for s in live[1:]:
+            labels, votes = _merge_label_tables(
+                labels, votes, self.labels[int(s)], self.label_counts[int(s)]
+            )
+        totals = self.window_counts(last_k)
+        limbs = np.stack(
+            [(totals >> np.uint64(32)).astype(np.uint32), totals.astype(np.uint32)],
+            axis=-1,
+        )
+        return CountMinBank(counters, labels, votes, jnp.asarray(limbs), self.cfg)
+
+    def query_window(
+        self,
+        items: jnp.ndarray,
+        last_k: Optional[int] = None,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> jnp.ndarray:
+        """(B, n) estimated counts over the ``last_k`` newest epochs."""
+        return self.fold_window(last_k, plan).query(items, plan)
+
+    def topk_window(
+        self,
+        k: int,
+        last_k: Optional[int] = None,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-row heavy hitters over the ``last_k`` newest epochs."""
+        return self.fold_window(last_k, plan).topk(k)
+
+    # ------------------------------------------------------------------
+    # serialization (RCMW: window header + epochs + RCMB payloads)
+    # ------------------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """32-byte window header + W int32 epochs + W RCMB bucket blobs."""
+        header = _CMW_HEADER.pack(
+            _CMW_MAGIC,
+            _CMW_VERSION,
+            self.cfg.depth,
+            0,
+            self.cfg.seed,
+            self.cfg.width,
+            self.window,
+            self.rows,
+            int(self.cursor),
+        )
+        epochs = np.asarray(self.epochs, dtype=_EPOCH).tobytes()
+        buckets = b"".join(
+            CountMinBank(
+                self.counters[w],
+                self.labels[w],
+                self.label_counts[w],
+                self.n_items[w],
+                self.cfg,
+            ).to_bytes()
+            for w in range(self.window)
+        )
+        return header + epochs + buckets
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "WindowedCountMinBank":
+        if len(data) < _CMW_HEADER.size:
+            raise ValueError(f"truncated count-min window: {len(data)} bytes")
+        magic, version, depth, _flags, seed, width, window, rows, cursor = (
+            _CMW_HEADER.unpack(data[: _CMW_HEADER.size])
+        )
+        if magic != _CMW_MAGIC:
+            raise ValueError(
+                f"bad magic {magic!r}; not a serialized count-min window"
+            )
+        if version != _CMW_VERSION:
+            raise ValueError(f"unsupported count-min window version {version}")
+        if window < 1 or rows < 1:
+            raise ValueError(
+                f"window header claims {window} buckets x {rows} rows"
+            )
+        if cursor >= window:
+            raise ValueError(f"cursor {cursor} out of range for W={window}")
+        cfg = CMConfig(depth=depth, width=width, seed=seed)
+        epochs_end = _CMW_HEADER.size + window * _EPOCH.itemsize
+        bucket_size = _CM_HEADER.size + rows * _ROW_COUNT.size + 12 * rows * cfg.cells
+        expected = epochs_end + window * bucket_size
+        if len(data) != expected:
+            # covers payloads cut mid-bucket and mid-label-table alike
+            raise ValueError(
+                f"count-min window payload is {len(data)} bytes, expected "
+                f"{expected} for W={window}, B={rows}, d={depth}, w={width}"
+            )
+        epochs = np.frombuffer(data[_CMW_HEADER.size : epochs_end], _EPOCH)
+        _validate_epoch_ring(epochs.astype(np.int64), cursor, window)
+        counters, labels, votes, limbs = [], [], [], []
+        for w in range(window):
+            start = epochs_end + w * bucket_size
+            bucket = CountMinBank.from_bytes(data[start : start + bucket_size])
+            if bucket.cfg != cfg or len(bucket) != rows:
+                raise ValueError(f"bucket {w} disagrees with the window header")
+            counters.append(bucket.counters)
+            labels.append(bucket.labels)
+            votes.append(bucket.label_counts)
+            limbs.append(bucket.n_items)
+        return cls(
+            jnp.stack(counters),
+            jnp.stack(labels),
+            jnp.stack(votes),
+            jnp.stack(limbs),
+            jnp.asarray(cursor, jnp.int32),
+            jnp.asarray(epochs.copy()),
+            cfg,
+        )
+
+
+# ----------------------------------------------------------------------------
+# the batched entry point, roadmap-style
+# ----------------------------------------------------------------------------
+
+
+def cm_update_many(
+    bank: CountMinBank,
+    keys: jnp.ndarray,
+    items: jnp.ndarray,
+    plan: Optional[ExecutionPlan] = None,
+) -> CountMinBank:
+    """Batched heavy-hitter ingestion: one fused dispatch for the bank."""
+    return bank.update_many(keys, items, plan)

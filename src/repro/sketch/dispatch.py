@@ -55,6 +55,40 @@ def mesh_fold(plan: ExecutionPlan, registers, arrays, apply_fn):
     )(registers, *arrays)
 
 
+def cm_mesh_sum(plan: ExecutionPlan, counters, arrays, apply_fn):
+    """The mesh placement rule for ADDITIVE sketch state (count-min).
+
+    ``mesh_fold`` edge-pads non-divisible streams because repeating a
+    (key, item) pair cannot move a max-lattice register — but under a sum
+    it would double-count.  Here padding fills the key stream with -1
+    instead, which the §9 drop rule discards on every backend.  Each
+    device ingests its shard into a ZERO counter bank, one lax.psum folds
+    the per-device deltas, and the delta lands on the incoming counters
+    exactly once, outside the collective.
+    """
+    axes = plan.data_axes
+    shards = 1
+    for a in axes:
+        shards *= plan.mesh.shape[a]
+    n = arrays[0].shape[0]
+    padded = -(-n // shards) * shards
+    if padded != n:
+        keys, rest = arrays[0], arrays[1:]
+        arrays = (jnp.pad(keys, (0, padded - n), constant_values=-1),) + tuple(
+            jnp.pad(x, (0, padded - n)) for x in rest
+        )
+    zeros = jnp.zeros(counters.shape, counters.dtype)
+
+    def local(z, *local_arrays):
+        return jax.lax.psum(apply_fn(z, *local_arrays), axes)
+
+    in_specs = (P(),) + (P(axes),) * len(arrays)
+    delta = shard_map(
+        local, mesh=plan.mesh, in_specs=in_specs, out_specs=P()
+    )(zeros, *arrays)
+    return counters + delta
+
+
 def update_registers(
     registers: jnp.ndarray,
     items: jnp.ndarray,

@@ -32,7 +32,7 @@ martingale estimators) plug into.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 
@@ -57,6 +57,29 @@ _BANK_BACKENDS: Dict[str, Callable] = {}
 # register under the same names as the other two axes so one ExecutionPlan
 # drives ingest, bank ingest, and window folds alike.
 _WINDOW_BACKENDS: Dict[str, Callable] = {}
+
+
+class CMBackend(NamedTuple):
+    """The count-min backend pair: fused ingest + batched point query.
+
+    ingest: fn(counters, keys, flat_items, cfg, plan) -> (B, d, w) counters
+    query:  fn(counters, flat_items, cfg, plan) -> (B, n) uint32 counts
+    """
+
+    ingest: Callable
+    query: Callable
+
+
+# backend name -> CMBackend.  The count-min family (DESIGN.md §13)
+# registers under the SAME names as the HLL axes, so one ExecutionPlan
+# drives cardinality and heavy-hitter sketches alike.
+_CM_BACKENDS: Dict[str, CMBackend] = {}
+
+# backend name -> fn(ring_counters, mask, cfg, plan) -> (B, d, w) counters.
+# The fourth registry axis: windowed count-min folds collapse the
+# (W, B, d, w) counter ring with one masked SUM-reduce (the additive
+# mirror of the window fold above).
+_CM_WINDOW_BACKENDS: Dict[str, Callable] = {}
 
 
 def register_backend(name: str) -> Callable[[Callable], Callable]:
@@ -109,6 +132,41 @@ def register_window_backend(name: str) -> Callable[[Callable], Callable]:
     return deco
 
 
+def register_cm_backend(name: str, ingest: Callable, query: Callable) -> CMBackend:
+    """Register a count-min backend pair (fused ingest + point query).
+
+    Unlike the single-function axes, a count-min backend is a PAIR —
+    the scatter-add ingest and the gather-min query — so registration is
+    a plain call rather than a decorator.  Signatures are documented on
+    :class:`CMBackend`.  Every registered ingest must be bit-identical to
+    the per-row reference loop (tests/test_countmin.py).
+    """
+    if name in _CM_BACKENDS:
+        raise ValueError(f"cm backend {name!r} already registered")
+    backend = CMBackend(ingest, query)
+    _CM_BACKENDS[name] = backend
+    return backend
+
+
+def register_cm_window_backend(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a windowed count-min ring-fold path under ``name``.
+
+    The signature is fn(ring_counters, mask, cfg, plan) -> (B, d, w)
+    counters, where ``ring_counters`` is the (W, B, d, w) ring of a
+    ``WindowedCountMinBank`` and ``mask`` is a (W,) bool selecting the
+    live buckets.  Every entry must be bit-identical to summing the live
+    buckets one by one (tests/test_countmin.py).
+    """
+
+    def deco(fn: Callable) -> Callable:
+        if name in _CM_WINDOW_BACKENDS:
+            raise ValueError(f"cm window backend {name!r} already registered")
+        _CM_WINDOW_BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
 def get_backend(name: str) -> Callable:
     try:
         return _BACKENDS[name]
@@ -138,6 +196,26 @@ def get_window_backend(name: str) -> Callable:
         ) from None
 
 
+def get_cm_backend(name: str) -> CMBackend:
+    try:
+        return _CM_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"backend {name!r} has no count-min path; cm-capable: "
+            f"{sorted(_CM_BACKENDS)}"
+        ) from None
+
+
+def get_cm_window_backend(name: str) -> Callable:
+    try:
+        return _CM_WINDOW_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"backend {name!r} has no count-min window fold path; "
+            f"cm-window-capable: {sorted(_CM_WINDOW_BACKENDS)}"
+        ) from None
+
+
 def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_BACKENDS))
 
@@ -148,6 +226,14 @@ def available_bank_backends() -> Tuple[str, ...]:
 
 def available_window_backends() -> Tuple[str, ...]:
     return tuple(sorted(_WINDOW_BACKENDS))
+
+
+def available_cm_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_CM_BACKENDS))
+
+
+def available_cm_window_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_CM_WINDOW_BACKENDS))
 
 
 @dataclasses.dataclass(frozen=True)

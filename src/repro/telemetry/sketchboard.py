@@ -33,6 +33,15 @@ contract is unchanged; flat-board ``serialize``/``merge_from`` are
 replaced by ``window_bytes()`` (the RHLW blob) because epochs on
 different boards are not aligned.
 
+``track_topk=CMConfig(...)`` adds heavy-hitter tracking (DESIGN.md §13):
+the same buffered keyed stream that feeds the HLL bank also feeds one
+``CountMinBank`` (row = stream) through the same flush dispatch, and
+``topk(name, k)`` / ``report(topk=k)`` answer "which items dominate this
+stream" alongside the distinct counts.  On a windowed board the counters
+ride a ``WindowedCountMinBank`` ring that advances in lockstep with the
+HLL ring, so top-k answers cover the same sliding window as the
+cardinalities.
+
 Every stream's updates run under one ``ExecutionPlan``, so a board can be
 switched from the local jnp path to Pallas pipelines or a device mesh —
 or to a different estimator — without touching call sites.
@@ -47,14 +56,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.sketch import (
+    CMConfig,
+    CountMinBank,
     DEFAULT_ESTIMATOR,
     DEFAULT_PLAN,
     ExecutionPlan,
     HyperLogLog,
     SketchBank,
     WindowedBank,
+    WindowedCountMinBank,
     estimate_many,
     get_bank_backend,
+    get_cm_backend,
     update_many,
 )
 from repro.sketch.hll import HLLConfig
@@ -72,6 +85,10 @@ class StreamSketch:
     # become rows of one WindowedBank ring and every read answers over the
     # sliding W-epoch window instead of all time
     window: Optional[int] = None
+    # a CMConfig adds heavy-hitter tracking (DESIGN.md §13): the flush
+    # dispatch also feeds one CountMinBank (row = stream) and topk()/
+    # report(topk=k) answer which items dominate each stream
+    track_topk: Optional[CMConfig] = None
     _pending: Dict[str, List[jnp.ndarray]] = dataclasses.field(
         default_factory=dict, repr=False
     )
@@ -81,6 +98,17 @@ class StreamSketch:
     # the full-window fold, memoized between ring mutations so per-stream
     # reads (stream()/estimate()) over many streams cost ONE fold, not B
     _wfold_cache: Optional[SketchBank] = dataclasses.field(
+        default=None, repr=False
+    )
+    # heavy-hitter state: the flat bank (row = stream, flat boards), the
+    # ring (windowed boards, advanced in lockstep with _wbank), the flat
+    # board's name -> row map, and the memoized window fold
+    _cmbank: Optional[CountMinBank] = dataclasses.field(default=None, repr=False)
+    _cmwin: Optional[WindowedCountMinBank] = dataclasses.field(
+        default=None, repr=False
+    )
+    _cm_rows: Dict[str, int] = dataclasses.field(default_factory=dict, repr=False)
+    _cmfold_cache: Optional[CountMinBank] = dataclasses.field(
         default=None, repr=False
     )
 
@@ -155,6 +183,10 @@ class StreamSketch:
         """
         if not self._pending:
             return
+        if self.track_topk is not None:
+            # the count-min twin ingests the SAME buffered keyed stream
+            # first, while the buffer is still intact
+            self._flush_topk()
         names = list(self._pending)
         if self.window is not None:
             # windowed boards land the whole buffer in the CURRENT time
@@ -218,6 +250,11 @@ class StreamSketch:
         self._ensure_wbank()
         self._wbank = self._wbank.advance(steps)
         self._wfold_cache = None
+        if self._cmwin is not None:
+            # the count-min ring slides in lockstep, so top-k answers
+            # cover the same epochs as the cardinalities
+            self._cmwin = self._cmwin.advance(steps)
+            self._cmfold_cache = None
 
     def advance_to(self, epoch: int) -> None:
         """Windowed mode: jump the ring forward to absolute ``epoch``."""
@@ -226,6 +263,99 @@ class StreamSketch:
         self._ensure_wbank()
         self._wbank = self._wbank.advance_to(epoch)
         self._wfold_cache = None
+        if self._cmwin is not None:
+            self._cmwin = self._cmwin.advance_to(epoch)
+            self._cmfold_cache = None
+
+    # ------------------------------------------------------------------
+    # heavy hitters (track_topk boards; DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def _cm_plan(self) -> Optional[ExecutionPlan]:
+        """The board plan if its backend has a count-min path, else None.
+
+        A plugin backend registered only for the HLL axes keeps working:
+        its board falls back to the reference jnp count-min dispatch, the
+        same degradation contract as the flat-flush bank fallback above.
+        """
+        try:
+            get_cm_backend((self.plan or DEFAULT_PLAN).backend)
+        except ValueError:
+            return None
+        return self.plan
+
+    def _flush_topk(self) -> None:
+        """Feed the buffered keyed stream into the count-min twin."""
+        names = list(self._pending)
+        rowmap = self._wrows if self.window is not None else self._cm_rows
+        for name in names:
+            if name not in rowmap:
+                rowmap[name] = len(rowmap)
+        keys = jnp.concatenate(
+            [
+                jnp.full((a.size,), rowmap[name], jnp.int32)
+                for name in names
+                for a in self._pending[name]
+            ]
+        )
+        items = jnp.concatenate(
+            [a for name in names for a in self._pending[name]]
+        )
+        rows = len(rowmap)
+        plan = self._cm_plan()
+        if self.window is not None:
+            if self._cmwin is None:
+                self._cmwin = WindowedCountMinBank.empty(
+                    self.window, rows, self.track_topk
+                )
+            elif rows > self._cmwin.rows:
+                self._cmwin = self._cmwin.with_rows(rows)
+            self._cmwin = self._cmwin.observe(keys, items, plan)
+        else:
+            if self._cmbank is None:
+                self._cmbank = CountMinBank.empty(rows, self.track_topk)
+            elif rows > len(self._cmbank):
+                self._cmbank = self._cmbank.with_rows(rows)
+            self._cmbank = self._cmbank.update_many(keys, items, plan)
+        self._cmfold_cache = None
+
+    def _cm_read_bank(self) -> Optional[CountMinBank]:
+        """The flat count-min bank current through any window fold."""
+        if self.window is None:
+            return self._cmbank
+        if self._cmwin is None:
+            return None
+        if self._cmfold_cache is None:
+            self._cmfold_cache = self._cmwin.fold_window(plan=self._cm_plan())
+        return self._cmfold_cache
+
+    def _require_topk(self, op: str) -> None:
+        if self.track_topk is None:
+            raise ValueError(
+                f"{op}() needs a heavy-hitter board (track_topk=CMConfig(...))"
+            )
+
+    def topk(self, name: str, k: int = 10) -> List[tuple]:
+        """The stream's top-k heavy items as [(item, est_count), ...].
+
+        Items come back as the uint32 values observe() normalized to;
+        counts are count-min upper bounds.  On a windowed board the
+        answer covers the sliding W-epoch window, like every other read.
+        Streams this board has never seen report [].
+        """
+        self._require_topk("topk")
+        self.flush()
+        rowmap = self._wrows if self.window is not None else self._cm_rows
+        bank = self._cm_read_bank()
+        if bank is None or name not in rowmap or rowmap[name] >= len(bank):
+            return []
+        vals, cnts = bank.topk(k)
+        row = rowmap[name]
+        return [
+            (int(np.uint32(v)), int(c))
+            for v, c in zip(vals[row], cnts[row])
+            if c > 0
+        ]
 
     def window_bytes(self) -> bytes:
         """Windowed mode: the whole ring as one RHLW blob (DESIGN.md §11).
@@ -258,10 +388,47 @@ class StreamSketch:
                 f"cannot merge boards with different configs: "
                 f"{self.cfg} vs {other.cfg}"
             )
+        if self.track_topk != other.track_topk:
+            raise ValueError(
+                f"cannot merge boards with different track_topk configs: "
+                f"{self.track_topk} vs {other.track_topk}"
+            )
         self.flush()
         other.flush()
         for name, sk in other.sketches.items():
             self.sketches[name] = self.stream(name).merge(sk)
+        if self.track_topk is not None and other._cmbank is not None:
+            # align the other board's rows to this board's name -> row map,
+            # then fold with ONE mergeable count-min merge (Topkapi rule)
+            for name in other._cm_rows:
+                if name not in self._cm_rows:
+                    self._cm_rows[name] = len(self._cm_rows)
+            rows = len(self._cm_rows)
+            if self._cmbank is None:
+                self._cmbank = CountMinBank.empty(rows, self.track_topk)
+            elif rows > len(self._cmbank):
+                self._cmbank = self._cmbank.with_rows(rows)
+            dst = np.array(
+                [self._cm_rows[n] for n in other._cm_rows], dtype=np.int64
+            )
+            src = np.array(list(other._cm_rows.values()), dtype=np.int64)
+            aligned = CountMinBank.empty(rows, self.track_topk)
+
+            def place(theirs):
+                theirs = np.asarray(theirs)
+                out = np.zeros((rows,) + theirs.shape[1:], theirs.dtype)
+                out[dst] = theirs[src]
+                return jnp.asarray(out)
+
+            aligned = dataclasses.replace(
+                aligned,
+                counters=place(other._cmbank.counters),
+                labels=place(other._cmbank.labels),
+                label_counts=place(other._cmbank.label_counts),
+                n_items=place(other._cmbank.n_items),
+            )
+            self._cmbank = self._cmbank.merge(aligned)
+            self._cmfold_cache = None
 
     def estimate(self, name: str, estimator: Optional[str] = None) -> float:
         """Exact host-side estimate for one stream.
@@ -369,6 +536,7 @@ class StreamSketch:
         exact: bool = False,
         estimator: Optional[str] = None,
         density: bool = False,
+        topk: Optional[int] = None,
     ) -> Dict[str, dict]:
         """Per-stream estimates; batched device finalization by default.
 
@@ -377,8 +545,12 @@ class StreamSketch:
         ``items_seen``/``duplication`` likewise cover only the live
         window.  Same row schema as flat boards.  ``density=True`` adds a
         ``register_occupancy`` column per stream (board-level stats live
-        in :meth:`density`).
+        in :meth:`density`).  ``topk=k`` adds a ``topk`` column — the
+        stream's k heaviest items as [(item, est_count), ...] from ONE
+        batched recovery over the whole board (heavy-hitter boards only).
         """
+        if topk is not None:
+            self._require_topk("report(topk=k)")
         self.flush()
         estimator = self._estimator(estimator)
         if self.window is not None:
@@ -389,6 +561,24 @@ class StreamSketch:
             occ = self.density()["occupancy"]
             for name, row in out.items():
                 row["register_occupancy"] = occ[name]
+        if topk is not None:
+            bank = self._cm_read_bank()
+            rowmap = self._wrows if self.window is not None else self._cm_rows
+            vals, cnts = (
+                bank.topk(topk)
+                if bank is not None
+                else (np.zeros((0, topk)), np.zeros((0, topk)))
+            )
+            for name, row in out.items():
+                r = rowmap.get(name)
+                if r is None or bank is None or r >= len(bank):
+                    row["topk"] = []
+                    continue
+                row["topk"] = [
+                    (int(np.uint32(v)), int(c))
+                    for v, c in zip(vals[r], cnts[r])
+                    if c > 0
+                ]
         return out
 
     def _report_flat(self, exact: bool, estimator: str) -> Dict[str, dict]:

@@ -26,15 +26,20 @@ deterministic fixed-seed sweeps and the hypothesis strategies in
 tests/test_differential.py.
 """
 
+from collections import Counter
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.sketch import (
+    CMConfig,
+    CountMinBank,
     ExecutionPlan,
     HybridBank,
     HybridWindowedBank,
     SketchBank,
     WindowedBank,
+    WindowedCountMinBank,
 )
 
 
@@ -83,6 +88,90 @@ class ReferenceModel:
                 live |= sets[r]
             out[r] = len(live)
         return out
+
+    def observed(self):
+        """(B,) exact observation counts over the live window."""
+        return np.sum(self.epoch_counts, axis=0).astype(np.uint64)
+
+
+class CounterReferenceModel:
+    """Dict-of-Counters oracle for (windowed) multi-tenant frequencies.
+
+    The exact twin of :class:`ReferenceModel` for the count-min family:
+    per-row Counters of observed values (the TRUE frequencies), exact
+    observation counters, the same §9 drop rules, window epochs as a
+    bounded deque of Counter lists, merge as Counter addition.
+    ``true_counts(probe)`` and ``top_k(k)`` are the ground truths the
+    count-min queries and Topkapi recovery are held against.
+    """
+
+    def __init__(self, rows, window=None):
+        self.rows = rows
+        self.window = window
+        self.epoch_counters = [self._fresh()]
+        self.epoch_counts = [np.zeros(rows, np.int64)]
+
+    def _fresh(self):
+        return [Counter() for _ in range(self.rows)]
+
+    def update(self, keys, items):
+        cur = self.epoch_counters[-1]
+        cur_counts = self.epoch_counts[-1]
+        for k, x in zip(np.asarray(keys), np.asarray(items)):
+            k = int(k)
+            if 0 <= k < self.rows:  # §9: out-of-range keys drop silently
+                cur[k][int(x)] += 1
+                cur_counts[k] += 1
+
+    def merge(self, other):
+        assert self.window is None and other.window is None
+        for r in range(self.rows):
+            self.epoch_counters[-1][r] += other.epoch_counters[-1][r]
+        self.epoch_counts[-1] += other.epoch_counts[-1]
+
+    def advance(self, steps=1):
+        assert self.window is not None
+        for _ in range(steps):
+            self.epoch_counters.append(self._fresh())
+            self.epoch_counts.append(np.zeros(self.rows, np.int64))
+            if len(self.epoch_counters) > self.window:
+                self.epoch_counters.pop(0)
+                self.epoch_counts.pop(0)
+
+    def live_counters(self):
+        """(B,) Counters of the live window (all epochs folded)."""
+        out = [Counter() for _ in range(self.rows)]
+        for epoch in self.epoch_counters:
+            for r in range(self.rows):
+                out[r] += epoch[r]
+        return out
+
+    def true_counts(self, probe):
+        """(B, n) exact frequencies of ``probe`` over the live window."""
+        live = self.live_counters()
+        probe = np.asarray(probe)
+        out = np.zeros((self.rows, probe.size), np.int64)
+        for r in range(self.rows):
+            for j, v in enumerate(probe):
+                out[r, j] = live[r][int(v)]
+        return out
+
+    def top_k(self, k):
+        """Per-row true top-k value sets (count-desc, ties value-desc)."""
+        live = self.live_counters()
+        return [
+            [
+                v
+                for v, _ in sorted(
+                    c.items(), key=lambda kv: (-kv[1], -kv[0])
+                )[:k]
+            ]
+            for c in live
+        ]
+
+    def true_cardinalities(self):
+        """(B,) exact distinct counts over the live window."""
+        return np.array([len(c) for c in self.live_counters()], np.int64)
 
     def observed(self):
         """(B,) exact observation counts over the live window."""
@@ -246,6 +335,91 @@ class HybridWindowSUT:
         )
 
 
+class CountMinSUT:
+    """The flat (B, d, w) CountMinBank under a given ExecutionPlan."""
+
+    windowed = False
+
+    def __init__(self, rows, cfg: CMConfig, plan=None, threshold=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.bank = CountMinBank.empty(rows, cfg)
+
+    def update(self, keys, items):
+        self.bank = self.bank.update_many(
+            jnp.asarray(keys), jnp.asarray(items), self.plan
+        )
+
+    def merge(self, keys, items):
+        other = CountMinBank.empty(len(self.bank), self.cfg).update_many(
+            jnp.asarray(keys), jnp.asarray(items), self.plan
+        )
+        self.bank = self.bank.merge(other)
+
+    def roundtrip(self):
+        self.bank = CountMinBank.from_bytes(self.bank.to_bytes())
+
+    def query(self, probe):
+        return np.asarray(self.bank.query(jnp.asarray(probe), self.plan))
+
+    def topk(self, k):
+        return self.bank.topk(k)
+
+    def counts(self):
+        return self.bank.counts
+
+    def canonical(self):
+        return (
+            np.asarray(self.bank.counters),
+            np.asarray(self.bank.labels),
+            np.asarray(self.bank.label_counts),
+            self.bank.counts,
+        )
+
+
+class WindowedCountMinSUT:
+    """The (W, B, d, w) WindowedCountMinBank ring."""
+
+    windowed = True
+
+    def __init__(self, window, rows, cfg: CMConfig, plan=None, threshold=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.ring = WindowedCountMinBank.empty(window, rows, cfg)
+
+    def update(self, keys, items):
+        self.ring = self.ring.observe(
+            jnp.asarray(keys), jnp.asarray(items), self.plan
+        )
+
+    def advance(self, steps=1):
+        self.ring = self.ring.advance(steps)
+
+    def roundtrip(self):
+        self.ring = WindowedCountMinBank.from_bytes(self.ring.to_bytes())
+
+    def query(self, probe):
+        return np.asarray(
+            self.ring.query_window(jnp.asarray(probe), plan=self.plan)
+        )
+
+    def topk(self, k):
+        return self.ring.topk_window(k, plan=self.plan)
+
+    def counts(self):
+        return self.ring.window_counts()
+
+    def canonical(self):
+        fold = self.ring.fold_window(plan=self.plan)
+        return (
+            np.asarray(fold.counters),
+            np.asarray(fold.labels),
+            np.asarray(fold.label_counts),
+            self.ring.window_counts(),
+            np.asarray(self.ring.epochs),
+        )
+
+
 # ----------------------------------------------------------------------------
 # op sequences
 # ----------------------------------------------------------------------------
@@ -301,7 +475,7 @@ def run_ops(ops, sut, oracle, on_estimate=None):
             oracle.update(op[1], op[2])
         elif kind == "merge":
             sut.merge(op[1], op[2])
-            side = ReferenceModel(oracle.rows)
+            side = type(oracle)(oracle.rows)
             side.update(op[1], op[2])
             oracle.merge(side)
         elif kind == "advance":
@@ -337,3 +511,22 @@ def assert_within_band(estimates, true, m, sigma_mult=3.0):
 def make_plans(backends):
     """One local plan per registered bank backend (the differential axis)."""
     return {name: ExecutionPlan(backend=name) for name in backends}
+
+
+def assert_cm_bounds(estimates, true, total, width, depth):
+    """Count-min sandwich: true <= est <= true + slack(stream, w).
+
+    The lower bound is exact (counters only ever over-count); the upper
+    bound uses the classical 2n/w expected collision mass per cell with a
+    generous deterministic multiplier, plus small-stream slack, so fixed
+    seeds stay far inside it.
+    """
+    estimates = np.asarray(estimates, np.int64)
+    true = np.asarray(true, np.int64)
+    assert (estimates >= true).all(), "count-min under-counted a probe"
+    slack = 8.0 * (np.asarray(total, np.float64)[:, None] / width) + 16.0
+    over = estimates - true
+    assert (over <= slack).all(), (
+        f"count-min overestimate {over.max()} exceeded the "
+        f"{slack.max():.1f} collision-mass band (w={width}, d={depth})"
+    )

@@ -1,0 +1,666 @@
+"""CountMinBank: fused d-hash keyed ingest, Topkapi top-k, and the wire fuzz.
+
+Acceptance property for the heavy-hitter subsystem (DESIGN.md §13): for
+EVERY registered cm backend, ``update_many`` on a (B, d, w) bank —
+including the (1024, 4, 1024) acceptance size — is bit-identical to the
+per-row per-depth ``np.add.at`` loop, for streams that divide nothing,
+for out-of-range keys (dropped, never leaked), and under mesh placement.
+Plus: query upper bounds, merge algebra, the RCMB/RCMW wire formats with
+the same truncation/garbage/no-leak fuzz the RHLB suite runs, and the
+spy-backend short-circuit guards (zero-length streams and zero-row banks
+must dispatch NOTHING).
+"""
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sketch import (
+    CMConfig,
+    CountMinBank,
+    ExecutionPlan,
+    WindowedCountMinBank,
+    available_cm_backends,
+    available_cm_window_backends,
+    cm_hash_index,
+    cm_update_many,
+    register_backend,
+    register_cm_backend,
+    register_cm_window_backend,
+)
+from repro.sketch.backends import (
+    cm_query_jnp,
+    cm_update_jnp,
+    cm_window_fold_jnp,
+    update_pipelined,
+)
+
+CFG = CMConfig(depth=4, width=64, seed=5)  # small w so pallas tiles many rows
+
+
+def _stream(n, rows, seed=0):
+    rng = np.random.default_rng(seed)
+    items = rng.integers(0, 2**31, n, dtype=np.int32)
+    keys = rng.integers(0, rows, n, dtype=np.int32)
+    return jnp.asarray(keys), jnp.asarray(items)
+
+
+def _loop_reference(keys, items, rows, cfg=CFG):
+    """The pre-fusion shape of ingest: np.add.at per row per depth."""
+    ks, it = np.asarray(keys), np.asarray(items)
+    out = np.zeros((rows, cfg.depth, cfg.width), np.uint32)
+    if it.size == 0:
+        return out
+    idx = np.asarray(cm_hash_index(jnp.asarray(it), cfg))  # (d, n)
+    for b in range(rows):
+        sel = ks == b
+        for r in range(cfg.depth):
+            np.add.at(out[b, r], idx[r][sel], np.uint32(1))
+    return out
+
+
+def _filled(rows=6, n=4000, seed=3, cfg=CFG):
+    keys, items = _stream(n, rows, seed=seed)
+    return CountMinBank.empty(rows, cfg).update_many(keys, items)
+
+
+# ----------------------------------------------------------------------------
+# update_many vs per-row loop (the acceptance property)
+# ----------------------------------------------------------------------------
+
+
+def test_cm_backends_registered():
+    want = {"jnp", "pallas", "pallas_pipelined"}
+    assert set(available_cm_backends()) >= want
+    assert set(available_cm_window_backends()) >= want
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_pipelined"])
+@pytest.mark.parametrize("n", [1, 1000, 4099])  # 4099 is prime: pads everywhere
+def test_update_many_matches_loop(backend, n):
+    rows = 17  # prime row count: divides no row block evenly
+    keys, items = _stream(n, rows, seed=n)
+    ref = _loop_reference(keys, items, rows)
+    for pipelines in (1, 3, 8):
+        plan = ExecutionPlan(backend=backend, pipelines=pipelines)
+        bank = CountMinBank.empty(rows, CFG).update_many(keys, items, plan)
+        np.testing.assert_array_equal(np.asarray(bank.counters), ref)
+
+
+def test_acceptance_1024_row_bank_bit_identical():
+    """The issue's acceptance size: (B=1024, d=4, w=1024) vs the loop."""
+    cfg = CMConfig(depth=4, width=1024, seed=1)
+    rows, n = 1024, 8191
+    keys, items = _stream(n, rows, seed=42)
+    ref = _loop_reference(keys, items, rows, cfg)
+    bank = CountMinBank.empty(rows, cfg).update_many(
+        keys, items, ExecutionPlan(backend="jnp")
+    )
+    np.testing.assert_array_equal(np.asarray(bank.counters), ref)
+    np.testing.assert_array_equal(
+        bank.counts, np.bincount(np.asarray(keys), minlength=rows)
+    )
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_pipelined"])
+def test_pallas_row_block_clamps_to_one_row(backend):
+    """d*w == MAX_BLOCK_CELLS forces row_block=1: every row its own slab."""
+    cfg = CMConfig(depth=4, width=1024, seed=2)
+    rows, n = 9, 3001
+    keys, items = _stream(n, rows, seed=8)
+    want = CountMinBank.empty(rows, cfg).update_many(
+        keys, items, ExecutionPlan(backend="jnp")
+    )
+    got = CountMinBank.empty(rows, cfg).update_many(
+        keys, items, ExecutionPlan(backend=backend)
+    )
+    np.testing.assert_array_equal(np.asarray(got.counters), np.asarray(want.counters))
+    np.testing.assert_array_equal(np.asarray(got.labels), np.asarray(want.labels))
+    np.testing.assert_array_equal(
+        np.asarray(got.label_counts), np.asarray(want.label_counts)
+    )
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_pipelined"])
+def test_out_of_range_keys_dropped_not_leaked(backend):
+    rows, n = 11, 3001
+    keys, items = _stream(n, rows, seed=7)
+    pos = np.arange(n)
+    bad = np.where(pos % 5 == 0, -2, np.asarray(keys))
+    bad = np.where(pos % 7 == 0, rows + 3, bad)
+    ref = _loop_reference(jnp.asarray(bad), items, rows)
+    bank = CountMinBank.empty(rows, CFG).update_many(
+        jnp.asarray(bad), items, ExecutionPlan(backend=backend)
+    )
+    np.testing.assert_array_equal(np.asarray(bank.counters), ref)
+    in_range = bad[(bad >= 0) & (bad < rows)]
+    np.testing.assert_array_equal(
+        bank.counts, np.bincount(in_range, minlength=rows)
+    )
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_mesh_placement_matches_local(backend):
+    rows, n = 9, 2503  # prime stream: forces the drop-key padding path
+    keys, items = _stream(n, rows, seed=9)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    plan = ExecutionPlan(backend=backend).with_mesh(mesh)
+    bank = CountMinBank.empty(rows, CFG).update_many(keys, items, plan)
+    np.testing.assert_array_equal(
+        np.asarray(bank.counters), _loop_reference(keys, items, rows)
+    )
+    local = CountMinBank.empty(rows, CFG).update_many(
+        keys, items, ExecutionPlan(backend=backend)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(bank.labels), np.asarray(local.labels)
+    )
+
+
+def test_functional_entry_matches_method():
+    rows = 5
+    keys, items = _stream(777, rows, seed=13)
+    a = cm_update_many(CountMinBank.empty(rows, CFG), keys, items)
+    b = CountMinBank.empty(rows, CFG).update_many(keys, items)
+    np.testing.assert_array_equal(np.asarray(a.counters), np.asarray(b.counters))
+
+
+# ----------------------------------------------------------------------------
+# query / merge / topk algebra
+# ----------------------------------------------------------------------------
+
+
+def test_query_never_undercounts():
+    rows = 4
+    keys, items = _stream(6000, rows, seed=11)
+    bank = _filled(rows, 6000, seed=11)
+    probe = np.unique(np.asarray(items))[:50]
+    est = np.asarray(bank.query(jnp.asarray(probe)))
+    ks, it = np.asarray(keys), np.asarray(items)
+    for b in range(rows):
+        true = np.array([(it[ks == b] == v).sum() for v in probe])
+        assert (est[b] >= true).all()
+
+
+def test_query_exact_without_collisions():
+    """A stream narrower than w with d=4 rows: every probe lands clean."""
+    cfg = CMConfig(depth=4, width=4096, seed=6)
+    items = jnp.asarray(np.repeat(np.arange(8, dtype=np.int32), 37))
+    bank = CountMinBank.empty(1, cfg).update_many(
+        jnp.zeros(items.shape, jnp.int32), items
+    )
+    est = np.asarray(bank.query(jnp.arange(8)))
+    np.testing.assert_array_equal(est[0], np.full(8, 37))
+
+
+def test_merge_matches_concat_ingest_and_commutes():
+    rows = 7
+    k1, i1 = _stream(900, rows, seed=1)
+    k2, i2 = _stream(1100, rows, seed=2)
+    a = CountMinBank.empty(rows, CFG).update_many(k1, i1)
+    b = CountMinBank.empty(rows, CFG).update_many(k2, i2)
+    both = CountMinBank.empty(rows, CFG).update_many(
+        jnp.concatenate([k1, k2]), jnp.concatenate([i1, i2])
+    )
+    merged = a | b
+    # counters are exact mod 2^32: merge == single-pass concat ingest
+    np.testing.assert_array_equal(
+        np.asarray(merged.counters), np.asarray(both.counters)
+    )
+    np.testing.assert_array_equal(merged.counts, both.counts)
+    # the Topkapi merge rule is commutative (labels may differ from the
+    # single-pass vote — that's inherent to Topkapi — but never by order)
+    swapped = b | a
+    np.testing.assert_array_equal(
+        np.asarray(merged.labels), np.asarray(swapped.labels)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(merged.label_counts), np.asarray(swapped.label_counts)
+    )
+
+
+def test_merge_rejects_mismatched_banks():
+    a = CountMinBank.empty(3, CFG)
+    with pytest.raises(ValueError, match="different configs"):
+        a.merge(CountMinBank.empty(3, CMConfig(depth=3, width=64)))
+    with pytest.raises(ValueError, match="different sizes"):
+        a.merge(CountMinBank.empty(4, CFG))
+
+
+def test_topk_recovers_heavy_hitters():
+    cfg = CMConfig(depth=4, width=256, seed=4)
+    rng = np.random.default_rng(0)
+    hot = np.repeat(np.arange(100, 103, dtype=np.int32), 500)
+    tail = rng.integers(1000, 2**20, 400).astype(np.int32)
+    stream = np.concatenate([hot, tail])
+    rng.shuffle(stream)
+    bank = CountMinBank.empty(2, cfg).update_many(
+        jnp.asarray(np.zeros(stream.shape, np.int32)), jnp.asarray(stream)
+    )
+    vals, cnts = bank.topk(3)
+    assert set(int(v) for v in vals[0]) == {100, 101, 102}
+    assert (cnts[0] >= 500).all()
+    # row 1 saw nothing: padded output only
+    assert (cnts[1] == 0).all()
+
+
+def test_topk_pads_when_candidates_run_out():
+    cfg = CMConfig(depth=2, width=32, seed=3)
+    items = jnp.asarray(np.array([7, 7, 7, 9, 9], np.int32))
+    bank = CountMinBank.empty(1, cfg).update_many(
+        jnp.zeros(5, jnp.int32), items
+    )
+    vals, cnts = bank.topk(6)
+    assert vals.shape == (1, 6) and cnts.shape == (1, 6)
+    assert vals[0, 0] == 7 and cnts[0, 0] >= 3
+    assert vals[0, 1] == 9 and cnts[0, 1] >= 2
+    # beyond the surviving labels: -1 / 0 padding (label 0 may appear with
+    # a zero estimate from untouched cells — never with a positive count)
+    live = set(int(v) for v, c in zip(vals[0], cnts[0]) if c > 0)
+    assert live == {7, 9}
+    assert (vals[0][cnts[0] == 0] <= 0).all()
+
+
+def test_topk_validates_k():
+    with pytest.raises(ValueError, match="k >= 1"):
+        _filled(2, 100).topk(0)
+
+
+# ----------------------------------------------------------------------------
+# validation + short-circuit guards (spy backend: NOTHING may dispatch)
+# ----------------------------------------------------------------------------
+
+
+def test_cmconfig_validation():
+    with pytest.raises(ValueError, match="depth"):
+        CMConfig(depth=0)
+    with pytest.raises(ValueError, match="depth"):
+        CMConfig(depth=17)
+    with pytest.raises(ValueError, match="width"):
+        CMConfig(width=0)
+    with pytest.raises(ValueError, match="width"):
+        CMConfig(width=(1 << 24) + 1)
+    with pytest.raises(ValueError, match="seed"):
+        CMConfig(seed=-1)
+    with pytest.raises(ValueError, match="seed"):
+        CMConfig(seed=1 << 64)
+
+
+def test_empty_and_with_rows():
+    with pytest.raises(ValueError, match="at least one row"):
+        CountMinBank.empty(0, CFG)
+    with pytest.raises(ValueError, match="at least one bucket"):
+        WindowedCountMinBank.empty(0, 3, CFG)
+    bank = _filled(3, 500)
+    assert bank.with_rows(3) is bank
+    grown = bank.with_rows(5)
+    assert len(grown) == 5
+    np.testing.assert_array_equal(
+        np.asarray(grown.counters[:3]), np.asarray(bank.counters)
+    )
+    assert np.asarray(grown.counters[3:]).sum() == 0
+    with pytest.raises(ValueError, match="cannot shrink"):
+        bank.with_rows(2)
+
+
+def test_update_many_length_mismatch():
+    bank = CountMinBank.empty(2, CFG)
+    with pytest.raises(ValueError, match="same length"):
+        bank.update_many(jnp.zeros(2, jnp.int32), jnp.zeros(3, jnp.int32))
+    # validation precedes the empty-stream short-circuit
+    with pytest.raises(ValueError, match="same length"):
+        bank.update_many(jnp.zeros(0, jnp.int32), jnp.zeros(3, jnp.int32))
+    win = WindowedCountMinBank.empty(2, 2, CFG)
+    with pytest.raises(ValueError, match="same length"):
+        win.observe(jnp.zeros(1, jnp.int32), jnp.zeros(2, jnp.int32))
+
+
+_SPY_CALLS = {"n": 0}
+
+
+# the spies delegate to the real jnp paths so bit-identity suites that sweep
+# every registered backend at runtime keep passing even with them registered
+@register_backend("spy_cm_jnp")
+def _spy_hll_backend(registers, items, cfg, plan):
+    return update_pipelined(registers, items, cfg, plan.pipelines)
+
+
+def _spy_cm_ingest(counters, keys, items, cfg, plan):
+    _SPY_CALLS["n"] += 1
+    return cm_update_jnp(counters, keys, items, cfg)
+
+
+def _spy_cm_query(counters, items, cfg, plan):
+    _SPY_CALLS["n"] += 1
+    return cm_query_jnp(counters, items, cfg)
+
+
+register_cm_backend("spy_cm_jnp", _spy_cm_ingest, _spy_cm_query)
+
+
+@register_cm_window_backend("spy_cm_jnp")
+def _spy_cm_window(ring, mask, cfg, plan):
+    _SPY_CALLS["n"] += 1
+    return cm_window_fold_jnp(ring, mask)
+
+
+def _zero_row_bank(cfg=CFG):
+    # empty() refuses rows=0 by design; a zero-row bank can still arrive
+    # through slicing/deserialization layers, so build one directly
+    shape = (0, cfg.depth, cfg.width)
+    return CountMinBank(
+        jnp.zeros(shape, jnp.uint32),
+        jnp.zeros(shape, jnp.int32),
+        jnp.zeros(shape, jnp.int32),
+        jnp.zeros((0, 2), jnp.uint32),
+        cfg,
+    )
+
+
+def test_empty_stream_short_circuits_without_dispatch():
+    plan = ExecutionPlan(backend="spy_cm_jnp")
+    bank = CountMinBank.empty(3, CFG)
+    _SPY_CALLS["n"] = 0
+    out = bank.update_many(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32), plan)
+    assert _SPY_CALLS["n"] == 0 and out is bank
+    est = bank.query(jnp.zeros(0, jnp.int32), plan)
+    assert _SPY_CALLS["n"] == 0 and est.shape == (3, 0)
+
+
+def test_zero_row_bank_short_circuits_without_dispatch():
+    plan = ExecutionPlan(backend="spy_cm_jnp")
+    bank = _zero_row_bank()
+    keys, items = _stream(64, 4, seed=21)
+    _SPY_CALLS["n"] = 0
+    out = bank.update_many(keys, items, plan)
+    assert _SPY_CALLS["n"] == 0 and out is bank
+    est = bank.query(items, plan)
+    assert _SPY_CALLS["n"] == 0 and est.shape == (0, 64)
+    vals, cnts = bank.topk(4)
+    assert vals.shape == (0, 4) and cnts.shape == (0, 4)
+    with pytest.raises(ValueError, match="same length"):
+        bank.update_many(jnp.zeros(2, jnp.int32), jnp.zeros(3, jnp.int32))
+    assert _SPY_CALLS["n"] == 0
+
+
+def test_windowed_short_circuits_without_dispatch():
+    plan = ExecutionPlan(backend="spy_cm_jnp")
+    win = WindowedCountMinBank.empty(3, 2, CFG)
+    _SPY_CALLS["n"] = 0
+    out = win.observe(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32), plan)
+    assert _SPY_CALLS["n"] == 0 and out is win
+    # a zero-row ring folds to a zero-row bank with no backend dispatch
+    zr = WindowedCountMinBank(
+        jnp.zeros((3, 0, CFG.depth, CFG.width), jnp.uint32),
+        jnp.zeros((3, 0, CFG.depth, CFG.width), jnp.int32),
+        jnp.zeros((3, 0, CFG.depth, CFG.width), jnp.int32),
+        jnp.zeros((3, 0, 2), jnp.uint32),
+        win.cursor,
+        win.epochs,
+        CFG,
+    )
+    fold = zr.fold_window(plan=plan)
+    assert _SPY_CALLS["n"] == 0 and len(fold) == 0
+    # a live ring DOES dispatch exactly one fused fold
+    keys, items = _stream(128, 2, seed=5)
+    win = win.observe(keys, items, plan)
+    assert _SPY_CALLS["n"] == 1
+    win.fold_window(plan=plan)
+    assert _SPY_CALLS["n"] == 2
+
+
+def test_jnp_cm_rejects_int32_cell_space_overflow():
+    """B*d*w >= 2^31 would wrap the flattened segment ids; the jnp path
+    must refuse loudly (shape-only check — no giant allocation)."""
+    cfg = CMConfig(depth=4, width=1024)
+    big = jax.ShapeDtypeStruct((1 << 19, 4, 1024), jnp.uint32)  # == 2^31
+    keys = jax.ShapeDtypeStruct((8,), jnp.int32)
+    items = jax.ShapeDtypeStruct((8,), jnp.int32)
+    with pytest.raises(ValueError, match="overflows int32"):
+        jax.eval_shape(partial(cm_update_jnp, cfg=cfg), big, keys, items)
+
+
+# ----------------------------------------------------------------------------
+# serialization (RCMB wire format + corruption fuzz, mirroring RHLB)
+# ----------------------------------------------------------------------------
+
+
+def _blob_layout(rows, cfg=CFG):
+    cells = rows * cfg.depth * cfg.width
+    counts_end = 24 + rows * 8
+    return counts_end, cells
+
+
+def test_cm_bytes_roundtrip():
+    bank = _filled(rows=5, n=6000)
+    blob = bank.to_bytes()
+    counts_end, cells = _blob_layout(5)
+    assert len(blob) == counts_end + 3 * 4 * cells
+    back = CountMinBank.from_bytes(blob)
+    assert back.cfg == bank.cfg and len(back) == len(bank)
+    np.testing.assert_array_equal(np.asarray(back.counters), np.asarray(bank.counters))
+    np.testing.assert_array_equal(np.asarray(back.labels), np.asarray(bank.labels))
+    np.testing.assert_array_equal(
+        np.asarray(back.label_counts), np.asarray(bank.label_counts)
+    )
+    np.testing.assert_array_equal(back.counts, bank.counts)
+
+
+def test_cm_bytes_rejects_garbage():
+    blob = _filled(rows=3).to_bytes()
+    with pytest.raises(ValueError, match="truncated"):
+        CountMinBank.from_bytes(blob[:10])
+    with pytest.raises(ValueError, match="magic"):
+        CountMinBank.from_bytes(b"NOPE" + blob[4:])
+    with pytest.raises(ValueError, match="version"):
+        CountMinBank.from_bytes(blob[:4] + b"\x09" + blob[5:])
+    with pytest.raises(ValueError, match="payload"):
+        CountMinBank.from_bytes(blob[:-1])
+
+
+@pytest.mark.parametrize("frac", [0.0, 0.05, 0.2, 0.45, 0.7, 0.9, 0.999])
+def test_cm_bytes_rejects_truncation_anywhere(frac):
+    """A blob cut at ANY point — mid-header, mid-counts, mid-counter,
+    mid-label-table — must raise ValueError cleanly, never hand back a
+    short-read bank (the same contract RHLB enforces)."""
+    blob = _filled(rows=5, n=4000).to_bytes()
+    cut = int(len(blob) * frac)
+    with pytest.raises(ValueError):
+        CountMinBank.from_bytes(blob[:cut])
+    with pytest.raises(ValueError):
+        CountMinBank.from_bytes(blob + b"\x00")  # trailing garbage too
+
+
+def test_cm_bytes_rejects_cut_mid_label_table():
+    rows = 4
+    blob = _filled(rows=rows).to_bytes()
+    counts_end, cells = _blob_layout(rows)
+    # end the payload halfway through the Topkapi label table
+    cut = counts_end + 4 * cells + 4 * (cells // 2)
+    assert cut < len(blob)
+    with pytest.raises(ValueError, match="payload"):
+        CountMinBank.from_bytes(blob[:cut])
+
+
+def test_corrupted_blob_never_leaks_across_rows():
+    """Flipping row j's counters to max values must not move ANY other
+    row's point queries, labels, or top-k report."""
+    rows = 6
+    bank = _filled(rows=rows, n=9000)
+    probe = jnp.asarray(np.arange(64, dtype=np.int32))
+    clean_q = np.asarray(bank.query(probe))
+    clean_v, clean_c = bank.topk(5)
+    counts_end, _ = _blob_layout(rows)
+    row_cells = CFG.depth * CFG.width
+    blob = bytearray(bank.to_bytes())
+    corrupt_row = 3
+    start = counts_end + corrupt_row * row_cells * 4
+    blob[start : start + row_cells * 4] = b"\xff" * (row_cells * 4)
+    fuzzed = CountMinBank.from_bytes(bytes(blob))
+    dirty_q = np.asarray(fuzzed.query(probe))
+    dirty_v, dirty_c = fuzzed.topk(5)
+    for b in range(rows):
+        if b == corrupt_row:
+            continue
+        np.testing.assert_array_equal(dirty_q[b], clean_q[b], err_msg=f"row {b}")
+        np.testing.assert_array_equal(dirty_v[b], clean_v[b], err_msg=f"row {b}")
+        np.testing.assert_array_equal(dirty_c[b], clean_c[b], err_msg=f"row {b}")
+    assert (dirty_q[corrupt_row] == np.uint32(0xFFFFFFFF)).all()
+
+
+# ----------------------------------------------------------------------------
+# the windowed ring: rotation, expiry, RCMW fuzz
+# ----------------------------------------------------------------------------
+
+
+def _filled_window(window=4, rows=3, epochs=5, seed=2):
+    win = WindowedCountMinBank.empty(window, rows, CFG)
+    rng = np.random.default_rng(seed)
+    for e in range(epochs):
+        if e:
+            win = win.advance()
+        n = int(rng.integers(64, 256))
+        keys = jnp.asarray(rng.integers(0, rows, n, dtype=np.int32))
+        items = jnp.asarray(rng.integers(0, 500, n, dtype=np.int32))
+        win = win.observe(keys, items)
+    return win
+
+
+def test_window_rotation_and_expiry():
+    win = WindowedCountMinBank.empty(3, 1, CFG)
+    for e in range(5):
+        if e:
+            win = win.advance()
+        win = win.observe(
+            jnp.zeros(10, jnp.int32), jnp.full(10, e, jnp.int32)
+        )
+    assert win.epoch == 4
+    # epochs 0-1 expired: only epochs 2,3,4 remain in the window
+    assert int(win.window_counts()[0]) == 30
+    est = np.asarray(win.query_window(jnp.arange(5)))
+    assert (est[0, :2] <= 10).all()  # expired probes see only collisions
+    assert (est[0, 2:] >= 10).all()
+    newest = np.asarray(win.query_window(jnp.arange(5), last_k=1))
+    assert newest[0, 4] >= 10 and (newest[0, :4] <= 10).all()
+    vals, cnts = win.topk_window(3)
+    assert set(int(v) for v in vals[0]) >= {2, 3, 4}
+
+
+def test_advance_to_is_monotone_and_expires_whole_ring():
+    win = _filled_window()
+    epoch = win.epoch
+    # a target at or before the current epoch is a no-op
+    same = win.advance_to(epoch - 2)
+    assert same.epoch == epoch
+    np.testing.assert_array_equal(
+        np.asarray(same.counters), np.asarray(win.counters)
+    )
+    with pytest.raises(ValueError, match="steps >= 1"):
+        win.advance(0)
+    # a jump >= W wipes counters, labels, AND votes
+    gone = win.advance_to(epoch + win.window + 3)
+    assert gone.epoch == epoch + win.window + 3
+    assert np.asarray(gone.counters).sum() == 0
+    assert np.asarray(gone.labels).sum() == 0
+    assert np.asarray(gone.label_counts).sum() == 0
+    assert int(gone.window_counts().sum()) == 0
+
+
+def test_window_last_k_validation():
+    win = _filled_window(window=4)
+    with pytest.raises(ValueError, match="last_k"):
+        win.window_counts(0)
+    with pytest.raises(ValueError, match="last_k"):
+        win.query_window(jnp.arange(3), last_k=5)
+
+
+def test_windowed_with_rows_grows_in_place():
+    win = _filled_window(rows=2)
+    assert win.with_rows(2) is win
+    grown = win.with_rows(4)
+    assert grown.rows == 4
+    np.testing.assert_array_equal(
+        np.asarray(grown.counters[:, :2]), np.asarray(win.counters)
+    )
+    with pytest.raises(ValueError, match="cannot shrink"):
+        win.with_rows(1)
+
+
+def test_cmw_bytes_roundtrip():
+    win = _filled_window()
+    back = WindowedCountMinBank.from_bytes(win.to_bytes())
+    assert back.cfg == win.cfg
+    assert back.window == win.window and back.rows == win.rows
+    assert int(back.cursor) == int(win.cursor)
+    np.testing.assert_array_equal(np.asarray(back.epochs), np.asarray(win.epochs))
+    np.testing.assert_array_equal(
+        np.asarray(back.counters), np.asarray(win.counters)
+    )
+    np.testing.assert_array_equal(np.asarray(back.labels), np.asarray(win.labels))
+    np.testing.assert_array_equal(
+        np.asarray(back.label_counts), np.asarray(win.label_counts)
+    )
+    np.testing.assert_array_equal(back.counts, win.counts)
+
+
+@pytest.mark.parametrize("frac", [0.0, 0.05, 0.2, 0.45, 0.7, 0.9, 0.999])
+def test_cmw_bytes_rejects_truncation_anywhere(frac):
+    blob = _filled_window().to_bytes()
+    cut = int(len(blob) * frac)
+    with pytest.raises(ValueError):
+        WindowedCountMinBank.from_bytes(blob[:cut])
+    with pytest.raises(ValueError):
+        WindowedCountMinBank.from_bytes(blob + b"\x00")
+
+
+def test_cmw_bytes_rejects_garbage():
+    win = _filled_window(window=3)
+    blob = win.to_bytes()
+    with pytest.raises(ValueError, match="magic"):
+        WindowedCountMinBank.from_bytes(b"NOPE" + blob[4:])
+    with pytest.raises(ValueError, match="version"):
+        WindowedCountMinBank.from_bytes(blob[:4] + b"\x09" + blob[5:])
+    # cursor out of range: the last header field is the uint32 cursor
+    bad_cursor = bytearray(blob)
+    bad_cursor[28:32] = (7).to_bytes(4, "little")
+    with pytest.raises(ValueError, match="cursor"):
+        WindowedCountMinBank.from_bytes(bytes(bad_cursor))
+    # garbage epoch labels violate the slot-congruence ring invariant
+    bad_epochs = bytearray(blob)
+    bad_epochs[32 : 32 + 4 * win.window] = b"\x63\x00\x00\x00" * win.window
+    with pytest.raises(ValueError, match="epoch"):
+        WindowedCountMinBank.from_bytes(bytes(bad_epochs))
+
+
+# ----------------------------------------------------------------------------
+# pytree / jit behavior
+# ----------------------------------------------------------------------------
+
+
+def test_cm_bank_is_a_pytree_and_jits():
+    bank = _filled(rows=3, n=512)
+    leaves = jax.tree_util.tree_leaves(bank)
+    assert len(leaves) == 4  # counters, labels, label_counts, n_items
+
+    @jax.jit
+    def probe(b):
+        return b.query(jnp.arange(16))
+
+    np.testing.assert_array_equal(
+        np.asarray(probe(bank)), np.asarray(bank.query(jnp.arange(16)))
+    )
+    flat, treedef = jax.tree_util.tree_flatten(bank)
+    back = jax.tree_util.tree_unflatten(treedef, flat)
+    assert back.cfg == bank.cfg
+    np.testing.assert_array_equal(np.asarray(back.counters), np.asarray(bank.counters))
+
+
+def test_windowed_cm_bank_is_a_pytree():
+    win = _filled_window(window=3, rows=2)
+    flat, treedef = jax.tree_util.tree_flatten(win)
+    assert len(flat) == 6  # 4 tables + cursor + epochs; cfg is static
+    back = jax.tree_util.tree_unflatten(treedef, flat)
+    assert back.cfg == win.cfg and back.epoch == win.epoch

@@ -24,18 +24,25 @@ import numpy as np
 import pytest
 
 from repro.sketch import (
+    CMConfig,
     HLLConfig,
     available_bank_backends,
+    available_cm_backends,
+    available_cm_window_backends,
     available_estimators,
     available_window_backends,
 )
 from tests.hypothesis_compat import HAVE_HYPOTHESIS, given, st
 from tests.reference_model import (
+    CounterReferenceModel,
+    CountMinSUT,
     DenseBankSUT,
     DenseWindowSUT,
     HybridBankSUT,
     HybridWindowSUT,
     ReferenceModel,
+    WindowedCountMinSUT,
+    assert_cm_bounds,
     assert_within_band,
     gen_ops,
     gen_stream,
@@ -155,6 +162,132 @@ def test_windowed_expiry_tracks_oracle_exactly():
         assert oracle.true_cardinalities().sum() == 0
         assert sut.counts().sum() == 0
         assert np.asarray(sut.estimates()).sum() == 0
+
+
+# ----------------------------------------------------------------------------
+# count-min family vs the dict-of-Counters oracle (DESIGN.md §13)
+# ----------------------------------------------------------------------------
+
+CM_CFG = CMConfig(depth=4, width=128, seed=11)
+CM_PROBE = np.arange(50, dtype=np.int32)
+
+
+def _cm_checker(collected):
+    def check(sut, oracle):
+        est = sut.query(CM_PROBE)
+        assert_cm_bounds(
+            est,
+            oracle.true_counts(CM_PROBE),
+            oracle.observed(),
+            CM_CFG.width,
+            CM_CFG.depth,
+        )
+        np.testing.assert_array_equal(sut.counts(), oracle.observed())
+        collected.append(sut.canonical())
+
+    return check
+
+
+def _run_cm_differential(seed, windowed=False, window=4):
+    """The count-min twin of _run_differential: same shared op grammar
+    (update / merge-or-advance / roundtrip / estimate), every registered
+    cm backend held bit-identical to jnp on the full canonical state
+    (counters AND Topkapi labels AND exact counters), every estimate
+    point held to the exact-oracle sandwich bounds."""
+    backends = (
+        available_cm_window_backends() if windowed else available_cm_backends()
+    )
+    plans = make_plans(backends)
+    states = {}
+    for name, plan in plans.items():
+        rng = np.random.default_rng(seed)  # same ops for every backend
+        ops = gen_ops(rng, ROWS, n_ops=8, windowed=windowed)
+        oracle = CounterReferenceModel(
+            ROWS, window=window if windowed else None
+        )
+        if windowed:
+            sut = WindowedCountMinSUT(window, ROWS, CM_CFG, plan=plan)
+        else:
+            sut = CountMinSUT(ROWS, CM_CFG, plan=plan)
+        collected = []
+        run_ops(ops, sut, oracle, on_estimate=_cm_checker(collected))
+        states[name] = collected
+    ref = states["jnp"]
+    for name, collected in states.items():
+        assert len(collected) == len(ref)
+        for step, (got, want) in enumerate(zip(collected, ref)):
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(
+                    g, w, err_msg=f"cm backend {name} diverged at step {step}"
+                )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_flat_countmin_matches_oracle_and_backends(seed):
+    _run_cm_differential(seed, windowed=False)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_windowed_countmin_matches_oracle_and_backends(seed):
+    _run_cm_differential(seed, windowed=True)
+
+
+def test_windowed_countmin_expiry_tracks_oracle_exactly():
+    """Advancing past W expires the oracle and the ring in lockstep."""
+    window = 3
+    oracle = CounterReferenceModel(ROWS, window=window)
+    sut = WindowedCountMinSUT(window, ROWS, CM_CFG)
+    rng = np.random.default_rng(9)
+    for epoch in range(2 * window):
+        keys, items = gen_stream(rng, ROWS, 300, value_space=50)
+        sut.update(keys, items)
+        oracle.update(keys, items)
+        np.testing.assert_array_equal(sut.counts(), oracle.observed())
+        assert_cm_bounds(
+            sut.query(CM_PROBE),
+            oracle.true_counts(CM_PROBE),
+            oracle.observed(),
+            CM_CFG.width,
+            CM_CFG.depth,
+        )
+        sut.advance(1)
+        oracle.advance(1)
+    # everything beyond the window is gone on both sides
+    sut.advance(window)
+    oracle.advance(window)
+    assert oracle.observed().sum() == 0
+    assert sut.counts().sum() == 0
+    assert sut.query(CM_PROBE).sum() == 0
+
+
+def test_topk_recall_on_zipf_traffic():
+    """topk(k) recovers >= 0.9 of the true top-10 under Zipf(1.1) streams
+    (the acceptance bar: heavy ids must survive Topkapi label voting and
+    count-min ranking at production-ish d=4, w=1024)."""
+    rows = 3
+    cfg = CMConfig(depth=4, width=1024, seed=7)
+    rng = np.random.default_rng(42)
+    n = 50_000
+    items = np.minimum(rng.zipf(1.1, size=n), 1 << 20).astype(np.int32)
+    keys = rng.integers(0, rows, n).astype(np.int32)
+    oracle = CounterReferenceModel(rows)
+    sut = CountMinSUT(rows, cfg)
+    sut.update(keys, items)
+    oracle.update(keys, items)
+    got_vals, got_counts = sut.topk(10)
+    truth = oracle.top_k(10)
+    recalls = []
+    for r in range(rows):
+        true_set = set(truth[r])
+        got = set(int(v) for v in got_vals[r])
+        recalls.append(len(got & true_set) / max(1, len(true_set)))
+    assert float(np.mean(recalls)) >= 0.9, recalls
+    # the reported counts are count-min estimates: upper bounds on truth
+    live = oracle.live_counters()
+    for r in range(rows):
+        for v, c in zip(got_vals[r], got_counts[r]):
+            if c > 0:
+                assert int(c) >= live[r][int(v)]
 
 
 # ----------------------------------------------------------------------------
