@@ -7,13 +7,25 @@ B in {64, 1024, 16384}.  For each size the bench measures
 
   * actual storage bytes of both representations and the reduction factor
     (the acceptance gate: >= 4x at B=16384),
-  * full-stream ingest latency for both paths,
+  * full-stream ingest latency for both paths — the hybrid timing
+    INCLUDES the deferred append-buffer compaction (the final
+    block-until-ready settles the bank), so the reported
+    ``hybrid_over_dense_ratio`` is the honest end-to-end cost of the
+    amortized path (full-run gate: <= 1.5x dense at every B; smoke runs
+    gate at 2.0x to absorb tiny-stream noise),
   * estimate quality: hybrid estimates vs the TRUE per-row distinct
-    counts, asserted within the estimator's 3-sigma band (+ small-count
-    slack), and
+    counts, asserted within an order-statistic-corrected error band —
+    the per-row tolerance uses the Bonferroni z for the max over B
+    normal deviates (z = Phi^-1(1 - alpha / (2B)) at alpha = 0.01, e.g.
+    ~4.99 sigma at B=16384: with 16384 rows a ~4.5-sigma worst row is
+    EXPECTED, so a flat 3-sigma claim would be wrong) plus small-count
+    slack for the near-empty cold rows where sigma*true is
+    sub-collision-sized, and
   * bit-identity: the hybrid bank materialized to dense must equal the
     dense bank register-for-register — promoted rows included, which
-    pins "promoted == dense-from-scratch" at benchmark scale.
+    pins "promoted == dense-from-scratch" at benchmark scale — and the
+    hybrid estimates (LC fast path for sparse rows) must equal the dense
+    bank's device estimates bit-for-bit.
 
 Writes ``BENCH_sparse.json`` (smoke runs write the gitignored
 ``BENCH_sparse.smoke.json`` sibling, like every other JSON bench).
@@ -22,6 +34,7 @@ Writes ``BENCH_sparse.json`` (smoke runs write the gitignored
 from __future__ import annotations
 
 import json
+import statistics
 import time
 
 import jax
@@ -29,13 +42,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.sketch import HLLConfig, HybridBank, SketchBank
+from repro.sketch import HLLConfig, HybridBank, SketchBank, estimate_many
 
 JSON_PATH = "BENCH_sparse.json"
 BANK_SIZES = (64, 1024, 16384)
 HOT_FRAC = 0.1  # <= 10% of rows take ~90% of the traffic (acceptance)
 HOT_SHARE = 0.9
 CHUNKS = 4
+BAND_ALPHA = 0.01  # family-wise error budget for the B-row estimate band
+RATIO_GATE_FULL = 1.5  # hybrid/dense ingest ceiling, full runs (§12)
+RATIO_GATE_SMOKE = 2.0  # looser smoke ceiling: tiny streams, fixed overheads
 
 
 def _zipf_traffic(rows: int, n: int, rng):
@@ -55,6 +71,16 @@ def _true_distinct(keys: np.ndarray, items: np.ndarray, rows: int):
     return np.bincount((uniq >> 31).astype(np.int64), minlength=rows)
 
 
+def _band_z(rows: int, alpha: float = BAND_ALPHA) -> float:
+    """Bonferroni z for the max error over ``rows`` estimate deviates.
+
+    Per-row two-sided budget alpha / rows, so P(any row outside the band)
+    <= alpha under the estimator's normal error model — the
+    order-statistic correction the flat 3-sigma claim was missing.
+    """
+    return statistics.NormalDist().inv_cdf(1.0 - alpha / (2.0 * rows))
+
+
 def _ingest_all(empty_bank, key_chunks, item_chunks):
     bank = empty_bank
     for k, it in zip(key_chunks, item_chunks):
@@ -62,6 +88,8 @@ def _ingest_all(empty_bank, key_chunks, item_chunks):
     if isinstance(bank, SketchBank):
         jax.block_until_ready(bank.registers)
     else:
+        # .dense_rows / .pairs settle the append buffer: deferred
+        # compaction cost lands INSIDE the timed region, by design
         jax.block_until_ready(bank.dense if bank.dense_rows else bank.pairs)
     return bank
 
@@ -81,6 +109,7 @@ def run(full: bool = False, smoke: bool = False):
     cfg = HLLConfig(p=8, hash_bits=64) if smoke else HLLConfig(p=12, hash_bits=64)
     sizes = (16, 64) if smoke else BANK_SIZES
     sigma = 1.04 / np.sqrt(cfg.m)
+    ratio_gate = RATIO_GATE_SMOKE if smoke else RATIO_GATE_FULL
 
     results = []
     for rows in sizes:
@@ -119,22 +148,35 @@ def run(full: bool = False, smoke: bool = False):
             raise AssertionError(
                 f"hybrid ingest diverged from dense registers at B={rows}"
             )
+        # ...and the hybrid estimates (LC fast path on sparse rows) must
+        # equal the dense device estimates bit-for-bit (DESIGN.md §12)
+        est = np.asarray(hybrid.estimate_many())
+        dense_est = np.asarray(estimate_many(dense.registers, cfg))
+        if not np.array_equal(est, dense_est):
+            worst = int(np.argmax(est != dense_est))
+            raise AssertionError(
+                f"B={rows} row {worst}: hybrid estimate {est[worst]!r} != "
+                f"dense estimate {dense_est[worst]!r}"
+            )
 
-        # 3-sigma band vs the exact oracle (small-count slack for the
-        # near-empty cold rows, where sigma*true is sub-collision-sized)
+        # order-statistic-corrected band vs the exact oracle: Bonferroni z
+        # for the max over B rows, + small-count slack for cold rows
+        z = _band_z(rows)
         true = _true_distinct(keys, items, rows)
-        est = np.asarray(hybrid.estimate_many(), np.float64)
-        tol = 3.0 * sigma * true + 3.0 * np.sqrt(true + 1.0)
-        err = np.abs(est - true)
+        est64 = est.astype(np.float64)
+        tol = z * sigma * true + 3.0 * np.sqrt(true + 1.0)
+        err = np.abs(est64 - true)
         if not (err <= tol).all():
             worst = int(np.argmax(err - tol))
             raise AssertionError(
-                f"B={rows} row {worst}: estimate {est[worst]:.1f} vs true "
-                f"{true[worst]} leaves the 3-sigma band (tol {tol[worst]:.1f})"
+                f"B={rows} row {worst}: estimate {est64[worst]:.1f} vs true "
+                f"{true[worst]} leaves the {z:.2f}-sigma Bonferroni band "
+                f"(tol {tol[worst]:.1f})"
             )
 
         density = hybrid.density()
         reduction = dense.nbytes / hybrid.nbytes
+        ratio = hybrid_s / dense_s
         row = dict(
             B=rows,
             n_items=int(n),
@@ -146,7 +188,10 @@ def run(full: bool = False, smoke: bool = False):
             memory_reduction=reduction,
             dense_ingest_us=dense_s * 1e6,
             hybrid_ingest_us=hybrid_s * 1e6,
+            ingest_items_per_s=n / hybrid_s,
+            hybrid_over_dense_ratio=ratio,
             occupancy_mean=density["occupancy_mean"],
+            err_band_sigma=float(z),
             max_err_sigma=float((err / np.maximum(sigma * true, 1e-9)).max()),
             bit_identical=True,
         )
@@ -157,8 +202,15 @@ def run(full: bool = False, smoke: bool = False):
             f"B={rows} mem {dense.nbytes / 2**20:.1f}MiB->"
             f"{hybrid.nbytes / 2**20:.1f}MiB ({reduction:.1f}x) "
             f"promoted={hybrid.dense_rows} ingest dense={dense_s * 1e6:.0f}us "
-            f"hybrid={hybrid_s * 1e6:.0f}us",
+            f"hybrid={hybrid_s * 1e6:.0f}us ({ratio:.2f}x, "
+            f"{n / hybrid_s / 1e6:.1f}M items/s)",
         )
+        if ratio > ratio_gate:
+            # the §12 perf gate the append-buffer path exists to hold
+            raise AssertionError(
+                f"hybrid ingest is {ratio:.2f}x dense at B={rows}, over "
+                f"the {ratio_gate}x {'smoke ' if smoke else ''}gate"
+            )
 
     if not smoke and results[-1]["memory_reduction"] < 4.0:
         # the §12 acceptance gate: >= 4x at the largest bank size
@@ -170,6 +222,7 @@ def run(full: bool = False, smoke: bool = False):
     out = {
         "config": {"p": cfg.p, "hash_bits": cfg.hash_bits, "m": cfg.m},
         "traffic": {"hot_frac": HOT_FRAC, "hot_share": HOT_SHARE},
+        "band": {"alpha": BAND_ALPHA, "correction": "bonferroni_max_over_B"},
         "smoke": smoke,
         "banks": results,
     }

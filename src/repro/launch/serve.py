@@ -136,8 +136,11 @@ def main():
     # every (prompt + generated) token routed by its request index with ONE
     # hybrid-routed update_many pass (DESIGN.md §9, §12); requests with few
     # distinct tokens stay in the sparse COO layout and the bank reports
-    # its own storage win.  The bank shares the board's config + plan so
-    # both readings stay comparable.
+    # its own storage win.  Sparse-destined pairs ride the deferred append
+    # buffer until estimate_many()/density() below settle the bank — the
+    # first read IS the flush seam, no explicit compact() call needed.
+    # The bank shares the board's config + plan so both readings stay
+    # comparable.
     bank = HybridBank.empty(
         B, board.cfg, threshold=board.plan.sparse_threshold
     )

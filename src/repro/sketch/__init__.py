@@ -68,22 +68,26 @@ from repro.sketch.plan import (  # noqa: F401
     DEFAULT_PIPELINES,
     DEFAULT_PLAN,
     ExecutionPlan,
+    SparseDedup,
     available_backends,
     available_bank_backends,
     available_cm_backends,
     available_cm_window_backends,
+    available_sparse_backends,
     available_window_backends,
     example_plans,
     get_backend,
     get_bank_backend,
     get_cm_backend,
     get_cm_window_backend,
+    get_sparse_backend,
     get_window_backend,
     reference_plan,
     register_backend,
     register_bank_backend,
     register_cm_backend,
     register_cm_window_backend,
+    register_sparse_backend,
     register_window_backend,
 )
 
@@ -103,7 +107,11 @@ from repro.sketch.estimators import (  # noqa: F401
 # importing backends registers the built-in "jnp"/"pallas"/"pallas_pipelined"
 # entries; it must come after .plan (registry) and .hll (primitives).
 from repro.sketch import backends  # noqa: F401  (registration side effect)
-from repro.sketch.dispatch import datapath_tap, update_registers  # noqa: F401
+from repro.sketch.dispatch import (  # noqa: F401
+    datapath_tap,
+    dedup_pairs,
+    update_registers,
+)
 from repro.sketch.carrier import HyperLogLog  # noqa: F401
 from repro.sketch.bank import (  # noqa: F401
     SketchBank,

@@ -31,10 +31,12 @@ from repro.sketch.hll import HLLConfig
 from repro.sketch.plan import (
     DEFAULT_PIPELINES,
     ExecutionPlan,
+    SparseDedup,
     register_backend,
     register_bank_backend,
     register_cm_backend,
     register_cm_window_backend,
+    register_sparse_backend,
     register_window_backend,
 )
 
@@ -471,6 +473,172 @@ def _pallas_pipelined_window_backend(
     _window = _window_kernel_module()
     row_block = min(row_block, max(1, _window.MAX_BLOCK_CELLS // cfg.m))
     return window_fold(ring, mask, row_block=row_block, interpret=plan.interpret)
+
+
+# ----------------------------------------------------------------------------
+# HybridBank sparse dedup (append-buffer compaction; DESIGN.md §12)
+# ----------------------------------------------------------------------------
+
+
+def _sparse_kernel_module():
+    from repro.kernels import sparse_scatter as _sparse
+
+    assert _sparse.LANES == LANES
+    return _sparse
+
+
+# the jnp dedup picks its layout by stream-vs-bank size: below this fraction
+# of the bank's rows*m cell count the O(n log n) sort wins, above it the
+# O(n + rows*m) scatter does (measured crossover on CPU is ~cells/45; /32
+# keeps a safety margin on the scatter side, whose cost is flat in n)
+_SPARSE_CELLS_CROSSOVER = 32
+
+
+@partial(jax.jit, static_argnames=("rows", "m"))
+def sparse_merge_sorted(row, bucket, rank, *, rows, m):
+    """Sorted-stream dedup: two-pass stable argsort over (row, bucket) cells.
+
+    ONE stable sort by rank ascending, then (stably) by ``row * m + bucket``
+    cell id, so within each equal-cell run ranks ascend and the LAST element
+    carries the cell's max.  Invalid entries (padding, out-of-range rows)
+    sort to a trailing sentinel cell and never survive.  Cost tracks the
+    stream, not the bank — the right trade for small compactions.
+    """
+    valid = (row >= 0) & (row < rows)
+    cell = jnp.where(valid, row * m + bucket, rows * m)
+    order1 = jnp.argsort(rank, stable=True)
+    cell1, rank1 = cell[order1], rank[order1]
+    order2 = jnp.argsort(cell1, stable=True)
+    cell_s, rank_s = cell1[order2], rank1[order2]
+    is_last = jnp.concatenate([cell_s[1:] != cell_s[:-1], jnp.ones((1,), bool)])
+    survivor = is_last & (cell_s < rows * m)
+    row_s = cell_s // m
+    distinct = jnp.bincount(jnp.where(survivor, row_s, rows), length=rows + 1)[
+        :rows
+    ]
+    return cell_s, rank_s, survivor, distinct.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("rows", "m"))
+def sparse_merge_cells(row, bucket, rank, *, rows, m):
+    """Dense-cells dedup: ONE segment-max over ``row * m + bucket`` cells.
+
+    The same fused scatter as ``bank_update_jnp``, landing in a zeroed
+    (rows, m) max-rank map instead of live registers; per-row distinct
+    counts fall out of one popcount over the map.  Cost is O(n + rows*m)
+    flat in the stream — the right trade once the stream rivals the bank.
+    """
+    valid = (row >= 0) & (row < rows)
+    seg = jnp.where(valid, row * m + bucket, rows * m)
+    cells = jax.ops.segment_max(
+        jnp.where(valid, rank, 0).astype(jnp.int32),
+        seg,
+        num_segments=rows * m + 1,
+    )[: rows * m].reshape(rows, m)
+    # segment_max fills untouched segments with INT32_MIN; the cells
+    # contract is "0 = empty" (what the pallas kernel's zeroed scratch
+    # produces), so clamp before anything scans for nonzero cells
+    cells = jnp.maximum(cells, 0)
+    distinct = jnp.sum(cells > 0, axis=1, dtype=jnp.int32)
+    return cells, distinct
+
+
+def sparse_merge(
+    row,
+    bucket,
+    rank,
+    rows: int,
+    cfg: HLLConfig,
+    *,
+    row_block: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """Pallas sparse dedup: the sparse_scatter kernel over COO row blocks.
+
+    The triple stream tiles like every other kernel stream; padding and
+    out-of-range rows are masked to rank 0 (the bucket-max identity), never
+    clamped into a neighbor.  The kernel keeps each row block's
+    ``row_block * m`` pair cells VMEM-resident for the whole sweep and
+    flushes per-row distinct counts alongside the deduped map, so promotion
+    detection costs no second pass.  Small-m banks only (the hll_fused
+    trade); the default row_block is the widest under the VMEM cell cap.
+    """
+    _sparse = _sparse_kernel_module()
+    interpret = _default_interpret() if interpret is None else interpret
+    m = cfg.m
+    if m > _sparse.MAX_BLOCK_CELLS:
+        raise ValueError(
+            f"pallas sparse dedup supports m <= {_sparse.MAX_BLOCK_CELLS} "
+            f"(p <= 12); use the jnp dedup path for m={m}"
+        )
+    flat_row = jnp.asarray(row).reshape(-1).astype(jnp.int32)
+    valid = (flat_row >= 0) & (flat_row < rows)
+    tile_items = _sparse.DEFAULT_BLOCK_ROWS * LANES
+    keys_t, _ = _pad_to_tiles(jnp.where(valid, flat_row, 0), tile_items)
+    idx_t, _ = _pad_to_tiles(
+        jnp.where(valid, jnp.asarray(bucket).reshape(-1), 0).astype(jnp.int32),
+        tile_items,
+    )
+    rank_t, _ = _pad_to_tiles(
+        jnp.where(valid, jnp.asarray(rank).reshape(-1), 0).astype(jnp.int32),
+        tile_items,
+    )
+    if row_block is None:
+        row_block = max(1, _sparse.MAX_BLOCK_CELLS // m)
+    row_block = min(row_block, rows)
+    padded_rows = -(-rows // row_block) * row_block
+    cells, distinct = _sparse.sparse_scatter_coo(
+        keys_t,
+        idx_t,
+        rank_t,
+        rows=padded_rows,
+        m=m,
+        row_block=row_block,
+        interpret=interpret,
+    )
+    # phantom padding rows receive nothing (keys < rows) and are sliced off
+    return cells[:rows], distinct[:rows]
+
+
+@register_sparse_backend("jnp")
+def _jnp_sparse_backend(row, bucket, rank, rows, cfg: HLLConfig, plan: ExecutionPlan):
+    m = cfg.m
+    n = row.shape[0]
+    if n * _SPARSE_CELLS_CROSSOVER >= rows * m:
+        cells, distinct = sparse_merge_cells(row, bucket, rank, rows=rows, m=m)
+        return SparseDedup(distinct=distinct, cells=cells)
+    cell_s, rank_s, survivor, distinct = sparse_merge_sorted(
+        row, bucket, rank, rows=rows, m=m
+    )
+    return SparseDedup(
+        distinct=distinct, cell_s=cell_s, rank_s=rank_s, survivor=survivor
+    )
+
+
+@register_sparse_backend("pallas")
+def _pallas_sparse_backend(
+    row, bucket, rank, rows, cfg: HLLConfig, plan: ExecutionPlan
+):
+    # one datapath, widest row block under the VMEM cap
+    cells, distinct = sparse_merge(
+        row, bucket, rank, rows, cfg, interpret=plan.interpret
+    )
+    return SparseDedup(distinct=distinct, cells=cells)
+
+
+@register_sparse_backend("pallas_pipelined")
+def _pallas_pipelined_sparse_backend(
+    row, bucket, rank, rows, cfg: HLLConfig, plan: ExecutionPlan
+):
+    # tile the dedup over k pipelines: each grid block owns ceil(B/k) rows,
+    # still under the VMEM cell cap
+    row_block = max(1, -(-rows // plan.pipelines))
+    _sparse = _sparse_kernel_module()
+    row_block = min(row_block, max(1, _sparse.MAX_BLOCK_CELLS // cfg.m))
+    cells, distinct = sparse_merge(
+        row, bucket, rank, rows, cfg, row_block=row_block, interpret=plan.interpret
+    )
+    return SparseDedup(distinct=distinct, cells=cells)
 
 
 # ----------------------------------------------------------------------------

@@ -18,7 +18,12 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.sketch import hll
 from repro.sketch.hll import HLLConfig
-from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, get_backend
+from repro.sketch.plan import (
+    DEFAULT_PLAN,
+    ExecutionPlan,
+    get_backend,
+    get_sparse_backend,
+)
 
 
 def mesh_fold(plan: ExecutionPlan, registers, arrays, apply_fn):
@@ -113,6 +118,37 @@ def update_registers(
     return mesh_fold(
         plan, registers, (flat,), lambda regs, x: backend(regs, x, cfg, plan)
     )
+
+
+def dedup_pairs(
+    row: jnp.ndarray,
+    bucket: jnp.ndarray,
+    rank: jnp.ndarray,
+    rows: int,
+    cfg: HLLConfig,
+    plan: Optional[ExecutionPlan] = None,
+):
+    """Dedup a (row, bucket, rank) triple stream under ``plan`` (DESIGN.md §12).
+
+    The HybridBank compaction's dispatch seam, mirroring
+    :func:`update_registers`: the sparse-capable backend registered under
+    ``plan.backend`` (jnp adaptive sort/scatter, or the sparse_scatter
+    Pallas kernel) collapses the combined live-pair + append-buffer stream
+    to each row's distinct bucket -> max-rank map and per-row distinct
+    counts, returned as a :class:`repro.sketch.plan.SparseDedup`.  The
+    dedup always runs on the caller's device regardless of ``placement`` —
+    compaction consumes host-resident COO state, so there is no stream to
+    shard (mesh plans shard the *ingest* phases instead).  A backend with
+    no sparse registration (e.g. a custom bank backend) falls back to the
+    jnp dedup: every sparse path is bit-identical by contract, so the
+    fallback cannot change the compacted state.
+    """
+    plan = (DEFAULT_PLAN if plan is None else plan).validate()
+    try:
+        backend = get_sparse_backend(plan.backend)
+    except ValueError:
+        backend = get_sparse_backend("jnp")
+    return backend(row, bucket, rank, rows, cfg, plan)
 
 
 def datapath_tap(

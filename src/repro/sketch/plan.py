@@ -82,6 +82,44 @@ _CM_BACKENDS: Dict[str, CMBackend] = {}
 _CM_WINDOW_BACKENDS: Dict[str, Callable] = {}
 
 
+class SparseDedup(NamedTuple):
+    """Canonical dedup of a (row, bucket, rank) triple stream (DESIGN.md §12).
+
+    A sparse backend answers "what is each row's distinct bucket -> max-rank
+    map" for the HybridBank compaction step, in one of two layouts (both
+    enumerate every live row's buckets in ascending order, so the compacted
+    COO pairs, promoted registers, and distinct counts derived from either
+    are bit-identical):
+
+    * **sorted stream** (``cells=None``): ``cell_s`` holds ``row*m + bucket``
+      ids sorted ascending with padding at a trailing sentinel, ``rank_s``
+      the co-sorted ranks, and ``survivor`` marks the last (max-rank) entry
+      of each live cell run — the argsort form, cost O(n log n) in the
+      stream length, which wins when the stream is small next to the bank.
+    * **dense cells** (``cells`` set): ``cells`` is the (rows, m) int32
+      max-rank map itself (0 = untouched bucket) and the stream fields are
+      None — the scatter form (jnp segment-max or the sparse_scatter Pallas
+      kernel), cost O(n + rows*m), which wins once the stream rivals the
+      bank's cell count.
+
+    ``distinct`` is always the (rows,) int32 per-row distinct-bucket count.
+    """
+
+    distinct: "jax.Array"
+    cells: Optional["jax.Array"] = None
+    cell_s: Optional["jax.Array"] = None
+    rank_s: Optional["jax.Array"] = None
+    survivor: Optional["jax.Array"] = None
+
+
+# backend name -> fn(row, bucket, rank, rows, cfg, plan) -> SparseDedup.
+# The HybridBank append-buffer compaction (DESIGN.md §12) dispatches its
+# dedup through this axis; entries register under the SAME names as the
+# other axes so one ExecutionPlan drives eager ingest, bank ingest, window
+# folds, and sparse compaction alike.
+_SPARSE_BACKENDS: Dict[str, Callable] = {}
+
+
 def register_backend(name: str) -> Callable[[Callable], Callable]:
     """Decorator: register an aggregation backend under ``name``."""
 
@@ -167,6 +205,26 @@ def register_cm_window_backend(name: str) -> Callable[[Callable], Callable]:
     return deco
 
 
+def register_sparse_backend(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a HybridBank dedup/compaction path under ``name``.
+
+    The signature is fn(row, bucket, rank, rows, cfg, plan) ->
+    :class:`SparseDedup`, where the int32 triple arrays carry the combined
+    live-pair + append-buffer stream (entries with ``row`` outside
+    [0, rows) are padding and must not survive).  Every entry must produce
+    compacted pairs, promoted registers, and distinct counts bit-identical
+    to the jnp reference (tests/test_sparse.py, tests/test_differential.py).
+    """
+
+    def deco(fn: Callable) -> Callable:
+        if name in _SPARSE_BACKENDS:
+            raise ValueError(f"sparse backend {name!r} already registered")
+        _SPARSE_BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
 def get_backend(name: str) -> Callable:
     try:
         return _BACKENDS[name]
@@ -216,6 +274,16 @@ def get_cm_window_backend(name: str) -> Callable:
         ) from None
 
 
+def get_sparse_backend(name: str) -> Callable:
+    try:
+        return _SPARSE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"backend {name!r} has no sparse dedup path; sparse-capable: "
+            f"{sorted(_SPARSE_BACKENDS)}"
+        ) from None
+
+
 def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_BACKENDS))
 
@@ -234,6 +302,10 @@ def available_cm_backends() -> Tuple[str, ...]:
 
 def available_cm_window_backends() -> Tuple[str, ...]:
     return tuple(sorted(_CM_WINDOW_BACKENDS))
+
+
+def available_sparse_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_SPARSE_BACKENDS))
 
 
 @dataclasses.dataclass(frozen=True)

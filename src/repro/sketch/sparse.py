@@ -14,30 +14,42 @@ A ``HybridBank`` keeps every row in one of two representations:
 * **sparse** — the row's distinct ``(bucket_idx, rank)`` pairs, packed as
   ``bucket << 8 | rank`` int32 values in a capped per-row COO buffer of
   shape (B, C).  C adapts to the actual occupancy of the sparse rows
-  (grown/shrunk at ingest), so near-empty tenants cost a few dozen bytes
-  instead of m.
+  (grown/shrunk at compaction), so near-empty tenants cost a few dozen
+  bytes instead of m.
 * **dense** — the usual (m,) uint8 register row, held in a compact
-  (D, m) block that only promoted rows occupy (``dense_slot`` maps row ->
+  (D, m) block that only promoted rows occupy (``slot_map`` maps row ->
   block slot, -1 for sparse rows).
 
 **Promotion contract.** A row is promoted exactly when its distinct-bucket
 count crosses ``threshold`` (default m // 4): sparse rows always satisfy
 ``len <= threshold``.  Promotion materializes the row's full
-bucket -> max-rank map with one scatter, so a promoted row's registers are
-**bit-identical** to dense-from-scratch ingestion of the same stream, and
-estimates cannot shift at the boundary (tests/test_sparse.py).  Promotion
-is one-way; ``merge`` keeps dense mode infectious (a row dense on either
-side stays dense).
+bucket -> max-rank map, so a promoted row's registers are **bit-identical**
+to dense-from-scratch ingestion of the same stream, and estimates cannot
+shift at the boundary (tests/test_sparse.py).  Promotion is one-way;
+``merge`` keeps dense mode infectious (a row dense on either side stays
+dense).
 
-**Fused ingest.** ``update_many(keys, items, plan)`` routes the whole
-keyed stream in one pass with no python loop over rows: dense-destined
-items dispatch through the registered bank backend of ``plan`` (the §9
-scatter — jnp or the Pallas bank kernel), sparse-destined items merge
-through ONE two-pass stable sort over (row*m + bucket) cells that
-deduplicates to per-cell max rank, recompacts every sparse row, and
-detects promotions for the whole bank at once.  The §9 key-routing
-contract holds unchanged: out-of-range keys are dropped, never leaked,
-and never counted.
+**Amortized ingest (append buffer + deferred compaction).**
+``update_many(keys, items, plan)`` routes the whole keyed stream in one
+pass with no python loop over rows: dense-destined items dispatch through
+the registered bank backend of ``plan`` (the §9 scatter — jnp or the
+Pallas bank kernel), while sparse-destined items land in a per-bank
+**append buffer** of raw (row, item) entries with NO dedup — an O(new)
+append, so steady-state ingest cost tracks new pairs instead of all live
+pairs.  Dedup runs as a **compaction** step only under capacity pressure
+(the buffer outgrowing ``max(_FLUSH_MIN_PAIRS, _FLUSH_FACTOR * live)``)
+or before any read — every estimate / serialize / merge / to_dense /
+introspection surface settles the bank first, so deferral is invisible:
+compacted state is bit-identical to eagerly deduplicating every batch
+(the register lattice is an associative, commutative, idempotent max).
+Compaction hashes the buffered items once (pow2-padded, jitted), re-emits
+the live COO pairs as triples, and dispatches the combined stream through
+the **sparse backend registry** (``register_sparse_backend`` /
+``dedup_pairs``): the jnp entry picks sort-merge or segment-max scatter by
+stream-vs-bank size, the pallas entries run the ``sparse_scatter`` kernel
+(VMEM-resident pair tiles per COO row block) — all bit-identical.  The §9
+key-routing contract holds unchanged: out-of-range keys are dropped,
+never buffered, and never counted.
 
 **Estimation.** ``estimate_many`` finalizes sparse rows with the
 linear-counting fast path: a sparse row has at most ``threshold <= m/2``
@@ -56,11 +68,13 @@ pair count + sorted (u16 bucket, u8 rank) pairs).  ``from_bytes`` parses
 v2 strictly (mode flags, pair ordering, rank ranges, exact length) and
 still accepts v1 dense blobs — version-gated, producing an all-dense
 hybrid — while ``SketchBank.from_bytes`` keeps rejecting v2 with a
-targeted error.
+targeted error.  Serialization always writes the compacted state: the
+append buffer is transient and never hits the wire.
 
 ``HybridBank`` is host-orchestrated (promotion reshapes the dense block),
 so unlike ``SketchBank`` it is NOT a jit-traceable pytree; the fused
-device work happens inside the jitted sort-merge/scatter kernels below.
+device work happens inside the jitted dedup/scatter kernels behind
+``dedup_pairs``.
 """
 
 from __future__ import annotations
@@ -68,7 +82,7 @@ from __future__ import annotations
 import dataclasses
 import struct
 from functools import partial
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,8 +98,9 @@ from repro.sketch.bank import (
     update_bank_registers,
 )
 from repro.sketch.carrier import HyperLogLog
+from repro.sketch.dispatch import dedup_pairs
 from repro.sketch.hll import HLLConfig
-from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan
+from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, SparseDedup
 
 _PACK_SHIFT = 8  # packed pair = bucket << 8 | rank (rank <= 61 fits a byte)
 _PACK_MASK = (1 << _PACK_SHIFT) - 1
@@ -95,6 +110,17 @@ _THRESHOLD = struct.Struct("<I")
 _NPAIRS = struct.Struct("<H")
 _PAIR = struct.Struct("<HB")
 MODE_SPARSE, MODE_DENSE = 0, 1
+
+# Append-buffer pressure policy (DESIGN.md §12): a compaction is forced from
+# inside update_many only once the buffered raw pairs pass BOTH floors —
+# an absolute floor (below it the buffer is cheap: 8 bytes/pair of host
+# memory, nothing device-resident) and a multiple of the live deduped pairs
+# (so each compaction ingests at least _FLUSH_FACTOR times the pairs it
+# re-sorts, keeping total compaction work O(total appends) — the classic
+# amortized-doubling argument).  Reads never see the buffer: every
+# estimate/serialize/merge/introspection surface compacts first.
+_FLUSH_MIN_PAIRS = 1 << 22
+_FLUSH_FACTOR = 4
 
 
 def default_threshold(cfg: HLLConfig) -> int:
@@ -115,11 +141,39 @@ def _check_threshold(threshold: int, cfg: HLLConfig) -> int:
     return threshold
 
 
+def _check_cell_space(rows: int, m: int) -> None:
+    """The one guard for every dedup entry: flattened (row, bucket) cell
+    ids must fit int32 (TPU has no 64-bit datapath), or the dedup backends
+    would silently wrap them."""
+    if rows * m >= 1 << 31:
+        raise ValueError(
+            f"bank cell space B*m = {rows}*{m} overflows int32 sort "
+            f"cells; split the fleet across multiple banks"
+        )
+
+
 def _fit_capacity(needed: int, threshold: int) -> int:
     """Smallest pow2-ish pair capacity holding ``needed`` entries."""
     if needed <= 0:
         return 0
     return min(threshold, max(4, 1 << (needed - 1).bit_length()))
+
+
+@dataclasses.dataclass(frozen=True)
+class _PendingLog:
+    """The append buffer: raw sparse-destined (keys, items) sub-streams.
+
+    Appending is a tuple concat of host arrays — O(chunks), no device
+    dispatch, no dedup — so ingest cost between compactions tracks NEW
+    pairs only.  ``plan`` remembers the most recent ingest plan so a
+    read-triggered compaction runs the same registered sparse backend the
+    writer chose (the differential harness depends on this to exercise
+    every backend's dedup path).
+    """
+
+    chunks: Tuple[Tuple[np.ndarray, np.ndarray], ...]
+    total: int
+    plan: ExecutionPlan
 
 
 # ----------------------------------------------------------------------------
@@ -129,45 +183,12 @@ def _fit_capacity(needed: int, threshold: int) -> int:
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _hash_stream(items, cfg: HLLConfig):
-    """Jitted phase-1+3a hash of the sparse-destined sub-stream.
+    """Jitted phase-1+3a hash of the buffered sparse-destined sub-stream.
 
     ``hash_index_rank`` is ~a hundred murmur3 ops; running it eagerly
-    would dominate the whole hybrid ingest pass.
+    would dominate the whole hybrid compaction pass.
     """
     return hll.hash_index_rank(items, cfg)
-
-
-@partial(jax.jit, static_argnames=("rows", "m"))
-def _sort_merge(row, bucket, rank, *, rows, m):
-    """Dedup a (row, bucket, rank) triple stream to per-cell max rank.
-
-    The caller concatenates the existing sparse pairs (extracted to
-    triples, pow2-padded so the sort cost tracks LIVE pairs rather than
-    allocated buffer slots) with the newly hashed stream.  ONE two-pass
-    stable sort over ``row * m + bucket`` cell ids: first by rank
-    ascending, then (stably) by cell, so within each equal-cell run ranks
-    ascend and the LAST element of the run carries the cell's max.
-    Invalid entries (padding, out-of-range rows) sort to a trailing
-    sentinel cell and never survive.  Returns the sorted cells, ranks,
-    the survivor mask (per-cell max of live cells), and the (B,)
-    distinct-bucket counts — everything ingest needs to recompact sparse
-    rows and to detect promotions in one pass, with no loop over rows.
-    """
-    valid = (row >= 0) & (row < rows)
-    cell = jnp.where(valid, row * m + bucket, rows * m)
-    order1 = jnp.argsort(rank, stable=True)
-    cell1, rank1 = cell[order1], rank[order1]
-    order2 = jnp.argsort(cell1, stable=True)
-    cell_s, rank_s = cell1[order2], rank1[order2]
-    is_last = jnp.concatenate(
-        [cell_s[1:] != cell_s[:-1], jnp.ones((1,), bool)]
-    )
-    survivor = is_last & (cell_s < rows * m)
-    row_s = cell_s // m
-    distinct = jnp.bincount(
-        jnp.where(survivor, row_s, rows), length=rows + 1
-    )[:rows]
-    return cell_s, rank_s, survivor, distinct.astype(jnp.int32)
 
 
 @partial(jax.jit, static_argnames=("rows", "m", "cap"))
@@ -197,6 +218,34 @@ def _compact_pairs(cell_s, rank_s, survivor, keep_row, *, rows, m, cap):
     return out.reshape(rows, cap)
 
 
+def _compact_cells(cells_np, keep_row, distinct, *, cap):
+    """Dense-cells twin of ``_compact_pairs``: (B, m) max-rank map -> pairs.
+
+    Host-side on purpose: an XLA scatter over all B*m cells lowers to a
+    serial loop on CPU (seconds at B=16384), while a row-major
+    ``np.flatnonzero`` scan is one vectorized pass — and it emits each
+    row's surviving buckets in ascending order, exactly the slot order
+    the sorted path produces, so the two layouts compact to bit-identical
+    buffers.  ``distinct`` is the dedup's per-row survivor count, reused
+    as the per-row offset base instead of re-counting the mask.
+    """
+    rows, m = cells_np.shape
+    nz = np.flatnonzero(cells_np.reshape(-1))
+    r = nz // m
+    c = nz - r * m
+    sel_rows = keep_row[r]
+    r, c = r[sel_rows], c[sel_rows]
+    kept_counts = np.where(keep_row, distinct, 0)
+    start = np.concatenate([[0], np.cumsum(kept_counts)[:-1]])
+    off = np.arange(r.size) - start[r]
+    pairs = np.full((rows, cap), _EMPTY, np.int32)
+    sel = off < cap
+    pairs[r[sel], off[sel]] = (c[sel].astype(np.int32) << _PACK_SHIFT) | (
+        cells_np[r[sel], c[sel]].astype(np.int32)
+    )
+    return jnp.asarray(pairs)
+
+
 @partial(jax.jit, static_argnames=("slots", "rows", "m"))
 def _materialize_rows(cell_s, rank_s, survivor, slot_of_row, *, slots, rows, m):
     """Scatter surviving pairs of promoted rows into fresh dense registers.
@@ -217,6 +266,62 @@ def _materialize_rows(cell_s, rank_s, survivor, slot_of_row, *, slots, rows, m):
         num_segments=slots * m + 1,
     )
     return regs[: slots * m].reshape(slots, m)
+
+
+def _dedup_products(
+    dd: SparseDedup,
+    keep: np.ndarray,
+    slot_of_row: np.ndarray,
+    *,
+    rows: int,
+    m: int,
+    cap: int,
+    slots: int,
+):
+    """Compacted (B, cap) pairs + (slots, m) promoted registers from a dedup.
+
+    Handles both :class:`SparseDedup` layouts; either way the promoted
+    rows' registers carry the full deduped bucket -> max-rank map (in the
+    cells layout that map IS the register row — promotion is a gather).
+    ``slot_of_row`` must assign slots in ascending row order, which both
+    call sites do.
+    """
+    if dd.cells is not None:
+        cells_np = np.asarray(dd.cells)
+        pairs = _compact_cells(cells_np, keep, np.asarray(dd.distinct), cap=cap)
+        dense = (
+            jnp.asarray(
+                cells_np[np.nonzero(slot_of_row >= 0)[0]].astype(
+                    hll.REGISTER_DTYPE
+                )
+            )
+            if slots
+            else None
+        )
+    else:
+        pairs = _compact_pairs(
+            dd.cell_s,
+            dd.rank_s,
+            dd.survivor,
+            jnp.asarray(keep),
+            rows=rows,
+            m=m,
+            cap=cap,
+        )
+        dense = (
+            _materialize_rows(
+                dd.cell_s,
+                dd.rank_s,
+                dd.survivor,
+                jnp.asarray(slot_of_row),
+                slots=slots,
+                rows=rows,
+                m=m,
+            )
+            if slots
+            else None
+        )
+    return pairs, dense
 
 
 @partial(jax.jit, static_argnames=("rows", "m"))
@@ -265,15 +370,23 @@ def _finalize_histograms(hist, cfg: HLLConfig, estimator: str):
 
 @dataclasses.dataclass(frozen=True)
 class HybridBank:
-    """B same-config sketches, each row sparse (COO pairs) or dense."""
+    """B same-config sketches, each row sparse (COO pairs) or dense.
 
-    pairs: jnp.ndarray  # (B, C) int32 packed bucket<<8|rank, -1 = empty
-    sparse_len: jnp.ndarray  # (B,) int32 distinct buckets (0 for dense rows)
-    dense: jnp.ndarray  # (D, m) uint8 registers of promoted rows
-    dense_slot: jnp.ndarray  # (B,) int32 slot into dense, -1 = sparse
+    The stored fields are the SETTLED state plus the transient append
+    buffer; external readers should use the ``pairs`` / ``sparse_len`` /
+    ``dense`` / ``dense_slot`` properties (or any read method), which
+    compact the buffer first — raw fields are only safe on a bank whose
+    ``pending`` is None.
+    """
+
+    pair_buf: jnp.ndarray  # (B, C) int32 packed bucket<<8|rank, -1 = empty
+    pair_len: jnp.ndarray  # (B,) int32 distinct buckets (0 for dense rows)
+    dense_block: jnp.ndarray  # (D, m) uint8 registers of promoted rows
+    slot_map: jnp.ndarray  # (B,) int32 slot into dense_block, -1 = sparse
     n_items: jnp.ndarray  # (B, 2) uint32 limb pairs, exact per-row counts
     cfg: HLLConfig
     threshold: int  # promote when a row's distinct buckets exceed this
+    pending: Optional[_PendingLog] = None  # un-deduplicated append buffer
 
     # ------------------------------------------------------------------
     # construction
@@ -361,30 +474,146 @@ class HybridBank:
         return cls.from_dense(SketchBank.from_sketches(sketches), threshold)
 
     # ------------------------------------------------------------------
-    # introspection
+    # compaction (the append buffer's one exit; every read routes here)
+    # ------------------------------------------------------------------
+
+    @property
+    def pending_pairs(self) -> int:
+        """Raw (bucket, rank) appends buffered since the last compaction."""
+        return 0 if self.pending is None else self.pending.total
+
+    def _pending_pressure(self) -> bool:
+        """True once the buffer passes both flush floors (module note)."""
+        pend = self.pending
+        if pend is None or pend.total < _FLUSH_MIN_PAIRS:
+            return False
+        live = int(np.asarray(self.pair_len, dtype=np.int64).sum())
+        return pend.total >= max(_FLUSH_MIN_PAIRS, _FLUSH_FACTOR * live)
+
+    def compact(self) -> "HybridBank":
+        """Settle the append buffer: dedup, recompact, promote — one pass.
+
+        Idempotent and cached (a bank is immutable, so its settled form
+        is too): repeated reads on the same instance compact once.  The
+        result is bit-identical to having eagerly deduplicated every
+        ``update_many`` batch — the register lattice is an associative,
+        commutative, idempotent max, so batching order is invisible.
+        """
+        if self.pending is None:
+            return self
+        cached = self.__dict__.get("_settled")
+        if cached is None:
+            cached = self._compact_now()
+            object.__setattr__(self, "_settled", cached)
+        return cached
+
+    def _compact_now(self) -> "HybridBank":
+        pend = self.pending
+        rows, m = len(self), self.cfg.m
+        keys_np = np.concatenate([k for k, _ in pend.chunks])
+        items_np = np.concatenate([v for _, v in pend.chunks])
+        n = keys_np.size
+        # pow2 padding (row = -1, dropped by the dedup validity mask)
+        # bounds jit recompiles of the hash and dedup kernels
+        pad = 1 << max(6, (n - 1).bit_length()) if n else 64
+        items_pad = np.zeros(pad, items_np.dtype)
+        items_pad[:n] = items_np
+        new_rows = np.full(pad, -1, np.int32)
+        new_rows[:n] = keys_np
+        idx, rank = _hash_stream(jnp.asarray(items_pad), self.cfg)
+        old_rows, old_buckets, old_ranks = self._pair_triples()
+        dd = dedup_pairs(
+            jnp.concatenate([jnp.asarray(old_rows), jnp.asarray(new_rows)]),
+            jnp.concatenate([jnp.asarray(old_buckets), idx]),
+            jnp.concatenate([jnp.asarray(old_ranks), rank]),
+            rows,
+            self.cfg,
+            pend.plan,
+        )
+        distinct_np = np.asarray(dd.distinct)
+        slot_np = np.asarray(self.slot_map)
+        was_sparse = slot_np < 0
+        promote = was_sparse & (distinct_np > self.threshold)
+        keep = was_sparse & ~promote
+        cap = _fit_capacity(
+            int(distinct_np[keep].max(initial=0)), self.threshold
+        )
+        promoted = np.nonzero(promote)[0]
+        slot_of_row = np.full(rows, -1, np.int32)
+        slot_of_row[promoted] = np.arange(promoted.size, dtype=np.int32)
+        new_pairs, fresh = _dedup_products(
+            dd, keep, slot_of_row, rows=rows, m=m, cap=cap, slots=promoted.size
+        )
+        new_dense = self.dense_block
+        new_slot = slot_np
+        if promoted.size:
+            new_dense = (
+                jnp.concatenate([new_dense, fresh])
+                if new_dense.shape[0]
+                else fresh
+            )
+            new_slot = slot_np.copy()
+            new_slot[promoted] = self.dense_block.shape[0] + np.arange(
+                promoted.size, dtype=np.int32
+            )
+        return dataclasses.replace(
+            self,
+            pair_buf=new_pairs,
+            pair_len=jnp.asarray(np.where(keep, distinct_np, 0).astype(np.int32)),
+            dense_block=new_dense,
+            slot_map=jnp.asarray(new_slot),
+            pending=None,
+        )
+
+    # ------------------------------------------------------------------
+    # introspection (every surface reads the SETTLED state)
     # ------------------------------------------------------------------
 
     def __len__(self) -> int:
         return int(self.n_items.shape[0])
 
     @property
+    def pairs(self) -> jnp.ndarray:
+        """(B, C) packed pair buffer of the settled state."""
+        return self.compact().pair_buf
+
+    @property
+    def sparse_len(self) -> jnp.ndarray:
+        """(B,) int32 distinct-bucket counts of the settled state."""
+        return self.compact().pair_len
+
+    @property
+    def dense(self) -> jnp.ndarray:
+        """(D, m) uint8 dense block of the settled state."""
+        return self.compact().dense_block
+
+    @property
+    def dense_slot(self) -> jnp.ndarray:
+        """(B,) int32 row -> dense slot map of the settled state."""
+        return self.compact().slot_map
+
+    @property
     def capacity(self) -> int:
         """Current per-row sparse pair capacity C."""
-        return int(self.pairs.shape[1])
+        return int(self.compact().pair_buf.shape[1])
 
     @property
     def dense_rows(self) -> int:
         """Number of promoted rows (the D of the dense block)."""
-        return int(self.dense.shape[0])
+        return int(self.compact().dense_block.shape[0])
 
     @property
     def modes(self) -> np.ndarray:
         """(B,) uint8 row modes: MODE_SPARSE (0) or MODE_DENSE (1)."""
-        return (np.asarray(self.dense_slot) >= 0).astype(np.uint8)
+        return (np.asarray(self.compact().slot_map) >= 0).astype(np.uint8)
 
     @property
     def counts(self) -> np.ndarray:
-        """(B,) exact per-row observation counts as uint64."""
+        """(B,) exact per-row observation counts as uint64.
+
+        Counters update eagerly at ingest (one bincount per batch), so
+        they never wait on a compaction.
+        """
         limbs = np.asarray(self.n_items)
         hi = limbs[:, 0].astype(np.uint64)
         lo = limbs[:, 1].astype(np.uint64)
@@ -392,38 +621,39 @@ class HybridBank:
 
     @property
     def nbytes(self) -> int:
-        """Actual storage footprint of the hybrid representation."""
+        """Storage footprint of the settled hybrid representation."""
+        s = self.compact()
         return int(
-            self.pairs.nbytes
-            + self.sparse_len.nbytes
-            + self.dense.nbytes
-            + self.dense_slot.nbytes
-            + self.n_items.nbytes
+            s.pair_buf.nbytes
+            + s.pair_len.nbytes
+            + s.dense_block.nbytes
+            + s.slot_map.nbytes
+            + s.n_items.nbytes
         )
 
     def density(self) -> dict:
         """Storage introspection: modes, occupancy, and the memory win."""
-        rows = len(self)
-        m = self.cfg.m
-        d = self.dense_rows
-        occ = np.asarray(self.sparse_len).astype(np.int64)
+        s = self.compact()
+        rows = len(s)
+        m = s.cfg.m
+        d = int(s.dense_block.shape[0])
+        occ = np.asarray(s.pair_len).astype(np.int64)
         if d:
-            dense_occ = (np.asarray(self.dense) > 0).sum(axis=1)
+            dense_occ = (np.asarray(s.dense_block) > 0).sum(axis=1)
+            slot_np = np.asarray(s.slot_map)
             occ = occ + np.zeros_like(occ)
-            occ[np.asarray(self.dense_slot) >= 0] = dense_occ[
-                np.asarray(self.dense_slot)[np.asarray(self.dense_slot) >= 0]
-            ]
+            occ[slot_np >= 0] = dense_occ[slot_np[slot_np >= 0]]
         dense_nbytes = rows * m + rows * 8  # what a SketchBank would cost
         return {
             "rows": rows,
             "dense_rows": d,
             "sparse_rows": rows - d,
-            "capacity": self.capacity,
-            "threshold": self.threshold,
+            "capacity": int(s.pair_buf.shape[1]),
+            "threshold": s.threshold,
             "occupancy_mean": float(occ.mean() / m) if rows else 0.0,
-            "nbytes": self.nbytes,
+            "nbytes": s.nbytes,
             "dense_nbytes": dense_nbytes,
-            "reduction": dense_nbytes / self.nbytes if self.nbytes else 0.0,
+            "reduction": dense_nbytes / s.nbytes if s.nbytes else 0.0,
         }
 
     def row(self, i: int) -> HyperLogLog:
@@ -432,16 +662,17 @@ class HybridBank:
         if not -rows <= i < rows:
             raise IndexError(f"row {i} out of range for a {rows}-row bank")
         i = i % rows
-        slot = int(self.dense_slot[i])
+        s = self.compact()
+        slot = int(s.slot_map[i])
         if slot >= 0:
-            regs = self.dense[slot]
+            regs = s.dense_block[slot]
         else:
-            regs_np = np.zeros(self.cfg.m, np.uint8)
-            p = np.asarray(self.pairs[i])
+            regs_np = np.zeros(s.cfg.m, np.uint8)
+            p = np.asarray(s.pair_buf[i])
             p = p[p >= 0]
             regs_np[p >> _PACK_SHIFT] = (p & _PACK_MASK).astype(np.uint8)
             regs = jnp.asarray(regs_np)
-        return HyperLogLog(regs, self.n_items[i], self.cfg)
+        return HyperLogLog(regs, s.n_items[i], s.cfg)
 
     # ------------------------------------------------------------------
     # conversion
@@ -450,13 +681,15 @@ class HybridBank:
     def _pair_triples(self):
         """Live pairs as (row, bucket, rank) int32 triples, pow2-padded.
 
-        The pair buffer allocates capacity C for every row, but only
-        ``sum(sparse_len)`` slots are live; extracting them (host-side,
-        one vectorized pass) keeps the sort-merge cost proportional to
-        LIVE pairs, not B*C, and the pow2 padding (row = -1, dropped by
-        the kernel's validity mask) bounds jit recompiles.
+        Reads the raw ``pair_buf`` — settled banks only (compaction and
+        merge call it after settling).  The pair buffer allocates capacity
+        C for every row, but only ``sum(pair_len)`` slots are live;
+        extracting them (host-side, one vectorized pass) keeps the dedup
+        cost proportional to LIVE pairs, not B*C, and the pow2 padding
+        (row = -1, dropped by the dedup validity mask) bounds jit
+        recompiles.
         """
-        pairs_np = np.asarray(self.pairs)
+        pairs_np = np.asarray(self.pair_buf)
         rows_np, slots = np.nonzero(pairs_np >= 0)
         packed = pairs_np[rows_np, slots]
         p = packed.size
@@ -470,13 +703,15 @@ class HybridBank:
         return row, bucket, rank
 
     def _dense_registers(self) -> jnp.ndarray:
-        """The whole bank materialized as (B, m) uint8 registers."""
-        rows = len(self)
-        regs = _scatter_pairs_dense(self.pairs, rows=rows, m=self.cfg.m)
-        if self.dense_rows:
-            slot = jnp.clip(self.dense_slot, 0, self.dense_rows - 1)
+        """The settled bank materialized as (B, m) uint8 registers."""
+        s = self.compact()
+        rows = len(s)
+        regs = _scatter_pairs_dense(s.pair_buf, rows=rows, m=s.cfg.m)
+        d = int(s.dense_block.shape[0])
+        if d:
+            slot = jnp.clip(s.slot_map, 0, d - 1)
             regs = jnp.where(
-                (self.dense_slot >= 0)[:, None], self.dense[slot], regs
+                (s.slot_map >= 0)[:, None], s.dense_block[slot], regs
             )
         return regs
 
@@ -501,121 +736,81 @@ class HybridBank:
 
         One host-orchestrated pass, no python loop over rows: the
         dense-destined sub-stream dispatches through the bank backend
-        registered under ``plan.backend`` (§9), the sparse-destined
-        sub-stream merges through the fused sort-dedup kernel, and rows
-        whose distinct-bucket count crosses ``threshold`` promote at the
-        end of the batch (order-independent: the register lattice is a
-        max).  Zero-length streams and zero-row banks return ``self``
-        without dispatching any backend.
+        registered under ``plan.backend`` (§9) immediately, while the
+        sparse-destined sub-stream APPENDS to the raw pair buffer — no
+        hash, no dedup, no device dispatch — and only compacts here if
+        the buffer passes the pressure floors (module note).  Promotions
+        therefore fire at compaction rather than per batch, which cannot
+        change the outcome: the register lattice is a max, so the settled
+        state is bit-identical to eager per-batch dedup.  Zero-length
+        streams and zero-row banks return ``self`` without dispatching
+        any backend.
         """
-        flat_keys = jnp.asarray(keys).reshape(-1).astype(jnp.int32)
-        flat_items = jnp.asarray(items).reshape(-1)
-        if flat_keys.shape[0] != flat_items.shape[0]:
+        keys_np = np.asarray(keys).reshape(-1)
+        items_np = np.asarray(items).reshape(-1)
+        if keys_np.shape[0] != items_np.shape[0]:
             raise ValueError(
-                f"keys ({flat_keys.shape[0]}) and items "
-                f"({flat_items.shape[0]}) must flatten to the same length"
+                f"keys ({keys_np.shape[0]}) and items "
+                f"({items_np.shape[0]}) must flatten to the same length"
             )
         rows = len(self)
-        if flat_items.shape[0] == 0 or rows == 0:
+        if items_np.shape[0] == 0 or rows == 0:
             return self
-        m = self.cfg.m
-        if rows * m >= 1 << 31:
-            raise ValueError(
-                f"bank cell space B*m = {rows}*{m} overflows int32 sort "
-                f"cells; split the fleet across multiple banks"
-            )
+        _check_cell_space(rows, self.cfg.m)
         plan = (DEFAULT_PLAN if plan is None else plan).validate()
-        keys_np = np.asarray(flat_keys)
-        items_np = np.asarray(flat_items)
-        slot_np = np.asarray(self.dense_slot)
+        keys_np = keys_np.astype(np.int32, copy=False)
+        slot_np = np.asarray(self.slot_map)
         valid = (keys_np >= 0) & (keys_np < rows)
         dest = np.where(valid, slot_np[np.clip(keys_np, 0, rows - 1)], -1)
         dense_sel = valid & (dest >= 0)
         sparse_sel = valid & (dest < 0)
 
-        new_dense = self.dense
+        new_dense = self.dense_block
         if dense_sel.any():
             new_dense = update_bank_registers(
-                self.dense,
+                self.dense_block,
                 jnp.asarray(dest[dense_sel]),
                 jnp.asarray(items_np[dense_sel]),
                 self.cfg,
                 plan,
             )
 
-        new_pairs, new_len, new_slot = self.pairs, self.sparse_len, slot_np
+        pending = self.pending
         if sparse_sel.any():
-            idx, rank = _hash_stream(jnp.asarray(items_np[sparse_sel]), self.cfg)
-            old_rows, old_buckets, old_ranks = self._pair_triples()
-            cell_s, rank_s, survivor, distinct = _sort_merge(
-                jnp.concatenate(
-                    [jnp.asarray(old_rows), jnp.asarray(keys_np[sparse_sel])]
-                ),
-                jnp.concatenate([jnp.asarray(old_buckets), idx]),
-                jnp.concatenate([jnp.asarray(old_ranks), rank]),
-                rows=rows,
-                m=m,
-            )
-            distinct_np = np.asarray(distinct)
-            was_sparse = slot_np < 0
-            promote = was_sparse & (distinct_np > self.threshold)
-            keep = was_sparse & ~promote
-            needed = int(distinct_np[keep].max(initial=0))
-            cap = _fit_capacity(needed, self.threshold)
-            new_pairs = _compact_pairs(
-                cell_s,
-                rank_s,
-                survivor,
-                jnp.asarray(keep),
-                rows=rows,
-                m=m,
-                cap=cap,
-            )
-            new_len = jnp.asarray(np.where(keep, distinct_np, 0).astype(np.int32))
-            if promote.any():
-                promoted = np.nonzero(promote)[0]
-                slot_of_row = np.full(rows, -1, np.int32)
-                slot_of_row[promoted] = np.arange(promoted.size, dtype=np.int32)
-                fresh = _materialize_rows(
-                    cell_s,
-                    rank_s,
-                    survivor,
-                    jnp.asarray(slot_of_row),
-                    slots=promoted.size,
-                    rows=rows,
-                    m=m,
-                )
-                new_dense = (
-                    jnp.concatenate([new_dense, fresh])
-                    if new_dense.shape[0]
-                    else fresh
-                )
-                new_slot = slot_np.copy()
-                new_slot[promoted] = self.dense_rows + np.arange(
-                    promoted.size, dtype=np.int32
-                )
+            chunk = (keys_np[sparse_sel], items_np[sparse_sel])
+            chunks = (chunk,) if pending is None else pending.chunks + (chunk,)
+            total = int(sparse_sel.sum()) + (pending.total if pending else 0)
+            pending = _PendingLog(chunks, total, plan)
 
-        routed = jnp.where(valid, flat_keys, rows)
-        counts = jnp.bincount(routed, length=rows + 1)[:rows]
-        return dataclasses.replace(
+        # one host bincount keeps the counters exact without a device
+        # round-trip on the pure-append path
+        counts = np.bincount(keys_np[valid], minlength=rows)[:rows]
+        out = dataclasses.replace(
             self,
-            pairs=new_pairs,
-            sparse_len=new_len,
-            dense=new_dense,
-            dense_slot=jnp.asarray(new_slot),
-            n_items=_counter_add_rows(self.n_items, counts),
+            dense_block=new_dense,
+            n_items=_counter_add_rows(
+                self.n_items, jnp.asarray(counts.astype(np.uint32))
+            ),
+            pending=pending,
         )
+        if out._pending_pressure():
+            return out.compact()
+        return out
 
-    def merge(self, other: "HybridBank") -> "HybridBank":
+    def merge(
+        self, other: "HybridBank", plan: Optional[ExecutionPlan] = None
+    ) -> "HybridBank":
         """Row-wise Merge-buckets fold; dense mode is infectious.
 
-        The fold never materializes a (B, m) block: both sides' live
-        sparse pairs dedup through the same sort-merge kernel as ingest,
-        rows staying sparse recompact, and only the dense result rows
-        (dense on either side, or a sparse union crossing the threshold)
-        scatter into a compact block overlaid with each side's dense
-        registers — cost tracks live pairs + promoted rows, which is what
-        lets ``HybridWindowedBank.fold_window`` stay sparse-sized.
+        Both sides settle their append buffers first (each under its own
+        recorded ingest plan), then the fold dedups both sides' live
+        sparse pairs through the same ``dedup_pairs`` dispatch as
+        compaction — under ``plan`` (default jnp) — rows staying sparse
+        recompact, and only the dense result rows (dense on either side,
+        or a sparse union crossing the threshold) materialize registers
+        overlaid with each side's dense blocks, so cost tracks live pairs
+        + promoted rows — which is what lets
+        ``HybridWindowedBank.fold_window`` stay sparse-sized.
         """
         if self.cfg != other.cfg:
             raise ValueError(
@@ -632,73 +827,62 @@ class HybridBank:
                 f"cannot merge banks with different sparse thresholds: "
                 f"{self.threshold} vs {other.threshold}"
             )
-        rows = len(self)
-        m = self.cfg.m
+        a, b = self.compact(), other.compact()
+        rows = len(a)
+        m = a.cfg.m
         limbs = u64lib.add(
-            u64lib.U64(self.n_items[:, 0], self.n_items[:, 1]),
-            u64lib.U64(other.n_items[:, 0], other.n_items[:, 1]),
+            u64lib.U64(a.n_items[:, 0], a.n_items[:, 1]),
+            u64lib.U64(b.n_items[:, 0], b.n_items[:, 1]),
         )
         n_items = jnp.stack([limbs.hi, limbs.lo], axis=-1)
         if rows == 0:
-            return dataclasses.replace(self, n_items=n_items)
-        if rows * m >= 1 << 31:
-            raise ValueError(
-                f"bank cell space B*m = {rows}*{m} overflows int32 sort "
-                f"cells; split the fleet across multiple banks"
-            )
-        slot_a = np.asarray(self.dense_slot)
-        slot_b = np.asarray(other.dense_slot)
+            return dataclasses.replace(a, n_items=n_items)
+        _check_cell_space(rows, m)
+        plan = (DEFAULT_PLAN if plan is None else plan).validate()
+        slot_a = np.asarray(a.slot_map)
+        slot_b = np.asarray(b.slot_map)
         force_dense = (slot_a >= 0) | (slot_b >= 0)
         # a row dense on one side still contributes the OTHER side's pairs
         # through the triple stream; its dense registers overlay below
-        ra, ba, ka = self._pair_triples()
-        rb, bb, kb = other._pair_triples()
-        cell_s, rank_s, survivor, distinct = _sort_merge(
+        ra, ba, ka = a._pair_triples()
+        rb, bb, kb = b._pair_triples()
+        dd = dedup_pairs(
             jnp.asarray(np.concatenate([ra, rb])),
             jnp.asarray(np.concatenate([ba, bb])),
             jnp.asarray(np.concatenate([ka, kb])),
-            rows=rows,
-            m=m,
+            rows,
+            a.cfg,
+            plan,
         )
-        distinct_np = np.asarray(distinct)
-        promote = ~force_dense & (distinct_np > self.threshold)
+        distinct_np = np.asarray(dd.distinct)
+        promote = ~force_dense & (distinct_np > a.threshold)
         keep = ~force_dense & ~promote
-        cap = _fit_capacity(int(distinct_np[keep].max(initial=0)), self.threshold)
-        pairs = _compact_pairs(
-            cell_s, rank_s, survivor, jnp.asarray(keep), rows=rows, m=m, cap=cap
-        )
+        cap = _fit_capacity(int(distinct_np[keep].max(initial=0)), a.threshold)
         dense_idx = np.nonzero(force_dense | promote)[0]
         slot_of_row = np.full(rows, -1, np.int32)
         slot_of_row[dense_idx] = np.arange(dense_idx.size, dtype=np.int32)
+        pairs, dense = _dedup_products(
+            dd, keep, slot_of_row, rows=rows, m=m, cap=cap, slots=dense_idx.size
+        )
         if dense_idx.size:
-            dense = _materialize_rows(
-                cell_s,
-                rank_s,
-                survivor,
-                jnp.asarray(slot_of_row),
-                slots=dense_idx.size,
-                rows=rows,
-                m=m,
-            )
-            for side, side_slot in ((self, slot_a), (other, slot_b)):
-                if side.dense_rows:
+            for side, side_slot in ((a, slot_a), (b, slot_b)):
+                d = int(side.dense_block.shape[0])
+                if d:
                     sel = side_slot[dense_idx]
                     contrib = jnp.where(
                         (jnp.asarray(sel) >= 0)[:, None],
-                        side.dense[
-                            jnp.clip(jnp.asarray(sel), 0, side.dense_rows - 1)
-                        ],
+                        side.dense_block[jnp.clip(jnp.asarray(sel), 0, d - 1)],
                         0,
                     )
                     dense = jnp.maximum(dense, contrib)
         else:
             dense = jnp.zeros((0, m), hll.REGISTER_DTYPE)
         return dataclasses.replace(
-            self,
-            pairs=pairs,
-            sparse_len=jnp.asarray(np.where(keep, distinct_np, 0).astype(np.int32)),
-            dense=dense,
-            dense_slot=jnp.asarray(slot_of_row),
+            a,
+            pair_buf=pairs,
+            pair_len=jnp.asarray(np.where(keep, distinct_np, 0).astype(np.int32)),
+            dense_block=dense,
+            slot_map=jnp.asarray(slot_of_row),
             n_items=n_items,
         )
 
@@ -709,22 +893,25 @@ class HybridBank:
     # ------------------------------------------------------------------
 
     def _sparse_histograms(self) -> jnp.ndarray:
-        """(B, K) int32 histograms straight from the pairs (C[0] = m - len)."""
+        """(B, K) int32 histograms straight from the settled pairs
+        (C[0] = m - len)."""
         from repro.sketch import estimators as _estimators
 
-        rows = len(self)
-        k = _estimators.histogram_size(self.cfg)
-        flat = self.pairs.reshape(-1)
+        s = self.compact()
+        rows = len(s)
+        k = _estimators.histogram_size(s.cfg)
+        cap = int(s.pair_buf.shape[1])
+        flat = s.pair_buf.reshape(-1)
         valid = flat >= 0
         rank = jnp.where(valid, flat & _PACK_MASK, 0)
-        row = jnp.repeat(jnp.arange(rows, dtype=jnp.int32), max(1, self.capacity))
-        if self.capacity == 0:
+        row = jnp.repeat(jnp.arange(rows, dtype=jnp.int32), max(1, cap))
+        if cap == 0:
             counts = jnp.zeros((rows, k), jnp.int32)
         else:
             idx = jnp.where(valid, row * k + rank, rows * k)
             counts = jnp.bincount(idx, length=rows * k + 1)[: rows * k]
             counts = counts.reshape(rows, k).astype(jnp.int32)
-        return counts.at[:, 0].set(self.cfg.m - self.sparse_len)
+        return counts.at[:, 0].set(s.cfg.m - s.pair_len)
 
     def estimate_many(
         self, estimator: Optional[str] = None, *, lc_fast: bool = True
@@ -740,21 +927,23 @@ class HybridBank:
         """
         from repro.sketch import estimators as _estimators
 
-        rows = len(self)
+        s = self.compact()
+        rows = len(s)
         if rows == 0:
             return jnp.zeros((0,), jnp.float32)
         name = _estimators.resolve_estimator(estimator)
         if name == "original" and lc_fast:
-            sparse_est = _lc_estimate(self.sparse_len, m=self.cfg.m)
+            sparse_est = _lc_estimate(s.pair_len, m=s.cfg.m)
         else:
-            hist = self._sparse_histograms()
-            sparse_est = _finalize_histograms(hist, self.cfg, name)
-        if self.dense_rows:
+            hist = s._sparse_histograms()
+            sparse_est = _finalize_histograms(hist, s.cfg, name)
+        d = int(s.dense_block.shape[0])
+        if d:
             dense_est = _estimators.estimate_many(
-                self.dense, self.cfg, estimator=name
+                s.dense_block, s.cfg, estimator=name
             )
-            slot = jnp.clip(self.dense_slot, 0, self.dense_rows - 1)
-            return jnp.where(self.dense_slot >= 0, dense_est[slot], sparse_est)
+            slot = jnp.clip(s.slot_map, 0, d - 1)
+            return jnp.where(s.slot_map >= 0, dense_est[slot], sparse_est)
         return sparse_est
 
     def estimate(self, i: int, estimator: Optional[str] = None) -> float:
@@ -766,24 +955,30 @@ class HybridBank:
     # ------------------------------------------------------------------
 
     def to_bytes(self) -> bytes:
-        """RHLB v2: header + threshold + counts + mode flags + payloads."""
-        rows = len(self)
+        """RHLB v2: header + threshold + counts + mode flags + payloads.
+
+        Always serializes the SETTLED state — buffered appends compact
+        first, so the wire never carries (and never needs to encode) the
+        transient append log.
+        """
+        s = self.compact()
+        rows = len(s)
         header = _BANK_HEADER.pack(
             _BANK_MAGIC,
             _SPARSE_VERSION,
-            self.cfg.p,
-            self.cfg.hash_bits,
+            s.cfg.p,
+            s.cfg.hash_bits,
             0,
-            self.cfg.seed,
+            s.cfg.seed,
             rows,
         )
-        out = [header, _THRESHOLD.pack(self.threshold)]
-        out.append(self.counts.astype("<u8").tobytes())
-        modes = self.modes
+        out = [header, _THRESHOLD.pack(s.threshold)]
+        out.append(s.counts.astype("<u8").tobytes())
+        modes = (np.asarray(s.slot_map) >= 0).astype(np.uint8)
         out.append(modes.tobytes())
-        pairs_np = np.asarray(self.pairs)
-        dense_np = np.asarray(self.dense, dtype=np.uint8)
-        slot_np = np.asarray(self.dense_slot)
+        pairs_np = np.asarray(s.pair_buf)
+        dense_np = np.asarray(s.dense_block, dtype=np.uint8)
+        slot_np = np.asarray(s.slot_map)
         for i in range(rows):
             if modes[i] == MODE_DENSE:
                 out.append(dense_np[slot_np[i]].tobytes())

@@ -393,7 +393,9 @@ class HybridWindowedBank:
     bucket's ingest still runs the fused hybrid dispatch.  Window folds
     merge the live hybrid buckets pairwise (W is small — the fused ring
     fold of §11 stays the dense path's job) and finalize with one batched
-    ``estimate_many``.  ``to_bytes``/``from_bytes`` is RHLW v2: the window
+    ``estimate_many``; merges and serialization settle each bucket's
+    deferred append buffer first (``HybridBank.compact``), so every read
+    of the ring observes fully deduped state.  ``to_bytes``/``from_bytes`` is RHLW v2: the window
     header with version=2, the epoch labels, then W length-prefixed RHLB
     v2 bucket payloads (v1 dense bucket payloads still parse,
     version-gated, matching ``HybridBank.from_bytes``).
@@ -507,8 +509,12 @@ class HybridWindowedBank:
         """Hybrid-route each item into the CURRENT time bucket.
 
         Delegates to ``HybridBank.update_many`` wholesale (sparse/dense
-        routing, promotion, §9 drop/counter rules); empty streams return
-        ``self`` without dispatching anything.
+        routing, promotion, §9 drop/counter rules — including the
+        deferred append buffer: sparse-destined pairs accumulate raw in
+        the current bucket's pending log and dedup only under capacity
+        pressure or when a read settles the bucket, so per-epoch ingest
+        stays O(append)); empty streams return ``self`` without
+        dispatching anything.
         """
         cur = self.buckets[self.cursor]
         new = cur.update_many(keys, items, plan)

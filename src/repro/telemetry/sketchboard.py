@@ -180,6 +180,9 @@ class StreamSketch:
         fused dispatch (DESIGN.md §9) replaces what used to be one
         ``update()`` per observe call.  Bit-identical to the unbuffered
         path: scatter-max commutes with any batching of the stream.
+        (``HybridBank`` carriers layer their own second-stage buffer on
+        top: sparse-destined pairs ride the bank's deferred append log
+        past this flush and settle on the first read — DESIGN.md §12.)
         """
         if not self._pending:
             return

@@ -15,6 +15,10 @@ surface:
                         fold it in (flat carriers only)
   advance(steps)        open new epochs (windowed carriers only)
   roundtrip()           serialize -> deserialize, state must survive
+  peek()                a read at an adversarial point: hybrid carriers
+                        settle their append buffer here (forcing the
+                        deferred dedup mid-sequence), everything else
+                        no-ops — the oracle is unaffected by definition
   estimates(estimator)  (B,) float estimates over the live window
   canonical()           a tuple of numpy arrays that must be BIT-IDENTICAL
                         across every registered backend for the same op
@@ -245,6 +249,11 @@ class HybridBankSUT:
     def roundtrip(self):
         self.bank = HybridBank.from_bytes(self.bank.to_bytes())
 
+    def peek(self):
+        # settle the append buffer mid-sequence: the deferred dedup must
+        # be invisible no matter where a read interleaves with ingest
+        self.bank = self.bank.compact()
+
     def estimates(self, estimator=None):
         return np.asarray(self.bank.estimate_many(estimator))
 
@@ -257,6 +266,23 @@ class HybridBankSUT:
             self.bank.counts,
             self.bank.modes,
         )
+
+
+class EagerHybridBankSUT(HybridBankSUT):
+    """Pre-append-buffer semantics: compact after EVERY update/merge.
+
+    The regression anchor for the deferred-dedup path: a deferred
+    HybridBankSUT run over the same ops must land bit-identical to this
+    wrapper, which restores the old eager per-batch dedup behavior.
+    """
+
+    def update(self, keys, items):
+        super().update(keys, items)
+        self.bank = self.bank.compact()
+
+    def merge(self, keys, items):
+        super().merge(keys, items)
+        self.bank = self.bank.compact()
 
 
 class DenseWindowSUT:
@@ -449,17 +475,20 @@ def gen_ops(rng, rows, n_ops, windowed):
     ops = []
     for _ in range(n_ops):
         r = rng.random()
-        if r < 0.55:
+        if r < 0.50:
             n = int(rng.choice(STREAM_SIZES))
             ops.append(("update", *gen_stream(rng, rows, n)))
-        elif r < 0.70:
+        elif r < 0.65:
             if windowed:
                 ops.append(("advance", int(rng.integers(1, 3))))
             else:
                 n = int(rng.choice(STREAM_SIZES[:2]))
                 ops.append(("merge", *gen_stream(rng, rows, n)))
-        elif r < 0.85:
+        elif r < 0.78:
             ops.append(("roundtrip",))
+        elif r < 0.90:
+            # force a compaction at an adversarial point (hybrid carriers)
+            ops.append(("peek",))
         else:
             ops.append(("estimate",))
     ops.append(("estimate",))
@@ -483,6 +512,9 @@ def run_ops(ops, sut, oracle, on_estimate=None):
             oracle.advance(op[1])
         elif kind == "roundtrip":
             sut.roundtrip()
+        elif kind == "peek":
+            # oracle no-op: a read cannot change what was observed
+            getattr(sut, "peek", lambda: None)()
         elif kind == "estimate":
             if on_estimate is not None:
                 on_estimate(sut, oracle)

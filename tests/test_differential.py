@@ -136,6 +136,51 @@ def test_hybrid_state_tracks_dense_state_bit_for_bit(seed):
         )
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_deferred_dedup_tracks_eager_compaction_bit_for_bit(seed):
+    """Same ops -> the deferred append-buffer path settles to EXACTLY the
+    state the pre-change eager-dedup-per-update path produced.
+
+    EagerHybridBankSUT compacts after every update/merge (the old
+    behavior); the plain SUT lets the buffer ride until an estimate (or
+    an explicit peek op) forces settlement.  Canonical state — registers,
+    counters, mode flags — must be bit-identical at every estimate point,
+    for every registered bank backend (the deferred-dedup regression
+    anchor, DESIGN.md §12)."""
+    from tests.reference_model import EagerHybridBankSUT
+
+    plans = make_plans(available_bank_backends())
+    for name, plan in plans.items():
+        rng_a = np.random.default_rng(200 + seed)
+        rng_b = np.random.default_rng(200 + seed)
+        ops_a = gen_ops(rng_a, ROWS, n_ops=10, windowed=False)
+        ops_b = gen_ops(rng_b, ROWS, n_ops=10, windowed=False)
+        deferred_states, eager_states = [], []
+        run_ops(
+            ops_a,
+            HybridBankSUT(ROWS, CFG, plan=plan, threshold=8),
+            ReferenceModel(ROWS),
+            on_estimate=lambda s, o: deferred_states.append(s.canonical()),
+        )
+        run_ops(
+            ops_b,
+            EagerHybridBankSUT(ROWS, CFG, plan=plan, threshold=8),
+            ReferenceModel(ROWS),
+            on_estimate=lambda s, o: eager_states.append(s.canonical()),
+        )
+        assert len(deferred_states) == len(eager_states) > 0
+        for step, (got, want) in enumerate(zip(deferred_states, eager_states)):
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(
+                    g,
+                    w,
+                    err_msg=(
+                        f"backend {name}: deferred dedup diverged from "
+                        f"eager compaction at estimate {step}"
+                    ),
+                )
+
+
 def test_windowed_expiry_tracks_oracle_exactly():
     """Advancing past W expires oracle and carriers in lockstep."""
     window = 3

@@ -520,3 +520,196 @@ def test_rhlw_v2_roundtrip_and_v1_interop():
     # ...while the dense parser refuses the v2 ring with a pointer
     with pytest.raises(ValueError, match="HybridWindowedBank"):
         WindowedBank.from_bytes(blob)
+
+
+# ----------------------------------------------------------------------------
+# deferred dedup: append buffer, pressure flush, settled reads (DESIGN.md §12)
+# ----------------------------------------------------------------------------
+
+
+def test_appends_defer_until_read_then_settle():
+    keys, items = _stream(500, 8, seed=3)
+    hb = HybridBank.empty(8, CFG).update_many(keys, items)
+    assert hb.pending_pairs == 500  # raw appends, no dedup yet
+    assert int(np.asarray(hb.pair_len).sum()) == 0  # settled state untouched
+    # counters are eager: exact before any compaction
+    np.testing.assert_array_equal(
+        hb.counts, np.bincount(np.asarray(keys), minlength=8)
+    )
+    settled = hb.compact()
+    assert settled.pending is None
+    assert hb.pending_pairs == 500  # the original instance is immutable
+    assert settled is hb.compact()  # idempotent AND cached per instance
+    eager = HybridBank.empty(8, CFG).update_many(keys, items).compact()
+    np.testing.assert_array_equal(
+        np.asarray(settled.pair_buf), np.asarray(eager.pair_buf)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(settled.pair_len), np.asarray(eager.pair_len)
+    )
+
+
+@pytest.mark.parametrize(
+    "surface", ["estimate", "serialize", "merge", "to_dense", "density", "row"]
+)
+def test_pending_settles_at_every_read_surface(surface):
+    """Deferred-dedup banks read bit-identical to eager per-batch dedup."""
+    rows = 11
+    keys, items = _skewed_stream(2000, rows, seed=7)
+    deferred = HybridBank.empty(rows, CFG, threshold=16)
+    eager = HybridBank.empty(rows, CFG, threshold=16)
+    for c in np.array_split(np.arange(2000), 5):
+        ci = jnp.asarray(c)
+        deferred = deferred.update_many(keys[ci], items[ci])
+        eager = eager.update_many(keys[ci], items[ci]).compact()
+    assert deferred.pending_pairs > 0 and eager.pending_pairs == 0
+    if surface == "estimate":
+        for est in available_estimators():
+            np.testing.assert_array_equal(
+                np.asarray(deferred.estimate_many(est)),
+                np.asarray(eager.estimate_many(est)),
+            )
+    elif surface == "serialize":
+        assert deferred.to_bytes() == eager.to_bytes()
+    elif surface == "merge":
+        ok, oi = _stream(300, rows, seed=9)
+        other = HybridBank.empty(rows, CFG, threshold=16).update_many(ok, oi)
+        assert other.pending_pairs > 0  # merge settles BOTH sides
+        a = deferred.merge(other)
+        b = eager.merge(other.compact())
+        np.testing.assert_array_equal(
+            np.asarray(a.to_dense().registers),
+            np.asarray(b.to_dense().registers),
+        )
+        np.testing.assert_array_equal(a.modes, b.modes)
+    elif surface == "to_dense":
+        np.testing.assert_array_equal(
+            np.asarray(deferred.to_dense().registers),
+            np.asarray(eager.to_dense().registers),
+        )
+    elif surface == "density":
+        assert deferred.density() == eager.density()
+    elif surface == "row":
+        for i in range(rows):
+            np.testing.assert_array_equal(
+                np.asarray(deferred.row(i).registers),
+                np.asarray(eager.row(i).registers),
+            )
+
+
+def test_flush_pressure_fires_exactly_at_the_floor(monkeypatch):
+    from repro.sketch import sparse as sparse_mod
+
+    monkeypatch.setattr(sparse_mod, "_FLUSH_MIN_PAIRS", 64)
+    monkeypatch.setattr(sparse_mod, "_FLUSH_FACTOR", 2)
+    hb = HybridBank.empty(4, CFG)
+    k1, i1 = _stream(63, 4, seed=1)
+    hb = hb.update_many(k1, i1)
+    assert hb.pending is not None and hb.pending_pairs == 63  # under the floor
+    k2, i2 = _stream(1, 4, seed=2)
+    hb = hb.update_many(k2, i2)  # lands exactly AT the floor: >= fires
+    assert hb.pending is None and hb.pending_pairs == 0
+    # second window: the floor is now max(MIN, FACTOR * live pairs)
+    live = int(np.asarray(hb.pair_len).sum())
+    gate = max(64, 2 * live)
+    k3, i3 = _stream(gate - 1, 4, seed=3)
+    hb = hb.update_many(k3, i3)
+    assert hb.pending is not None  # one under the amortized floor
+    k4, i4 = _stream(1, 4, seed=4)
+    hb = hb.update_many(k4, i4)
+    assert hb.pending is None  # crossing it compacts inside update_many
+
+
+@pytest.mark.parametrize("backend", available_bank_backends())
+@pytest.mark.parametrize("delta", [-1, 0, 1])
+def test_promotion_decided_at_compaction_from_buffered_pairs(backend, delta):
+    t = 16
+    k = t + delta
+    items = jnp.asarray(_items_with_distinct_buckets(k, seed=100 + k))
+    keys = jnp.zeros(k, jnp.int32)
+    plan = ExecutionPlan(backend=backend)
+    hb = HybridBank.empty(2, CFG, threshold=t)
+    for i in range(k):  # one item per batch: every pair rides the buffer
+        hb = hb.update_many(keys[i : i + 1], items[i : i + 1], plan)
+    assert hb.pending_pairs == k
+    assert int(np.asarray(hb.slot_map).max()) == -1  # not promoted yet
+    want = MODE_DENSE if k > t else MODE_SPARSE
+    assert hb.modes[0] == want  # settles; promotion decided at compaction
+    dense = update_many(SketchBank.empty(2, CFG), keys, items, plan)
+    np.testing.assert_array_equal(
+        np.asarray(hb.to_dense().registers), np.asarray(dense.registers)
+    )
+
+
+def test_dense_destined_items_do_not_buffer():
+    t = 8
+    hot = jnp.asarray(_items_with_distinct_buckets(t + 1, seed=2))
+    hb = HybridBank.empty(2, CFG, threshold=t).update_many(
+        jnp.zeros(t + 1, jnp.int32), hot
+    )
+    hb = hb.compact()
+    assert hb.modes[0] == MODE_DENSE and hb.pending is None
+    # further traffic to the promoted row goes straight to the registers
+    more = jnp.asarray(_items_with_distinct_buckets(5, seed=3))
+    hb2 = hb.update_many(jnp.zeros(5, jnp.int32), more)
+    assert hb2.pending is None and hb2.pending_pairs == 0
+
+
+def test_cell_space_guard_shares_one_message():
+    big = HybridBank.empty(1 << 23, CFG)  # 2^23 * 256 = 2^31 sort cells
+    keys = jnp.zeros(4, jnp.int32)
+    items = jnp.arange(4, dtype=jnp.int32)
+    msg = r"bank cell space B\*m = 8388608\*256 overflows int32 sort cells"
+    with pytest.raises(ValueError, match=msg) as via_update:
+        big.update_many(keys, items)
+    with pytest.raises(ValueError, match=msg) as via_merge:
+        big.merge(big)
+    # one shared guard: update_many and merge raise the identical message
+    assert str(via_update.value) == str(via_merge.value)
+
+
+def test_sparse_backend_registry_and_fallback():
+    from repro.sketch import (
+        available_sparse_backends,
+        dedup_pairs,
+        get_sparse_backend,
+    )
+
+    assert {"jnp", "pallas", "pallas_pipelined"} <= set(
+        available_sparse_backends()
+    )
+    with pytest.raises(ValueError, match="no sparse dedup path"):
+        get_sparse_backend("nope")
+    # a bank-only backend (no sparse entry) falls back to the jnp dedup
+    row = jnp.asarray([0, 1, -1, 0], jnp.int32)
+    bucket = jnp.asarray([3, 5, 0, 3], jnp.int32)
+    rank = jnp.asarray([2, 7, 1, 4], jnp.int32)
+    got = dedup_pairs(row, bucket, rank, 2, CFG, ExecutionPlan(backend="jnp"))
+    assert int(np.asarray(got.distinct).sum()) == 2
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_pipelined"])
+def test_sparse_scatter_kernel_matches_jnp_dedup(backend):
+    """The Pallas dedup (interpret off-TPU) == the jnp reference, exactly."""
+    from repro.sketch import dedup_pairs
+
+    rows = 16
+    rng = np.random.default_rng(12)
+    n = 640
+    row = jnp.asarray(
+        np.where(
+            rng.random(n) < 0.1,
+            rng.choice([-2, rows + 1], n),
+            rng.integers(0, rows, n),
+        ).astype(np.int32)
+    )
+    bucket = jnp.asarray(rng.integers(0, CFG.m, n, dtype=np.int32))
+    rank = jnp.asarray(rng.integers(1, 50, n, dtype=np.int32))
+    ref = dedup_pairs(row, bucket, rank, rows, CFG, ExecutionPlan())
+    got = dedup_pairs(
+        row, bucket, rank, rows, CFG, ExecutionPlan(backend=backend)
+    )
+    assert got.cells is not None
+    np.testing.assert_array_equal(np.asarray(got.distinct), np.asarray(ref.distinct))
+    if ref.cells is not None:
+        np.testing.assert_array_equal(np.asarray(got.cells), np.asarray(ref.cells))
