@@ -36,8 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.sketch import (
-    ExecutionPlan, HLLConfig, SketchBank, WindowedBank, available_estimators,
-    hll, update_registers,
+    ExecutionPlan, HLLConfig, MultiResWindowedBank, SketchBank, WindowedBank,
+    available_estimators, hll, update_registers,
 )
 from repro.data.pipeline import DataConfig, batch_at_step
 from repro.launch.mesh import make_auto_mesh
@@ -85,9 +85,21 @@ def stream_window(args, cfg, data):
     rows = max(1, args.tenants)
     plan = ExecutionPlan(backend="jnp", pipelines=args.pipelines,
                          estimator=args.estimator)
-    win = WindowedBank.empty(args.window, rows, cfg)
+    if args.window_levels > 0:
+        # multi-res ring (DESIGN.md §14): same observe/advance/estimate
+        # surface, horizon stretched to W*(2**L - 1) epochs
+        win = MultiResWindowedBank.empty(
+            args.window, rows, cfg, levels=args.window_levels
+        )
+    else:
+        win = WindowedBank.empty(args.window, rows, cfg)
+    # the dense ring exposes the whole (W, B, m) stack; the EH carrier's
+    # hot surface is its current bucket
+    live_regs = lambda w: (
+        w.registers if isinstance(w, WindowedBank) else w.current.registers
+    )
     warm = batch_at_step(data, jnp.asarray(0))["tokens"].reshape(-1)
-    jax.block_until_ready(win.observe(warm % rows, warm, plan).registers)
+    jax.block_until_ready(live_regs(win.observe(warm % rows, warm, plan)))
 
     t0 = time.perf_counter()
     n = 0
@@ -98,7 +110,7 @@ def stream_window(args, cfg, data):
         flat = tokens.reshape(-1)
         win = win.observe(flat % rows, flat, plan)
         n += flat.size
-    jax.block_until_ready(win.registers)
+    jax.block_until_ready(live_regs(win))
     dt = time.perf_counter() - t0
 
     t1 = time.perf_counter()
@@ -111,7 +123,11 @@ def stream_window(args, cfg, data):
           f"(epoch {win.epoch}, advance every {args.advance_every} chunks)")
     print(f"two windowed readings (fused ring fold + estimate_many): "
           f"{fin * 1e6:.0f} us")
-    print(f"rolling distinct (last {args.window} epochs): "
+    if args.window_levels > 0:
+        d = win.density()
+        print(f"multi-res ring: {d['slots']} slots over a {d['horizon']}-"
+              f"epoch horizon ({d['reduction']:.1f}x smaller than dense)")
+    print(f"rolling distinct (last {win.window} epochs): "
           f"min={rolling.min():,.0f} mean={rolling.mean():,.0f} "
           f"max={rolling.max():,.0f}")
     print(f"current-epoch distinct:            "
@@ -132,6 +148,10 @@ def main():
                          "with this many ring buckets")
     ap.add_argument("--advance-every", type=int, default=4,
                     help="window mode: open a new epoch every N chunks")
+    ap.add_argument("--window-levels", type=int, default=0,
+                    help="window mode: >0 uses the multi-resolution "
+                         "exponential-histogram ring (DESIGN.md §14) with "
+                         "this many levels")
     ap.add_argument("--distribution", default="zipf",
                     choices=["zipf", "uniform", "unique"])
     ap.add_argument("--estimator", default="original",

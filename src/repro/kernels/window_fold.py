@@ -96,3 +96,33 @@ def window_fold_max(
         interpret=interpret,
     )(mask.astype(jnp.int32).reshape(window, 1), ring3d)
     return out.reshape(bank_rows, m)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "row_block", "interpret"))
+def window_merge_max(
+    parts: jnp.ndarray,
+    *,
+    m: int,
+    row_block: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fold a (K, B, m) int32 stack of fold fragments into (B, m) by max.
+
+    The incremental-merge entry point of the prefix/suffix window
+    decomposition (DESIGN.md §14): where ``window_fold_max`` sweeps W ring
+    slices per query, the decomposed read path merges K fragments with K
+    tiny and independent of W — the prefix-stack top, the running suffix
+    accumulator, and the dirty head bucket.  A merge IS a W=K fold with
+    every slice live, so this reuses the masked ring sweep with an
+    all-ones mask and inherits its bit-identity to the bucket-by-bucket
+    reference for free.
+    """
+    if parts.ndim != 3:
+        raise ValueError(f"parts must be (K, B, m), got {parts.shape}")
+    return window_fold_max(
+        parts,
+        jnp.ones((parts.shape[0],), jnp.int32),
+        m=m,
+        row_block=row_block,
+        interpret=interpret,
+    )

@@ -25,6 +25,7 @@ from repro.sketch import (
     ExecutionPlan,
     HLLConfig,
     HybridBank,
+    MultiResWindowedBank,
     WindowedBank,
     available_estimators,
 )
@@ -45,6 +46,12 @@ def main():
                     help="phase-4 finalizer for the telemetry board")
     ap.add_argument("--window-epochs", type=int, default=4,
                     help="ring buckets for the sliding request window")
+    ap.add_argument("--window-levels", type=int, default=0,
+                    help=">0 swaps the dense window ring for the "
+                         "multi-resolution exponential histogram "
+                         "(DESIGN.md §14): --window-epochs full-resolution "
+                         "buckets per level, horizon stretched to "
+                         "W*(2**L - 1) epochs")
     ap.add_argument("--sparse-threshold", type=int, default=None,
                     help="distinct-bucket promotion threshold for the "
                          "hybrid per-request bank (default: m // 4)")
@@ -200,7 +207,15 @@ def main():
     # which is exactly the "distinct tokens in the last k slices" question
     # a traffic dashboard asks.
     W = args.window_epochs
-    win = WindowedBank.empty(W, B, board.cfg)
+    if args.window_levels > 0:
+        # multi-res mode (DESIGN.md §14): same carrier surface, but the
+        # horizon stretches to W*(2**L - 1) epochs at O(W*L) slots — the
+        # prompt epoch coarsens into merged buckets instead of expiring
+        win = MultiResWindowedBank.empty(
+            W, B, board.cfg, levels=args.window_levels
+        )
+    else:
+        win = WindowedBank.empty(W, B, board.cfg)
     win = win.observe(req_keys, prompts, board.plan)
     slices = np.array_split(np.asarray(out), W, axis=1)
     for chunk in slices:
@@ -210,12 +225,19 @@ def main():
     rolling = np.asarray(win.estimate_window(plan=board.plan,
                                              estimator=args.estimator))
     newest = np.asarray(win.estimate_window(1, board.plan, args.estimator))
+    span = win.window  # horizon for the EH carrier, W for the dense ring
     print(
-        f"  window[{W} epochs] rolling distinct/request "
+        f"  window[{span} epochs] rolling distinct/request "
         f"min={rolling.min():.0f} mean={rolling.mean():.0f} "
-        f"max={rolling.max():.0f} (prompt epoch expired); "
+        f"max={rolling.max():.0f}; "
         f"newest slice mean={newest.mean():.0f}"
     )
+    if args.window_levels > 0:
+        d = win.density()
+        print(
+            f"  multi-res ring: {d['slots']} slots over a {d['horizon']}-"
+            f"epoch horizon ({d['reduction']:.1f}x smaller than dense)"
+        )
 
 
 if __name__ == "__main__":

@@ -27,7 +27,12 @@ banks into one (W, B, m) pytree — ``observe`` ingests into the current
 bucket via the fused bank scatter, ``advance``/``advance_to`` rotate and
 expire buckets, and ``estimate_window(last_k)`` answers "distinct per row
 over the last k epochs" with ONE masked ring fold (per-backend via
-``register_window_backend``) + one batched ``estimate_many``.
+``register_window_backend``) + one batched ``estimate_many``.  Reads are
+incrementally maintained (DESIGN.md §14): a hidden prefix/suffix fold
+decomposition plus per-instance fold caches make steady-state full-window
+queries O(1) in W (merged via ``register_window_merge_backend``),
+bit-identical to the cold fold; ``MultiResWindowedBank`` is the
+exponential-histogram option for long horizons at O(log horizon) slots.
 
 Heavy hitters (DESIGN.md §13): ``CountMinBank`` stacks B count-min
 sketches with Topkapi top-k labels into one (B, d, w) pytree —
@@ -75,6 +80,7 @@ from repro.sketch.plan import (  # noqa: F401
     available_cm_window_backends,
     available_sparse_backends,
     available_window_backends,
+    available_window_merge_backends,
     example_plans,
     get_backend,
     get_bank_backend,
@@ -82,6 +88,7 @@ from repro.sketch.plan import (  # noqa: F401
     get_cm_window_backend,
     get_sparse_backend,
     get_window_backend,
+    get_window_merge_backend,
     reference_plan,
     register_backend,
     register_bank_backend,
@@ -89,6 +96,7 @@ from repro.sketch.plan import (  # noqa: F401
     register_cm_window_backend,
     register_sparse_backend,
     register_window_backend,
+    register_window_merge_backend,
 )
 
 from repro.sketch.estimators import (  # noqa: F401
@@ -121,6 +129,7 @@ from repro.sketch.bank import (  # noqa: F401
 from repro.sketch.sparse import HybridBank, default_threshold  # noqa: F401
 from repro.sketch.window import (  # noqa: F401
     HybridWindowedBank,
+    MultiResWindowedBank,
     WindowedBank,
 )
 from repro.sketch.countmin import (  # noqa: F401

@@ -38,6 +38,7 @@ from repro.sketch.plan import (
     register_cm_window_backend,
     register_sparse_backend,
     register_window_backend,
+    register_window_merge_backend,
 )
 
 # The kernel modules themselves import repro.sketch.hll, so they are loaded
@@ -473,6 +474,73 @@ def _pallas_pipelined_window_backend(
     _window = _window_kernel_module()
     row_block = min(row_block, max(1, _window.MAX_BLOCK_CELLS // cfg.m))
     return window_fold(ring, mask, row_block=row_block, interpret=plan.interpret)
+
+
+# ----------------------------------------------------------------------------
+# incremental window merges (K fold fragments -> one bank; DESIGN.md §14)
+# ----------------------------------------------------------------------------
+
+
+@jax.jit
+def window_merge_jnp(parts: jnp.ndarray) -> jnp.ndarray:
+    """Reference incremental merge: ONE max-reduce over the K fragments."""
+    return jnp.max(parts, axis=0)
+
+
+def window_merge(
+    parts: jnp.ndarray,
+    *,
+    row_block: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Pallas incremental merge: the window_merge_max kernel entry point.
+
+    Same padding/dtype contract as ``window_fold`` — the (K, B, m) stack
+    of fold fragments is row-block tiled under the VMEM cell cap, and the
+    kernel sweeps the K axis (tiny, W-independent) with the ring fold's
+    scratch accumulator.
+    """
+    _window = _window_kernel_module()
+    interpret = _default_interpret() if interpret is None else interpret
+    _, bank_rows, m = parts.shape
+    if m > _window.MAX_BLOCK_CELLS:
+        raise ValueError(
+            f"pallas window merge supports m <= {_window.MAX_BLOCK_CELLS} "
+            f"(p <= 12); use the jnp merge for m={m}"
+        )
+    if row_block is None:
+        row_block = max(1, _window.MAX_BLOCK_CELLS // m)
+    row_block = min(row_block, bank_rows)
+    padded_rows = -(-bank_rows // row_block) * row_block
+    parts32 = parts.astype(jnp.int32)
+    if padded_rows != bank_rows:
+        # phantom rows merge all-zero registers and are sliced off
+        parts32 = jnp.pad(parts32, ((0, 0), (0, padded_rows - bank_rows), (0, 0)))
+    out = _window.window_merge_max(
+        parts32, m=m, row_block=row_block, interpret=interpret
+    )
+    return out[:bank_rows].astype(parts.dtype)
+
+
+@register_window_merge_backend("jnp")
+def _jnp_window_merge_backend(parts, cfg: HLLConfig, plan: ExecutionPlan):
+    return window_merge_jnp(parts)
+
+
+@register_window_merge_backend("pallas")
+def _pallas_window_merge_backend(parts, cfg: HLLConfig, plan: ExecutionPlan):
+    return window_merge(parts, interpret=plan.interpret)
+
+
+@register_window_merge_backend("pallas_pipelined")
+def _pallas_pipelined_window_merge_backend(
+    parts, cfg: HLLConfig, plan: ExecutionPlan
+):
+    rows = parts.shape[1]
+    row_block = max(1, -(-rows // plan.pipelines))
+    _window = _window_kernel_module()
+    row_block = min(row_block, max(1, _window.MAX_BLOCK_CELLS // cfg.m))
+    return window_merge(parts, row_block=row_block, interpret=plan.interpret)
 
 
 # ----------------------------------------------------------------------------

@@ -58,6 +58,17 @@ _BANK_BACKENDS: Dict[str, Callable] = {}
 # drives ingest, bank ingest, and window folds alike.
 _WINDOW_BACKENDS: Dict[str, Callable] = {}
 
+# backend name -> fn(parts, cfg, plan) -> (B, m) registers.
+# The read side of the incremental window decomposition (DESIGN.md §14):
+# ``parts`` is a tiny (K, B, m) stack of already-folded window fragments
+# (prefix-stack top, suffix accumulator, dirty head bucket) and the merge
+# collapses it to one scratch bank.  Split out from the ring-fold axis so
+# the O(1) incremental read path never pays W-sized dispatch; fold order
+# is invisible because register max is an associative, commutative,
+# idempotent lattice (DESIGN.md §6), so every entry is bit-identical to
+# the full ring fold by construction.
+_WINDOW_MERGE_BACKENDS: Dict[str, Callable] = {}
+
 
 class CMBackend(NamedTuple):
     """The count-min backend pair: fused ingest + batched point query.
@@ -170,6 +181,29 @@ def register_window_backend(name: str) -> Callable[[Callable], Callable]:
     return deco
 
 
+def register_window_merge_backend(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register an incremental window-merge path under ``name``.
+
+    The signature is fn(parts, cfg, plan) -> (B, m) registers, where
+    ``parts`` is a (K, B, m) stack of fold fragments — K is tiny and
+    independent of W (the prefix-stack top, the suffix accumulator, and
+    the dirty head bucket of the incremental decomposition, DESIGN.md
+    §14).  Entries must be bit-identical to ``jnp.max(parts, axis=0)``.
+    Unlike the other axes, a backend does not need its own entry to stay
+    incremental-capable: ``get_window_merge_backend`` falls back to the
+    jnp merge, which is exact for any fragment grouping by the
+    max-lattice laws (DESIGN.md §6).
+    """
+
+    def deco(fn: Callable) -> Callable:
+        if name in _WINDOW_MERGE_BACKENDS:
+            raise ValueError(f"window merge backend {name!r} already registered")
+        _WINDOW_MERGE_BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
 def register_cm_backend(name: str, ingest: Callable, query: Callable) -> CMBackend:
     """Register a count-min backend pair (fused ingest + point query).
 
@@ -254,6 +288,23 @@ def get_window_backend(name: str) -> Callable:
         ) from None
 
 
+def get_window_merge_backend(name: str) -> Callable:
+    """The incremental merge entry for ``name``, or the jnp fallback.
+
+    This axis never raises for an unregistered name: fold fragments merge
+    exactly under the reference jnp max-reduce whatever backend produced
+    them, so a plan whose backend only registered a ring fold still gets
+    the O(1) incremental read path (mirrors the sparse-dedup fallback).
+    """
+    fn = _WINDOW_MERGE_BACKENDS.get(name)
+    if fn is not None:
+        return fn
+    try:
+        return _WINDOW_MERGE_BACKENDS["jnp"]
+    except KeyError:  # pragma: no cover - backends.py always registers jnp
+        raise ValueError("no window merge backends registered") from None
+
+
 def get_cm_backend(name: str) -> CMBackend:
     try:
         return _CM_BACKENDS[name]
@@ -294,6 +345,10 @@ def available_bank_backends() -> Tuple[str, ...]:
 
 def available_window_backends() -> Tuple[str, ...]:
     return tuple(sorted(_WINDOW_BACKENDS))
+
+
+def available_window_merge_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_WINDOW_MERGE_BACKENDS))
 
 
 def available_cm_backends() -> Tuple[str, ...]:

@@ -29,9 +29,31 @@ Ring/rotation contract (DESIGN.md §11):
   over buckets or rows.  Every registered fold is bit-identical to
   merging the live buckets one by one (tests/test_window.py).
 
+Incremental maintenance (DESIGN.md §14): the dense ring additionally
+carries a host-side prefix/suffix fold decomposition so the full-window
+read costs O(1) in W instead of refolding the (W, B, m) ring per query.
+``advance()`` threads the decomposition forward in O(1) amortized per
+rotation (the prefix stack rebuilds only once per W rotations),
+``observe()`` leaves it untouched (the dirty head bucket is read live at
+merge time), and a per-instance ``last_k`` fold cache — the same
+immutable-instance memoization as ``HybridBank.compact``'s settled view
+(DESIGN.md §12) — serves repeated reads without touching the ring.  All
+of it is invisible state: instances stay 4-leaf jit-traceable pytrees,
+and every cached or incremental read is bit-identical to the cold full
+fold because register max is an associative, commutative, idempotent
+lattice (DESIGN.md §6).
+
+``MultiResWindowedBank`` is the long-horizon construction option: an
+exponential histogram keeping the newest epochs at full resolution and
+pairwise-merging older ones, so a ``base * (2**levels - 1)``-epoch
+horizon costs O(base * levels) bucket slots instead of one slot per
+epoch (DESIGN.md §14).  Its fold rides the same
+``register_window_backend`` axis over the O(log horizon) bucket stack.
+
 ``to_bytes``/``from_bytes`` is the RHLW wire format: a 28-byte window
 header + W int32 epoch labels + W per-bucket RHLB payloads, with the same
 garbage/truncation rejection contract as RHLL/RHLB (DESIGN.md §7, §9).
+Version 2 is the hybrid sparse ring; version 3 the multi-resolution ring.
 """
 
 from __future__ import annotations
@@ -47,7 +69,12 @@ import numpy as np
 from repro.sketch import hll
 from repro.sketch.bank import SketchBank
 from repro.sketch.hll import HLLConfig
-from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, get_window_backend
+from repro.sketch.plan import (
+    DEFAULT_PLAN,
+    ExecutionPlan,
+    get_window_backend,
+    get_window_merge_backend,
+)
 
 _WINDOW_HEADER = struct.Struct("<4sBBBBQIII")
 # magic, ver, p, H, flags, seed, W, B, cursor
@@ -63,10 +90,94 @@ def _initial_epochs(window: int) -> np.ndarray:
     return (0 - np.mod(0 - slots, window)).astype(_EPOCH)
 
 
+def _check_last_k_value(last_k: Optional[int], window: int) -> int:
+    """Shared ``last_k`` validation for every ring flavor (dense, hybrid,
+    multi-resolution) — one helper so the bound check and its error
+    message cannot drift between carriers (tests/test_window_incremental.py
+    pins the messages identical)."""
+    if last_k is None:
+        return window
+    if not 1 <= int(last_k) <= window:
+        raise ValueError(f"last_k must be in [1, {window}], got {last_k}")
+    return int(last_k)
+
+
+def _pack_limbs(totals: np.ndarray) -> np.ndarray:
+    """(B,) uint64 exact counts -> (B, 2) uint32 hi/lo limb pairs."""
+    return np.stack(
+        [
+            (totals >> np.uint64(32)).astype(np.uint32),
+            totals.astype(np.uint32),
+        ],
+        axis=-1,
+    )
+
+
+class _RingReads:
+    """Window reads shared verbatim by the dense and hybrid rings.
+
+    Both carriers expose the same ``counts`` / ``_live_mask`` surface, so
+    the exact-counter suffix sum and the ``last_k`` validation live here
+    once instead of being copied per class.
+    """
+
+    def _check_last_k(self, last_k: Optional[int]) -> int:
+        return _check_last_k_value(last_k, self.window)
+
+    def window_counts(self, last_k: Optional[int] = None) -> np.ndarray:
+        """(B,) exact observation counts over the last ``last_k`` epochs."""
+        mask = np.asarray(self._live_mask(self._check_last_k(last_k)))
+        return self.counts[mask].sum(axis=0, dtype=np.uint64)
+
+
+@dataclasses.dataclass(frozen=True)
+class _SuffixFold:
+    """The prefix/suffix decomposition of a ring's CLOSED buckets.
+
+    Host-side, non-pytree state stashed on a ``WindowedBank`` instance's
+    ``__dict__`` (never a dataclass field — instances stay 4-leaf
+    pytrees).  With the closed buckets ordered oldest → newest as
+    a_1..a_C (C = W - 1; the bucket at ``cursor`` is the dirty head and
+    never enters the decomposition):
+
+    * ``prefix`` is the (C, B, m) suffix-fold stack built at the last
+      rebuild: ``prefix[i] = fold(a_{i+1} .. a_F)`` over the front
+      segment a_1..a_F.  Only the top entry ``prefix[head]`` is ever
+      read; a rotation expires the oldest front bucket by bumping
+      ``head`` — an O(1) pop.
+    * ``suffix`` is the (B, m) running fold of every closed bucket NEWER
+      than the front segment; each rotation folds the just-closed head
+      bucket into it — one O(B·m) max, W-independent.
+    * ``epoch`` is the absolute epoch this state describes; a mismatch
+      (stale threading) forces a rebuild instead of a wrong answer.
+
+    Full-window read = merge(prefix[head], suffix, ring[cursor]) through
+    the ``register_window_merge_backend`` axis.  When ``head`` drains
+    past the stack the next rotation rebuilds the stack from the ring —
+    one reverse-cummax scan, so rebuilds cost O(W) only once per W
+    rotations: O(1) amortized (DESIGN.md §14).
+    """
+
+    prefix: jnp.ndarray  # (C, B, m) suffix folds of the front segment
+    head: int  # first live prefix entry; == C means the front is drained
+    suffix: jnp.ndarray  # (B, m) fold of closed buckets newer than the front
+    epoch: int  # absolute epoch the decomposition is valid for
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class WindowedBank:
-    """A (W, B, m) ring of time-bucket banks as one frozen pytree."""
+class WindowedBank(_RingReads):
+    """A (W, B, m) ring of time-bucket banks as one frozen pytree.
+
+    Reads are incrementally maintained (DESIGN.md §14): instances carry a
+    hidden prefix/suffix fold decomposition plus a per-instance ``last_k``
+    fold cache in ``__dict__`` (mirroring ``HybridBank.compact``'s settled
+    view, DESIGN.md §12), so steady-state ``estimate_window`` costs O(1)
+    in W while staying bit-identical to the full ring fold.  The hidden
+    state is dropped — never copied — by ``dataclasses.replace``, jit
+    boundaries, and ``from_bytes``, which is exactly the invalidation
+    rule: a new instance re-derives or re-threads what it can prove valid.
+    """
 
     registers: jnp.ndarray  # (W, B, m) uint8
     n_items: jnp.ndarray  # (W, B, 2) uint32 limb pairs per bucket row
@@ -137,22 +248,90 @@ class WindowedBank:
         lo = limbs[..., 1].astype(np.uint64)
         return (hi << np.uint64(32)) | lo
 
-    def window_counts(self, last_k: Optional[int] = None) -> np.ndarray:
-        """(B,) exact observation counts over the last ``last_k`` epochs."""
-        mask = np.asarray(self._live_mask(self._check_last_k(last_k)))
-        return self.counts[mask].sum(axis=0, dtype=np.uint64)
-
-    def _check_last_k(self, last_k: Optional[int]) -> int:
-        if last_k is None:
-            return self.window
-        if not 1 <= int(last_k) <= self.window:
-            raise ValueError(f"last_k must be in [1, {self.window}], got {last_k}")
-        return int(last_k)
-
     def _live_mask(self, last_k: int) -> jnp.ndarray:
         """(W,) bool: slots holding one of the ``last_k`` newest epochs."""
         newest = self.epochs[self.cursor]
         return self.epochs > newest - last_k
+
+    # ------------------------------------------------------------------
+    # incremental fold state (hidden, host-side; DESIGN.md §14)
+    # ------------------------------------------------------------------
+
+    def _concrete(self) -> bool:
+        """True when the ring is host-readable (no jit tracers).
+
+        Under a jit trace the hidden state machinery stands down entirely:
+        tracers must never leak into instance ``__dict__``s, and the
+        traced instance returned by jit is rebuilt from pytree leaves
+        anyway, so it could not carry the state out.  The trace-state
+        check matters even when every leaf is concrete: a closure-captured
+        instance used inside someone else's jit binds its ops to the
+        active trace, so any derived value (``self.epoch``, a fold) would
+        still come back abstract.
+        """
+        return jax.core.trace_state_clean() and not any(
+            isinstance(leaf, jax.core.Tracer)
+            for leaf in (self.registers, self.n_items, self.cursor, self.epochs)
+        )
+
+    def _suffix_state(self) -> _SuffixFold:
+        """The live decomposition — threaded forward by ``advance_to``,
+        rebuilt from the ring when absent or stale."""
+        state = self.__dict__.get("_inc")
+        if state is None or state.epoch != self.epoch:
+            state = self._rebuild_suffix()
+            object.__setattr__(self, "_inc", state)
+        return state
+
+    def _rebuild_suffix(self) -> _SuffixFold:
+        """One O(W) reverse-cummax scan over the closed buckets.
+
+        ``prefix[i]`` folds closed buckets i..C-1 in age order, so popping
+        the oldest is a pointer bump.  Runs once per W rotations in steady
+        state (the amortization of DESIGN.md §14); expired slots were
+        zero-filled by ``advance_to`` and fold as the rank-0 identity.
+        """
+        window, cursor = self.window, int(self.cursor)
+        bank_shape = self.registers.shape[1:]
+        if window == 1:
+            prefix = jnp.zeros((0,) + bank_shape, self.registers.dtype)
+        else:
+            order = (cursor + 1 + np.arange(window - 1)) % window
+            closed = self.registers[jnp.asarray(order, jnp.int32)]
+            prefix = jax.lax.cummax(closed, axis=0, reverse=True)
+        suffix = jnp.zeros(bank_shape, self.registers.dtype)
+        return _SuffixFold(prefix, 0, suffix, self.epoch)
+
+    def _thread_state(self, out: "WindowedBank", steps: int) -> None:
+        """Carry the decomposition from ``self`` onto ``out`` after a
+        rotation of ``steps`` epochs — O(1): fold the just-closed head
+        bucket into the suffix accumulator and pop ``steps`` expired front
+        buckets off the prefix stack.  Bails (leaving ``out`` stateless,
+        to rebuild lazily) when the rotation outruns the stack."""
+        state = self.__dict__.get("_inc")
+        if steps <= 0:
+            if state is not None and state.epoch == self.epoch:
+                object.__setattr__(out, "_inc", state)
+            return
+        if state is None or state.epoch != self.epoch or steps >= self.window:
+            return
+        if steps > state.prefix.shape[0] - state.head:
+            # the jump expires buckets already folded into the suffix
+            # accumulator; max has no inverse, so rebuild from the ring
+            return
+        head_bucket = jax.lax.dynamic_index_in_dim(
+            self.registers, self.cursor, 0, keepdims=False
+        )
+        object.__setattr__(
+            out,
+            "_inc",
+            _SuffixFold(
+                state.prefix,
+                state.head + steps,
+                jnp.maximum(state.suffix, head_bucket),
+                self.epoch + steps,
+            ),
+        )
 
     # ------------------------------------------------------------------
     # ingestion (current bucket; paper phase 3)
@@ -181,7 +360,7 @@ class WindowedBank:
         new = cur.update_many(keys, items, plan)
         if new is cur:  # the empty-stream short-circuit: nothing to write back
             return self
-        return dataclasses.replace(
+        out = dataclasses.replace(
             self,
             registers=jax.lax.dynamic_update_index_in_dim(
                 self.registers, new.registers, self.cursor, 0
@@ -190,6 +369,14 @@ class WindowedBank:
                 self.n_items, new.n_items, self.cursor, 0
             ),
         )
+        # the decomposition describes CLOSED buckets only; an observe
+        # dirties just the head bucket (read live at merge time), so the
+        # state threads through unchanged.  The fold cache does NOT: `out`
+        # is a fresh instance, so its cache starts empty — exactly the
+        # invalidation an ingest requires.
+        if self._concrete():
+            self._thread_state(out, 0)
+        return out
 
     # ------------------------------------------------------------------
     # rotation (the sliding part of the window)
@@ -217,13 +404,20 @@ class WindowedBank:
         new_epochs = target - jnp.mod(target - slots, window)
         stale = new_epochs > self.epochs  # slots being overwritten
         keep = ~stale[:, None, None]
-        return dataclasses.replace(
+        out = dataclasses.replace(
             self,
             registers=jnp.where(keep, self.registers, 0).astype(self.registers.dtype),
             n_items=jnp.where(keep, self.n_items, 0).astype(self.n_items.dtype),
             cursor=jnp.mod(target, window).astype(jnp.int32),
             epochs=new_epochs.astype(jnp.int32),
         )
+        # O(1)-amortized incremental maintenance (DESIGN.md §14): fold the
+        # just-closed head bucket into the suffix accumulator and pop the
+        # expired front buckets.  Host-side only — a traced rotation
+        # leaves the new instance stateless (reads rebuild lazily).
+        if self._concrete() and not isinstance(target, jax.core.Tracer):
+            self._thread_state(out, int(target) - self.epoch)
+        return out
 
     # ------------------------------------------------------------------
     # estimation (paper phase 4, windowed)
@@ -254,9 +448,51 @@ class WindowedBank:
     def _fold_registers(
         self, last_k: int, plan: Optional[ExecutionPlan]
     ) -> jnp.ndarray:
+        """(B, m) fold of the ``last_k`` newest epochs — cached, and O(1)
+        in W for the full window (DESIGN.md §14).
+
+        The per-instance cache is the settled-view idiom of
+        ``HybridBank.compact`` (§12): an instance is immutable, so its
+        folds are too, and every mutation returns a NEW instance whose
+        cache starts empty — invalidation by construction.  The key
+        carries the plan's dispatch identity so distinct backends still
+        exercise their own fold paths (the equivalence tests depend on
+        that).  A full-window read merges the three decomposition
+        fragments through the ``register_window_merge_backend`` axis
+        instead of refolding the ring; suffix windows (last_k < W) fall
+        back to the masked ring fold, cached the same way.
+        """
         plan = (DEFAULT_PLAN if plan is None else plan).validate()
         backend = get_window_backend(plan.backend)
-        return backend(self.registers, self._live_mask(last_k), self.cfg, plan)
+        if not self._concrete():
+            return backend(self.registers, self._live_mask(last_k), self.cfg, plan)
+        cache = self.__dict__.setdefault("_fold_cache", {})
+        key = (last_k, plan.backend, plan.pipelines)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+        if last_k == self.window:
+            regs = self._fold_incremental(plan)
+        else:
+            regs = backend(self.registers, self._live_mask(last_k), self.cfg, plan)
+        cache[key] = regs
+        return regs
+
+    def _fold_incremental(self, plan: ExecutionPlan) -> jnp.ndarray:
+        """merge(prefix top, suffix accumulator, dirty head) — three (B, m)
+        fragments, whatever W is.  Bit-identical to the masked ring fold:
+        the fragments partition the live buckets (empty slots fold as the
+        rank-0 identity) and register max is order-invisible (§6)."""
+        state = self._suffix_state()
+        if state.head < state.prefix.shape[0]:
+            prefix_top = state.prefix[state.head]
+        else:  # front segment fully drained (or W == 1): identity
+            prefix_top = jnp.zeros(self.registers.shape[1:], self.registers.dtype)
+        head_bucket = jax.lax.dynamic_index_in_dim(
+            self.registers, self.cursor, 0, keepdims=False
+        )
+        parts = jnp.stack([prefix_top, state.suffix, head_bucket])
+        return get_window_merge_backend(plan.backend)(parts, self.cfg, plan)
 
     def fold_window(
         self,
@@ -265,20 +501,14 @@ class WindowedBank:
     ) -> SketchBank:
         """The ``last_k``-epoch suffix collapsed to a flat ``SketchBank``.
 
-        Registers come from the fused ring fold; the exact per-row
-        counters sum the live buckets' counts (host-side, exact to 2^64).
+        Registers come from the (cached, incrementally maintained) ring
+        fold; the exact per-row counters sum the live buckets' counts
+        (host-side, exact to 2^64).
         """
         last_k = self._check_last_k(last_k)
         regs = self._fold_registers(last_k, plan)
         totals = self.window_counts(last_k)
-        limbs = np.stack(
-            [
-                (totals >> np.uint64(32)).astype(np.uint32),
-                totals.astype(np.uint32),
-            ],
-            axis=-1,
-        )
-        return SketchBank(regs, jnp.asarray(limbs), self.cfg)
+        return SketchBank(regs, jnp.asarray(_pack_limbs(totals)), self.cfg)
 
     # ------------------------------------------------------------------
     # serialization (RHLW: window header + epochs + RHLB payloads)
@@ -314,13 +544,15 @@ class WindowedBank:
         if magic != _WINDOW_MAGIC:
             raise ValueError(f"bad magic {magic!r}; not a serialized window")
         if version != _WINDOW_VERSION:
-            hint = (
-                "; version 2 is the hybrid sparse ring — parse it with "
-                "HybridWindowedBank.from_bytes"
-                if version == 2
-                else ""
+            hints = {
+                2: "; version 2 is the hybrid sparse ring — parse it with "
+                "HybridWindowedBank.from_bytes",
+                3: "; version 3 is the multi-resolution ring — parse it "
+                "with MultiResWindowedBank.from_bytes",
+            }
+            raise ValueError(
+                f"unsupported window version {version}{hints.get(version, '')}"
             )
-            raise ValueError(f"unsupported window version {version}{hint}")
         if window < 1 or rows < 1:
             raise ValueError(f"window header claims {window} buckets x {rows} rows")
         if cursor >= window:
@@ -376,7 +608,7 @@ def _validate_epoch_ring(epochs: np.ndarray, cursor: int, window: int) -> None:
 
 
 @dataclasses.dataclass(frozen=True)
-class HybridWindowedBank:
+class HybridWindowedBank(_RingReads):
     """A ring of W sparse/dense ``HybridBank`` time buckets.
 
     The dense ``WindowedBank`` above carries a (W, B, m) block no matter
@@ -461,11 +693,6 @@ class HybridWindowedBank:
         """(W, B) exact per-bucket-per-row observation counts as uint64."""
         return np.stack([b.counts for b in self.buckets])
 
-    def window_counts(self, last_k: Optional[int] = None) -> np.ndarray:
-        """(B,) exact observation counts over the last ``last_k`` epochs."""
-        mask = self._live_mask(self._check_last_k(last_k))
-        return self.counts[mask].sum(axis=0, dtype=np.uint64)
-
     def density(self) -> dict:
         """Ring-wide storage stats: the §12 introspection summed over W."""
         per = [b.density() for b in self.buckets]
@@ -484,13 +711,6 @@ class HybridWindowedBank:
             "dense_nbytes": dense_nbytes,
             "reduction": dense_nbytes / nbytes if nbytes else 0.0,
         }
-
-    def _check_last_k(self, last_k: Optional[int]) -> int:
-        if last_k is None:
-            return self.window
-        if not 1 <= int(last_k) <= self.window:
-            raise ValueError(f"last_k must be in [1, {self.window}], got {last_k}")
-        return int(last_k)
 
     def _live_mask(self, last_k: int) -> np.ndarray:
         newest = int(self.epochs[self.cursor])
@@ -559,13 +779,27 @@ class HybridWindowedBank:
 
         Pairwise hybrid merges over at most W (small) live buckets;
         promotion stays infectious, so a row dense in ANY live bucket is
-        dense in the fold.
+        dense in the fold.  Memoized per instance and per ``last_k`` —
+        the same settled-view idiom as ``HybridBank.compact`` (DESIGN.md
+        §12/§14): the ring is immutable, so its folds are too, and any
+        mutation returns a fresh instance with an empty cache.
         """
-        mask = self._live_mask(self._check_last_k(last_k))
+        last_k = self._check_last_k(last_k)
+        # under an active trace the merge ops would come back abstract;
+        # caching them would leak dead tracers into later eager reads
+        cacheable = jax.core.trace_state_clean()
+        if cacheable:
+            cache = self.__dict__.setdefault("_fold_cache", {})
+            hit = cache.get(last_k)
+            if hit is not None:
+                return hit
+        mask = self._live_mask(last_k)
         live = [self.buckets[s] for s in range(self.window) if mask[s]]
         out = live[0]
         for b in live[1:]:
             out = out.merge(b)
+        if cacheable:
+            cache[last_k] = out
         return out
 
     def estimate_window(
@@ -627,7 +861,13 @@ class HybridWindowedBank:
                 buckets, int(dense.cursor), np.asarray(dense.epochs, _EPOCH)
             )
         if version != _WINDOW_VERSION_SPARSE:
-            raise ValueError(f"unsupported window version {version}")
+            hint = (
+                "; version 3 is the multi-resolution ring — parse it "
+                "with MultiResWindowedBank.from_bytes"
+                if version == _WINDOW_VERSION_MULTI
+                else ""
+            )
+            raise ValueError(f"unsupported window version {version}{hint}")
         if window < 1 or rows < 1:
             raise ValueError(f"window header claims {window} buckets x {rows} rows")
         if cursor >= window:
@@ -677,3 +917,452 @@ class HybridWindowedBank:
                 for b, v1 in zip(buckets, was_v1)
             ]
         return cls(tuple(buckets), int(cursor), epochs.copy())
+
+
+# ----------------------------------------------------------------------------
+# multi-resolution rings (exponential histogram) — DESIGN.md §14
+# ----------------------------------------------------------------------------
+
+_WINDOW_VERSION_MULTI = 3
+_MR_BASE = struct.Struct("<I")
+_MR_BUCKET = struct.Struct("<iiI")  # start epoch, end epoch, logical size
+_MR_MAX_LEVELS = 24  # keeps base * 2**levels (and every epoch label) in int32
+
+
+@dataclasses.dataclass(frozen=True)
+class _MRBucket:
+    """One closed exponential-histogram bucket.
+
+    ``start``/``end`` are the absolute epochs the bucket spans (label
+    width may exceed ``size`` when empty epochs fell inside a merge);
+    ``size`` is the logical level size — always a power of two: two
+    size-s buckets merge into one size-2s bucket, never anything else.
+    """
+
+    start: int
+    end: int
+    size: int
+    bank: SketchBank
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiResWindowedBank:
+    """An exponential-histogram window: O(base·levels) slots, long horizon.
+
+    The dense ring pays one (B, m) bucket per epoch, so a million-epoch
+    horizon is a million buckets.  This carrier keeps the newest epochs
+    at full resolution and PAIRWISE-MERGES older ones (the classic
+    exponential histogram, composing with the sliding-window FPGA
+    sketches of arXiv:2504.16896): each resolution level holds at most
+    ``base`` buckets of logical size 2^ℓ, ℓ < ``levels``; when a level
+    overflows, its two oldest buckets merge into one bucket of the next
+    level (register max + exact counter add — lossless for the union,
+    since the register lattice is a true union).  A
+    ``horizon = base * (2**levels - 1)`` epoch span therefore costs at
+    most ``base * levels`` closed buckets.
+
+    What is approximated: never the registers — only the window BOUNDARY.
+    A query over the last k epochs folds every bucket that intersects it,
+    so the answer covers a superset of the exact window, rounded up to
+    bucket edges: at most one extra bucket of size ≤ 2^(levels-1) at the
+    tail.  The newest epochs are exact (size-1 buckets), which is where
+    sliding-window queries concentrate.
+
+    Queries stack the O(log horizon) live buckets and fold them through
+    the SAME ``register_window_backend`` axis as the dense ring, then
+    finalize with one batched ``estimate_many`` — and are memoized per
+    instance like every other window read (DESIGN.md §14).  Like the
+    hybrid ring, this carrier is host-orchestrated (the bucket list
+    changes shape under merges), not a jit-traceable pytree.
+
+    ``to_bytes``/``from_bytes`` is RHLW version 3: the window header
+    (flags byte = levels, W = total buckets, cursor field = current
+    epoch), a uint32 ``base``, then per bucket a (start, end, size) label
+    and a fixed-size RHLB payload, newest first, current bucket first.
+    """
+
+    current: SketchBank  # the open bucket at `epoch`
+    closed: tuple  # _MRBuckets, NEWEST first, strictly older, non-overlapping
+    epoch: int
+    base: int  # max buckets per resolution level
+    levels: int  # level sizes 1, 2, ..., 2**(levels-1)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def empty(
+        cls,
+        base: int,
+        rows: int,
+        cfg: Optional[HLLConfig] = None,
+        levels: int = 4,
+    ) -> "MultiResWindowedBank":
+        cfg = cfg or HLLConfig()
+        if base < 1:
+            raise ValueError(f"a window needs at least one bucket, got {base}")
+        if rows < 1:
+            raise ValueError(f"a bank needs at least one row, got {rows}")
+        _check_mr_shape(base, levels)
+        return cls(SketchBank.empty(rows, cfg), (), 0, base, levels)
+
+    def with_rows(self, rows: int) -> "MultiResWindowedBank":
+        """Grow the bank axis to ``rows`` (new rows start empty)."""
+        have = self.rows
+        if rows < have:
+            raise ValueError(f"cannot shrink a {have}-row window to {rows}")
+        if rows == have:
+            return self
+        grow = lambda bank: dataclasses.replace(
+            bank,
+            registers=jnp.pad(bank.registers, ((0, rows - have), (0, 0))),
+            n_items=jnp.pad(bank.n_items, ((0, rows - have), (0, 0))),
+        )
+        return dataclasses.replace(
+            self,
+            current=grow(self.current),
+            closed=tuple(
+                dataclasses.replace(b, bank=grow(b.bank)) for b in self.closed
+            ),
+        )
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def cfg(self) -> HLLConfig:
+        return self.current.cfg
+
+    @property
+    def rows(self) -> int:
+        return len(self.current)
+
+    def __len__(self) -> int:
+        return self.rows
+
+    @property
+    def horizon(self) -> int:
+        """The answerable span in epochs: base * (2**levels - 1)."""
+        return self.base * ((1 << self.levels) - 1)
+
+    @property
+    def window(self) -> int:
+        """Alias of ``horizon`` — the bound ``last_k`` validates against,
+        mirroring the dense ring's W (shared helper, shared message)."""
+        return self.horizon
+
+    @property
+    def slots(self) -> int:
+        """Buckets currently held (current + closed): O(base · levels)."""
+        return 1 + len(self.closed)
+
+    def _check_last_k(self, last_k: Optional[int]) -> int:
+        return _check_last_k_value(last_k, self.window)
+
+    def _live_buckets(self, last_k: int) -> list:
+        """Closed buckets intersecting the last ``last_k`` epochs, newest
+        first.  The current bucket is always live and not listed here."""
+        floor = self.epoch - last_k
+        return [b for b in self.closed if b.end > floor]
+
+    def window_counts(self, last_k: Optional[int] = None) -> np.ndarray:
+        """(B,) exact observation counts over the covered buckets.
+
+        Covers the same rounded-up-to-bucket-edges span as the register
+        fold, so counters and estimates always describe one window.
+        """
+        last_k = self._check_last_k(last_k)
+        totals = self.current.counts.copy()
+        for b in self._live_buckets(last_k):
+            totals += b.bank.counts
+        return totals
+
+    def density(self) -> dict:
+        """Slot/storage introspection: the multi-res counterpart of the
+        ring carriers' density surface."""
+        per_level = {}
+        for b in self.closed:
+            per_level[b.size] = per_level.get(b.size, 0) + 1
+        nbytes = self.current.nbytes + sum(b.bank.nbytes for b in self.closed)
+        dense_slots = min(self.horizon, self.epoch + 1)
+        return {
+            "horizon": self.horizon,
+            "slots": self.slots,
+            "rows": self.rows,
+            "base": self.base,
+            "levels": self.levels,
+            "buckets_per_size": dict(sorted(per_level.items())),
+            "nbytes": nbytes,
+            "dense_ring_nbytes": dense_slots * self.current.nbytes,
+            "reduction": (dense_slots * self.current.nbytes) / nbytes
+            if nbytes
+            else 0.0,
+        }
+
+    # ------------------------------------------------------------------
+    # ingestion + rotation
+    # ------------------------------------------------------------------
+
+    def observe(
+        self,
+        keys: jnp.ndarray,
+        items: jnp.ndarray,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> "MultiResWindowedBank":
+        """Route each item to row ``keys[i]`` of the CURRENT epoch bucket
+        (the same fused bank scatter as every other window carrier)."""
+        new = self.current.update_many(keys, items, plan)
+        if new is self.current:  # the empty-stream short-circuit
+            return self
+        return dataclasses.replace(self, current=new)
+
+    def advance(self, steps: int = 1) -> "MultiResWindowedBank":
+        if steps < 1:
+            raise ValueError(f"advance needs steps >= 1, got {steps}")
+        return self.advance_to(self.epoch + steps)
+
+    def advance_to(self, epoch: int) -> "MultiResWindowedBank":
+        """Rotate forward to ``epoch``, running the slot-merge schedule.
+
+        The just-closed current bucket enters level 0; any level left
+        holding more than ``base`` buckets merges its two oldest into the
+        next level (top-level overflow drops the oldest bucket — it is at
+        the horizon boundary by then, the standard exponential-histogram
+        tail).  Skipped epochs insert nothing: empty epochs are implicit
+        gaps in the labels, which is why a label's width can exceed its
+        logical size.  Monotone like the rings — replaying an old epoch
+        is a no-op — and buckets entirely past the horizon expire even
+        when no merge touches them.
+        """
+        target = max(int(epoch), self.epoch)
+        if target == self.epoch:
+            return self
+        closed = list(self.closed)
+        if int(self.current.counts.sum()) > 0:
+            closed.insert(
+                0, _MRBucket(self.epoch, self.epoch, 1, self.current)
+            )
+            closed = _mr_carry(closed, self.base, self.levels)
+        floor = target - self.horizon
+        closed = [b for b in closed if b.end > floor]
+        return dataclasses.replace(
+            self,
+            current=SketchBank.empty(self.rows, self.cfg),
+            closed=tuple(closed),
+            epoch=target,
+        )
+
+    # ------------------------------------------------------------------
+    # estimation
+    # ------------------------------------------------------------------
+
+    def _fold_registers(
+        self, last_k: int, plan: Optional[ExecutionPlan]
+    ) -> jnp.ndarray:
+        """(B, m) fold of every bucket covering the last ``last_k`` epochs.
+
+        Stacks the O(log horizon) live buckets and folds the stack with
+        the ring-fold backend registered under ``plan.backend`` — the EH
+        rides the same ``register_window_backend`` axis as the dense
+        ring, just with a logarithmic ring.  Memoized per instance
+        (settled-view idiom, DESIGN.md §14).
+        """
+        plan = (DEFAULT_PLAN if plan is None else plan).validate()
+        backend = get_window_backend(plan.backend)
+        # same trace-state rule as the dense ring's cache: never memoize
+        # values minted under someone else's jit trace
+        cacheable = jax.core.trace_state_clean()
+        if cacheable:
+            cache = self.__dict__.setdefault("_fold_cache", {})
+            key = (last_k, plan.backend, plan.pipelines)
+            hit = cache.get(key)
+            if hit is not None:
+                return hit
+        stack = jnp.stack(
+            [self.current.registers]
+            + [b.bank.registers for b in self._live_buckets(last_k)]
+        )
+        mask = jnp.ones((stack.shape[0],), bool)
+        regs = backend(stack, mask, self.cfg, plan)
+        if cacheable:
+            cache[key] = regs
+        return regs
+
+    def estimate_window(
+        self,
+        last_k: Optional[int] = None,
+        plan: Optional[ExecutionPlan] = None,
+        estimator: Optional[str] = None,
+    ) -> jnp.ndarray:
+        """(B,) float32 distinct counts over (at least) the last ``last_k``
+        epochs — rounded up to bucket edges at the tail, exact at the
+        full-resolution head."""
+        folded = self._fold_registers(self._check_last_k(last_k), plan)
+        plan = DEFAULT_PLAN if plan is None else plan
+        from repro.sketch import estimators as _estimators
+
+        return _estimators.estimate_many(
+            folded, self.cfg, estimator=estimator or plan.estimator
+        )
+
+    def fold_window(
+        self,
+        last_k: Optional[int] = None,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> SketchBank:
+        """The covered suffix collapsed to a flat ``SketchBank`` (same
+        surface as the ring carriers, so StreamSketch reads are
+        carrier-agnostic)."""
+        last_k = self._check_last_k(last_k)
+        regs = self._fold_registers(last_k, plan)
+        totals = self.window_counts(last_k)
+        return SketchBank(regs, jnp.asarray(_pack_limbs(totals)), self.cfg)
+
+    # ------------------------------------------------------------------
+    # serialization (RHLW v3)
+    # ------------------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        header = _WINDOW_HEADER.pack(
+            _WINDOW_MAGIC,
+            _WINDOW_VERSION_MULTI,
+            self.cfg.p,
+            self.cfg.hash_bits,
+            self.levels,
+            self.cfg.seed,
+            self.slots,
+            self.rows,
+            self.epoch,
+        )
+        out = [header, _MR_BASE.pack(self.base)]
+        labelled = [(self.epoch, self.epoch, 1, self.current)] + [
+            (b.start, b.end, b.size, b.bank) for b in self.closed
+        ]
+        for start, end, size, bank in labelled:
+            out.append(_MR_BUCKET.pack(start, end, size))
+            out.append(bank.to_bytes())
+        return b"".join(out)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "MultiResWindowedBank":
+        if len(data) < _WINDOW_HEADER.size + _MR_BASE.size:
+            raise ValueError(f"truncated window: {len(data)} bytes")
+        magic, version, p, hash_bits, levels, seed, slots, rows, epoch = (
+            _WINDOW_HEADER.unpack(data[: _WINDOW_HEADER.size])
+        )
+        if magic != _WINDOW_MAGIC:
+            raise ValueError(f"bad magic {magic!r}; not a serialized window")
+        if version != _WINDOW_VERSION_MULTI:
+            raise ValueError(
+                f"unsupported window version {version}; versions 1/2 are "
+                "the dense/hybrid rings — parse them with "
+                "WindowedBank/HybridWindowedBank.from_bytes"
+            )
+        if slots < 1 or rows < 1:
+            raise ValueError(
+                f"window header claims {slots} buckets x {rows} rows"
+            )
+        (base,) = _MR_BASE.unpack_from(data, _WINDOW_HEADER.size)
+        _check_mr_shape(base, levels)
+        cfg = HLLConfig(p=p, hash_bits=hash_bits, seed=seed)
+        bucket_size = _MR_BUCKET.size + (20 + rows * 8 + rows * cfg.m)
+        expected = _WINDOW_HEADER.size + _MR_BASE.size + slots * bucket_size
+        if len(data) != expected:
+            raise ValueError(
+                f"window payload is {len(data)} bytes, expected {expected} "
+                f"for {slots} buckets, B={rows}, m={cfg.m}"
+            )
+        horizon = base * ((1 << levels) - 1)
+        size_max = 1 << (levels - 1)
+        buckets = []
+        off = _WINDOW_HEADER.size + _MR_BASE.size
+        for w in range(slots):
+            start, end, size = _MR_BUCKET.unpack_from(data, off)
+            off += _MR_BUCKET.size
+            bank = SketchBank.from_bytes(
+                data[off : off + bucket_size - _MR_BUCKET.size]
+            )
+            off += bucket_size - _MR_BUCKET.size
+            if bank.cfg != cfg or len(bank) != rows:
+                raise ValueError(f"bucket {w} disagrees with the window header")
+            buckets.append((start, end, size, bank))
+        start0, end0, size0, current = buckets[0]
+        if not (start0 == end0 == epoch and size0 == 1):
+            raise ValueError(
+                "corrupt multi-resolution labels: the first bucket must be "
+                "the open current epoch"
+            )
+        prev_start, prev_size = start0, None
+        closed = []
+        for w, (start, end, size, bank) in enumerate(buckets[1:], start=1):
+            if not (
+                0 <= start <= end < prev_start
+                and 1 <= size <= size_max
+                and size & (size - 1) == 0
+                and size <= end - start + 1
+                and (prev_size is None or size >= prev_size)
+                and end > epoch - horizon
+            ):
+                raise ValueError(
+                    f"corrupt multi-resolution labels: bucket {w} violates "
+                    "the slot-merge schedule invariants"
+                )
+            prev_start, prev_size = start, size
+            closed.append(_MRBucket(start, end, size, bank))
+        return cls(current, tuple(closed), epoch, base, levels)
+
+
+def _check_mr_shape(base: int, levels: int) -> None:
+    """Bounds shared by the constructor and the RHLW v3 parser."""
+    if base < 1:
+        raise ValueError(f"multi-resolution base must be >= 1, got {base}")
+    if not 1 <= levels <= _MR_MAX_LEVELS:
+        raise ValueError(
+            f"multi-resolution levels must be in [1, {_MR_MAX_LEVELS}], "
+            f"got {levels}"
+        )
+    if base * (1 << levels) >= 1 << 31:
+        raise ValueError(
+            f"horizon base * (2**levels - 1) overflows int32 epochs "
+            f"(base={base}, levels={levels})"
+        )
+
+
+def _mr_carry(closed: list, base: int, levels: int) -> list:
+    """The exponential-histogram slot-merge schedule (DESIGN.md §14).
+
+    ``closed`` is newest-first with level sizes non-decreasing toward the
+    old end.  For each level size s = 1, 2, 4, ...: while the level holds
+    more than ``base`` buckets, its two OLDEST merge into one size-2s
+    bucket (register max — a lossless union — plus exact counter add).
+    The merged bucket is the newest of its new level, so the
+    monotone-size invariant is preserved; a top-level overflow drops the
+    oldest bucket instead (it sits at the horizon boundary).  Each
+    insertion cascades at most once per level: O(levels) merges amortized
+    O(1) per epoch.
+    """
+    size_max = 1 << (levels - 1)
+    out = list(closed)
+    size = 1
+    while size <= size_max:
+        idxs = [i for i, b in enumerate(out) if b.size == size]
+        while len(idxs) > base:
+            oldest = idxs[-1]
+            if 2 * size > size_max:
+                out.pop(oldest)
+                idxs.pop()
+                continue
+            older, newer = out[oldest], out[oldest - 1]
+            out[oldest - 1] = _MRBucket(
+                older.start,
+                newer.end,
+                2 * size,
+                newer.bank.merge(older.bank),
+            )
+            out.pop(oldest)
+            idxs.pop()
+            idxs.pop()
+        size *= 2
+    return out

@@ -33,6 +33,16 @@ contract is unchanged; flat-board ``serialize``/``merge_from`` are
 replaced by ``window_bytes()`` (the RHLW blob) because epochs on
 different boards are not aligned.
 
+``window_levels=L`` (windowed boards only) swaps the dense ring for a
+``MultiResWindowedBank`` exponential histogram (DESIGN.md §14): the
+newest ``window`` epochs stay at full resolution and older buckets
+pairwise-merge, stretching the answerable horizon to
+``window * (2**L - 1)`` epochs at O(window·L) storage.  Reads answer
+over the whole horizon (rounded up to bucket edges at the tail) through
+the same carrier surface, so every board path is unchanged.  Not
+combinable with ``track_topk`` — count-min rings have no multi-res
+carrier.
+
 ``track_topk=CMConfig(...)`` adds heavy-hitter tracking (DESIGN.md §13):
 the same buffered keyed stream that feeds the HLL bank also feeds one
 ``CountMinBank`` (row = stream) through the same flush dispatch, and
@@ -62,6 +72,7 @@ from repro.sketch import (
     DEFAULT_PLAN,
     ExecutionPlan,
     HyperLogLog,
+    MultiResWindowedBank,
     SketchBank,
     WindowedBank,
     WindowedCountMinBank,
@@ -85,6 +96,11 @@ class StreamSketch:
     # become rows of one WindowedBank ring and every read answers over the
     # sliding W-epoch window instead of all time
     window: Optional[int] = None
+    # L > 0 upgrades the windowed ring to the multi-resolution
+    # exponential histogram (DESIGN.md §14): `window` becomes the
+    # full-resolution base and the horizon stretches to
+    # window * (2**L - 1) epochs at O(window * L) slots
+    window_levels: Optional[int] = None
     # a CMConfig adds heavy-hitter tracking (DESIGN.md §13): the flush
     # dispatch also feeds one CountMinBank (row = stream) and topk()/
     # report(topk=k) answer which items dominate each stream
@@ -117,6 +133,21 @@ class StreamSketch:
             raise ValueError(
                 f"window needs at least one bucket, got {self.window}"
             )
+        if self.window_levels is not None:
+            if self.window is None:
+                raise ValueError(
+                    "window_levels needs a windowed board (window=W)"
+                )
+            if self.window_levels < 1:
+                raise ValueError(
+                    f"window_levels needs at least one level, "
+                    f"got {self.window_levels}"
+                )
+            if self.track_topk is not None:
+                raise ValueError(
+                    "window_levels cannot combine with track_topk: the "
+                    "count-min ring has no multi-resolution carrier"
+                )
 
     def _estimator(self, estimator: Optional[str]) -> str:
         if estimator is not None:
@@ -206,7 +237,7 @@ class StreamSketch:
             )
             rows = len(self._wrows)
             if self._wbank is None:
-                self._wbank = WindowedBank.empty(self.window, rows, self.cfg)
+                self._wbank = self._new_wbank(rows)
             elif rows > self._wbank.rows:
                 self._wbank = self._wbank.with_rows(rows)
             self._wbank = self._wbank.observe(keys, items, self.plan)
@@ -607,11 +638,20 @@ class StreamSketch:
             }
         return out
 
+    def _new_wbank(self, rows: int):
+        """The board's window carrier: the dense ring, or the
+        exponential histogram when ``window_levels`` is set."""
+        if self.window_levels is not None:
+            return MultiResWindowedBank.empty(
+                self.window, rows, self.cfg, levels=self.window_levels
+            )
+        return WindowedBank.empty(self.window, rows, self.cfg)
+
     def _ensure_wbank(self) -> None:
         """Materialize/grow the ring for every registered stream row."""
         rows = max(1, len(self._wrows))
         if self._wbank is None:
-            self._wbank = WindowedBank.empty(self.window, rows, self.cfg)
+            self._wbank = self._new_wbank(rows)
             self._wfold_cache = None
         elif rows > self._wbank.rows:
             self._wbank = self._wbank.with_rows(rows)

@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Docstring-drift check: every "DESIGN.md §N" reference must resolve.
+
+Docstrings across src/ (and the satellite trees that cite the design
+document) anchor themselves to DESIGN.md sections — "the fused ring fold
+(DESIGN.md §11)".  Sections get added and renumbered as the design grows,
+and a stale §N silently points readers at the wrong subsystem, which is
+worse than no pointer at all.  This check extracts every such reference
+and fails if the section header does not exist in DESIGN.md.
+
+Runs in CI beside ruff (no dependencies, stdlib only):
+
+    python tools/check_design_refs.py
+
+Exit 0 when every reference resolves, 1 with a file:line listing of every
+dangling reference otherwise.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DESIGN = REPO / "DESIGN.md"
+# every tree whose prose cites the design document
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+SCAN_SUFFIXES = {".py", ".md"}
+# "DESIGN.md §11", "DESIGN.md §11/§14", "DESIGN.md  §8" — the section
+# sigil may chain with slashes; capture every §N in the chain
+REF = re.compile(r"DESIGN\.md[^\S\n]*((?:§\d+[/,]?\s?)+)")
+SECTION = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+
+
+def design_sections() -> set[int]:
+    return {int(n) for n in SECTION.findall(DESIGN.read_text())}
+
+
+def references(root: pathlib.Path):
+    """Yield (path, lineno, section) for every DESIGN.md §N reference."""
+    for scan in SCAN_DIRS:
+        base = root / scan
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*")):
+            if path.suffix not in SCAN_SUFFIXES or not path.is_file():
+                continue
+            text = path.read_text(errors="replace")
+            for match in REF.finditer(text):
+                line = text.count("\n", 0, match.start()) + 1
+                for n in re.findall(r"§(\d+)", match.group(1)):
+                    yield path.relative_to(root), line, int(n)
+
+
+def main() -> int:
+    if not DESIGN.is_file():
+        print(f"missing {DESIGN}", file=sys.stderr)
+        return 1
+    sections = design_sections()
+    total, dangling = 0, []
+    for path, line, n in references(REPO):
+        total += 1
+        if n not in sections:
+            dangling.append((path, line, n))
+    if dangling:
+        print(
+            f"{len(dangling)} dangling DESIGN.md reference(s) "
+            f"(existing sections: §{min(sections)}..§{max(sections)}):"
+        )
+        for path, line, n in dangling:
+            print(f"  {path}:{line}: DESIGN.md §{n} does not exist")
+        return 1
+    print(
+        f"ok: {total} DESIGN.md section references across "
+        f"{'/'.join(SCAN_DIRS)} all resolve "
+        f"(§{min(sections)}..§{max(sections)})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
