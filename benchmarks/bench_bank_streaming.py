@@ -17,13 +17,11 @@ finalization-side ``BENCH_estimators.json``.
 
 from __future__ import annotations
 
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_bench_json
 from repro.sketch import ExecutionPlan, HLLConfig, SketchBank, hll
 
 JSON_PATH = "BENCH_bank_streaming.json"
@@ -120,11 +118,7 @@ def run(full: bool = False, smoke: bool = False):
         "smoke": smoke,
         "banks": results,
     }
-    # smoke writes a SIBLING file (uploaded by CI, gitignored locally) so it
-    # can never clobber the tracked full-run perf trajectory
-    path = JSON_PATH.replace(".json", ".smoke.json") if smoke else JSON_PATH
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    write_bench_json(JSON_PATH, out, smoke)
     return results
 
 

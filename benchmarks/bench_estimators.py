@@ -16,12 +16,10 @@ perf trajectory of the fourth algorithm phase populates across PRs.
 
 from __future__ import annotations
 
-import json
-
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_bench_json
 from repro.sketch import HLLConfig, estimate_many, hll
 from repro.sketch import estimators as estlib
 
@@ -91,13 +89,8 @@ def run(full: bool = False, smoke: bool = False, json_path: str = JSON_PATH):
             f"errmax={worst:.4f}",
         )
 
-    # smoke writes a SIBLING file (uploaded by CI, gitignored locally) so it
-    # can never clobber the tracked full-run perf trajectory
     out["smoke"] = smoke
-    if smoke:
-        json_path = json_path.replace(".json", ".smoke.json")
-    with open(json_path, "w") as f:
-        json.dump(out, f, indent=2)
+    write_bench_json(json_path, out, smoke)
     return out
 
 

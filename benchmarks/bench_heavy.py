@@ -15,12 +15,10 @@ is meaningless; their bit-identity is gated by tests/test_countmin.py.)
 
 from __future__ import annotations
 
-import json
-
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_bench_json
 from repro.sketch import CMConfig, ExecutionPlan, update_cm_counters
 
 JSON_PATH = "BENCH_heavy.json"
@@ -113,11 +111,7 @@ def run(full: bool = False, smoke: bool = False):
         "smoke": smoke,
         "banks": results,
     }
-    # smoke writes a SIBLING file (uploaded by CI, gitignored locally) so it
-    # can never clobber the tracked full-run perf trajectory
-    path = JSON_PATH.replace(".json", ".smoke.json") if smoke else JSON_PATH
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    write_bench_json(JSON_PATH, out, smoke)
     return results
 
 

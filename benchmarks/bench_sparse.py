@@ -33,7 +33,6 @@ Writes ``BENCH_sparse.json`` (smoke runs write the gitignored
 
 from __future__ import annotations
 
-import json
 import statistics
 import time
 
@@ -41,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.sketch import HLLConfig, HybridBank, SketchBank, estimate_many
 
 JSON_PATH = "BENCH_sparse.json"
@@ -226,9 +225,7 @@ def run(full: bool = False, smoke: bool = False):
         "smoke": smoke,
         "banks": results,
     }
-    path = JSON_PATH.replace(".json", ".smoke.json") if smoke else JSON_PATH
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    write_bench_json(JSON_PATH, out, smoke)
     return results
 
 

@@ -23,14 +23,13 @@ written.
 
 from __future__ import annotations
 
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_bench_json
 from repro.sketch import (
     ExecutionPlan,
     HLLConfig,
@@ -248,11 +247,7 @@ def run(full: bool = False, smoke: bool = False):
         "incremental": inc_results,
         "incremental_flatness": inc_flatness,
     }
-    # smoke writes a SIBLING file (uploaded by CI, gitignored locally) so it
-    # can never clobber the tracked full-run perf trajectory
-    path = JSON_PATH.replace(".json", ".smoke.json") if smoke else JSON_PATH
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    write_bench_json(JSON_PATH, out, smoke)
     return results
 
 

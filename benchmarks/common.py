@@ -1,7 +1,10 @@
-"""Shared benchmark helpers: timing, CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, JSON trajectory writes."""
 
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 from typing import Callable
 
@@ -23,3 +26,36 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def env_block() -> dict:
+    """Where these numbers were measured (stamped into every BENCH_*.json).
+
+    The perf trajectory spans PRs and machines; without the environment
+    block a 1.4x "regression" is indistinguishable from a CI runner swap.
+    """
+    import jaxlib
+
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+    }
+
+
+def write_bench_json(json_path: str, payload: dict, smoke: bool) -> str:
+    """Stamp the env block and write the bench JSON; returns the path.
+
+    Smoke runs write a SIBLING ``*.smoke.json`` file (uploaded by CI,
+    gitignored locally) so they can never clobber the tracked full-run
+    perf trajectory.
+    """
+    payload = dict(payload)
+    payload["env"] = env_block()
+    path = json_path.replace(".json", ".smoke.json") if smoke else json_path
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path

@@ -20,12 +20,25 @@ job runs this, so benchmark scripts can no longer rot unexecuted).
           vs the dense bank under Zipf traffic); writes BENCH_sparse.json
   heavy   heavy-hitter ingest (fused d-hash scatter vs per-row loop);
           writes BENCH_heavy.json
+  obs   observability overhead (disabled-mode seam cost vs passthrough,
+        gated at 3%); writes BENCH_obs.json
 
 JSON-writing benches write in every mode: full runs update the tracked
 ``BENCH_*.json`` perf trajectory, smoke runs write sibling
 ``BENCH_*.smoke.json`` files (tagged ``"smoke": true``, gitignored) that
 the CI bench-smoke job uploads as artifacts — a smoke run can never
-clobber the tracked full-run numbers.
+clobber the tracked full-run numbers.  Every payload carries an ``env``
+block (jax/jaxlib version, backend platform, CPU count) so trajectory
+jumps can be told apart from runner swaps; ``--summary`` renders the
+tracked files plus their env stamps as one table without running
+anything.
+
+``--trace`` wraps each bench in a Chrome-trace capture and writes
+``TRACE_<name>.json`` (load in Perfetto / chrome://tracing; DESIGN.md
+§15).  ``--metrics-check`` runs the suite with metrics ENABLED and
+asserts the final snapshot round-trips through JSON with the §15 schema
+and live dispatch counters — the CI hook that keeps the instrumentation
+from rotting silently.
 
 A failing sub-benchmark no longer aborts the rest of the suite: every bench
 runs, every failure is reported, and the process exits non-zero at the end,
@@ -35,7 +48,10 @@ so one broken bench can't mask another and the CI smoke job still gates.
 from __future__ import annotations
 
 import argparse
+import glob
 import importlib
+import json
+import os
 import sys
 import traceback
 
@@ -53,7 +69,76 @@ SUITE = {
     "window": "bench_window",
     "sparse": "bench_sparse",
     "heavy": "bench_heavy",
+    "obs": "bench_obs",
 }
+
+
+def summarize() -> None:
+    """One table over the tracked BENCH_*.json perf-trajectory files."""
+    paths = sorted(
+        p for p in glob.glob("BENCH_*.json") if not p.endswith(".smoke.json")
+    )
+    if not paths:
+        print("no tracked BENCH_*.json files found", file=sys.stderr)
+        sys.exit(1)
+    rows = [("bench", "records", "jax", "backend", "cpus", "smoke")]
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            rows.append((os.path.basename(path), f"UNREADABLE: {e}",
+                         "-", "-", "-", "-"))
+            continue
+        env = payload.get("env", {})
+        records = sum(
+            len(v) for v in payload.values() if isinstance(v, list)
+        ) or len(payload)
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        rows.append((
+            name,
+            str(records),
+            str(env.get("jax", "-")),
+            str(env.get("backend", "-")),
+            str(env.get("cpu_count", "-")),
+            str(payload.get("smoke", "-")).lower(),
+        ))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    for i, row in enumerate(rows):
+        print("  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip())
+        if i == 0:
+            print("  ".join("-" * w for w in widths))
+
+
+def check_metrics_snapshot() -> None:
+    """Assert the post-suite snapshot has the §15 schema and live data."""
+    from repro.obs import metrics
+
+    snap = json.loads(metrics.to_json())  # must round-trip through JSON
+    missing = {"enabled", "counters", "gauges", "histograms"} - set(snap)
+    assert not missing, f"snapshot missing top-level keys: {sorted(missing)}"
+    assert snap["enabled"] is True
+    dispatch_calls = [
+        k for k in snap["counters"]
+        if k.startswith("dispatch.") and k.endswith(".calls")
+    ]
+    assert dispatch_calls, (
+        f"no dispatch.*.calls counters recorded; counters="
+        f"{sorted(snap['counters'])}"
+    )
+    seconds = [
+        k for k in snap["histograms"]
+        if k.endswith(".seconds") and snap["histograms"][k]["count"] > 0
+    ]
+    assert seconds, "no populated *.seconds histograms recorded"
+    for hist in snap["histograms"].values():
+        missing = {"count", "sum", "mean", "min", "max", "p50", "p90",
+                   "p99"} - set(hist)
+        assert not missing, f"histogram summary missing {sorted(missing)}"
+    print(
+        f"metrics-check,OK,{len(dispatch_calls)} dispatch counters + "
+        f"{len(seconds)} latency histograms live"
+    )
 
 
 def main() -> None:
@@ -63,9 +148,20 @@ def main() -> None:
                     help="tiny sizes: just prove every bench still runs")
     ap.add_argument("--only", default=None,
                     help=f"comma list of benchmarks: {','.join(SUITE)}")
+    ap.add_argument("--trace", action="store_true",
+                    help="write a Chrome-trace TRACE_<name>.json per bench")
+    ap.add_argument("--metrics-check", action="store_true",
+                    help="run with metrics enabled; assert the snapshot "
+                         "parses with the DESIGN.md §15 schema (CI hook)")
+    ap.add_argument("--summary", action="store_true",
+                    help="print one table over the tracked BENCH_*.json "
+                         "files and exit (runs nothing)")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
+    if args.summary:
+        summarize()
+        return
 
     selected = args.only.split(",") if args.only else list(SUITE)
     unknown = [name for name in selected if name not in SUITE]
@@ -73,15 +169,40 @@ def main() -> None:
         ap.error(f"unknown benchmark(s) {unknown}; "
                  f"available: {', '.join(sorted(SUITE))}")
 
+    if args.metrics_check:
+        from repro.obs import metrics
+
+        # bench_obs gates the DISABLED path and manages the flag itself
+        selected = [n for n in selected if n != "obs"]
+        metrics.reset()
+        metrics.enable()
+    if args.trace:
+        from repro.obs import tracing
+
     print("name,us_per_call,derived")
     failures = []
     for name in selected:
         try:
             mod = importlib.import_module(f"benchmarks.{SUITE[name]}")
-            mod.run(full=args.full, smoke=args.smoke)
+            if args.trace:
+                tracing.start_trace()
+                try:
+                    mod.run(full=args.full, smoke=args.smoke)
+                finally:
+                    tracing.stop_trace()
+                    path = tracing.write_trace(f"TRACE_{name}.json")
+                    print(f"trace,{name},{path}", file=sys.stderr)
+            else:
+                mod.run(full=args.full, smoke=args.smoke)
         except Exception:
             failures.append(name)
             print(f"BENCH-FAILED,{name}", file=sys.stderr)
+            traceback.print_exc()
+    if args.metrics_check and not failures:
+        try:
+            check_metrics_snapshot()
+        except AssertionError:
+            failures.append("metrics-check")
             traceback.print_exc()
     if failures:
         print(f"\n{len(failures)} benchmark(s) failed: {failures}",

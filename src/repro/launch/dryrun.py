@@ -24,7 +24,6 @@ MODEL_FLOPS is divided by the chip count for the usefulness ratio.
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from functools import partial
 from typing import Optional
@@ -37,6 +36,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import (
     ARCH_IDS, SHAPES, get_arch, is_cell_supported, skip_reason,
 )
+from repro.obs import tracing
 from repro.configs.base import ArchConfig
 from repro.configs.shapes import ShapeConfig
 from repro.launch import hlo_analysis
@@ -270,12 +270,12 @@ def run_cell(
         _write(record, out_dir)
         return record
 
-    t0 = time.perf_counter()
     try:
-        compiled, meta = lower_cell(arch_id, shape_name, multi_pod, overrides,
-                                    tp, grad_accum)
+        with tracing.span("dryrun.compile", cell=f"{arch_id}/{shape_name}") as sp:
+            compiled, meta = lower_cell(arch_id, shape_name, multi_pod,
+                                        overrides, tp, grad_accum)
         chips = meta["chips"]
-        record["compile_s"] = round(time.perf_counter() - t0, 1)
+        record["compile_s"] = round(sp.elapsed_s, 1)
         record["memory_analysis"] = _memory_dict(compiled)
         try:
             ca = compiled.cost_analysis()

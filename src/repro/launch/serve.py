@@ -1,16 +1,23 @@
 """Serving launcher: --arch selection, prefill + batched decode + telemetry.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \\
-        --requests 8 --prompt-len 64 --gen-len 32 [--reduced]
+        --requests 8 --prompt-len 64 --gen-len 32 [--reduced] \\
+        [--metrics-out metrics.json]
 
 Same step functions the decode dry-run compiles; on a pod the KV-cache
 sequence axis shards over 'model' per sharding/specs.cache_specs.
+
+``--metrics-out`` turns on the repro.obs metrics registry for the run
+(DESIGN.md §15): per-request read latency histograms (p50/p99), items/s
+and density gauges, dispatch counts per registry axis/backend, sparse
+compaction counters, and window-cache hit rates land in one snapshot
+JSON, with a periodic ``[metrics]`` report line every ``--report-every``
+requests.  Without it the registry stays in its no-op default.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +25,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch
+from repro.obs import metrics, tracing
+from repro.obs.format import (
+    fmt_bytes,
+    fmt_count,
+    fmt_float,
+    fmt_pct,
+    fmt_rate,
+    kv_line,
+    metrics_report_line,
+    truncated_note,
+)
 from repro.sketch import (
     CMConfig,
     CountMinBank,
@@ -62,9 +80,19 @@ def main():
                     help="count-min depth rows for --topk tracking")
     ap.add_argument("--cm-width", type=int, default=1024,
                     help="count-min counters per depth row for --topk")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable the metrics registry (DESIGN.md §15) and "
+                         "write the snapshot JSON here at exit")
+    ap.add_argument("--report-every", type=int, default=4,
+                    help="print a [metrics] line every N requests "
+                         "(needs --metrics-out)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
+
+    if args.metrics_out:
+        metrics.enable()
+        metrics.reset()
 
     arch = get_arch(args.arch)
     if args.reduced:
@@ -102,42 +130,46 @@ def main():
             * 0.02
         )
 
-    t0 = time.perf_counter()
-    logits, cache = engine.prefill(params, batch, arch, kv_len=S + T + 1)
-    first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-    prefill_s = time.perf_counter() - t0
+    with tracing.span("serve.prefill", metric="serve.prefill.seconds") as pre:
+        logits, cache = engine.prefill(params, batch, arch, kv_len=S + T + 1)
+        first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
 
-    t1 = time.perf_counter()
-    out, _ = engine.decode_loop(
-        params, cache, first, jnp.asarray(S, jnp.int32), arch, steps=T
-    )
-    jax.block_until_ready(out)
-    decode_s = time.perf_counter() - t1
+    with tracing.span("serve.decode", metric="serve.decode.seconds") as dec:
+        out, _ = engine.decode_loop(
+            params, cache, first, jnp.asarray(S, jnp.int32), arch, steps=T
+        )
+        jax.block_until_ready(out)
 
     board.observe("prompt_tokens", prompts)
     board.observe("generated_tokens", out)
     print(
-        f"{args.arch}: prefill {B * S / prefill_s:,.0f} tok/s, "
-        f"decode {B * T / decode_s:,.0f} tok/s"
+        f"{args.arch}: prefill {fmt_rate(B * S / pre.elapsed_s, 'tok')}, "
+        f"decode {fmt_rate(B * T / dec.elapsed_s, 'tok')}"
+    )
+    metrics.gauge(
+        "serve.items_per_s", B * (S + T) / (pre.elapsed_s + dec.elapsed_s)
     )
     report = board.report(
         density=True, topk=args.topk if args.topk > 0 else None
     )
     for name, row in report.items():
-        print(
-            f"  sketch[{name}] distinct~{row['estimate']:.0f} "
-            f"seen={row['items_seen']} dup={row['duplication']:.2f} "
-            f"occ={row['register_occupancy']:.1%}"
-        )
+        print(kv_line(f"sketch[{name}]", [
+            ("distinct~", fmt_count(row["estimate"])),
+            ("seen", fmt_count(row["items_seen"])),
+            ("dup", fmt_float(row["duplication"], 2)),
+            ("occ", fmt_pct(row["register_occupancy"])),
+        ]))
         if args.topk > 0:
             hits = ", ".join(f"{v}x{c}" for v, c in row["topk"])
             print(f"    top-{args.topk} tokens: {hits}")
     bd = board.density()
-    print(
-        f"  board density: {bd['sparse_eligible']}/{bd['streams']} streams "
-        f"sparse-eligible, occupancy {bd['occupancy_mean']:.1%}, hybrid "
-        f"~{bd['hybrid_nbytes_estimate']}B vs dense {bd['dense_nbytes']}B"
-    )
+    metrics.gauge("serve.board.occupancy_mean", bd["occupancy_mean"])
+    print(kv_line("board density", [
+        ("sparse-eligible", f"{bd['sparse_eligible']}/{bd['streams']}"),
+        ("occupancy", fmt_pct(bd["occupancy_mean"])),
+        ("hybrid~", fmt_bytes(bd["hybrid_nbytes_estimate"])),
+        ("dense", fmt_bytes(bd["dense_nbytes"])),
+    ]))
 
     # per-request distinct-token telemetry: one HybridBank row per request,
     # every (prompt + generated) token routed by its request index with ONE
@@ -161,16 +193,17 @@ def main():
     )
     per_req = np.asarray(bank.estimate_many(args.estimator))
     bank_d = bank.density()
-    print(
-        f"  bank[{B} requests] distinct tokens/request "
-        f"min={per_req.min():.0f} mean={per_req.mean():.0f} "
-        f"max={per_req.max():.0f} (one hybrid update_many pass)"
-    )
-    print(
-        f"  bank density: {bank_d['dense_rows']}/{bank_d['rows']} rows "
-        f"promoted, occupancy {bank_d['occupancy_mean']:.1%}, "
-        f"{bank_d['reduction']:.1f}x smaller than dense"
-    )
+    metrics.gauge("serve.bank.density_reduction", bank_d["reduction"])
+    print(kv_line(f"bank[{B} requests] distinct tokens/request", [
+        ("min", fmt_count(per_req.min())),
+        ("mean", fmt_count(per_req.mean())),
+        ("max", fmt_count(per_req.max())),
+    ]) + " (one hybrid update_many pass)")
+    print(kv_line("bank density", [
+        ("promoted", f"{bank_d['dense_rows']}/{bank_d['rows']}"),
+        ("occupancy", fmt_pct(bank_d["occupancy_mean"])),
+        ("reduction", f"{fmt_float(bank_d['reduction'], 1)}x"),
+    ]))
 
     # per-request heavy hitters (DESIGN.md §13): one CountMinBank row per
     # request stream, every (prompt + generated) token routed by request
@@ -186,18 +219,18 @@ def main():
         )
         vals, cnts = hh.topk(args.topk)
         shown = min(B, 4)
-        print(
-            f"  heavy[{B} requests] top-{args.topk} tokens/request "
-            f"(d={args.cm_depth}, w={args.cm_width}, "
-            f"{hh.nbytes / 1024:.0f} KiB bank):"
-        )
+        print(kv_line(f"heavy[{B} requests] top-{args.topk} tokens/request", [
+            ("d", args.cm_depth),
+            ("w", args.cm_width),
+            ("bank", fmt_bytes(hh.nbytes)),
+        ]))
         for r in range(shown):
             hits = ", ".join(
                 f"{v}x{c}" for v, c in zip(vals[r], cnts[r]) if c > 0
             )
             print(f"    request {r}: {hits}")
         if B > shown:
-            print(f"    ... ({B - shown} more requests)")
+            print(truncated_note(shown, B, "requests"))
 
     # sliding-window telemetry (DESIGN.md §11): a WindowedBank ring over
     # decode time — the prompt lands in epoch 0, each decode slice opens a
@@ -226,18 +259,39 @@ def main():
                                              estimator=args.estimator))
     newest = np.asarray(win.estimate_window(1, board.plan, args.estimator))
     span = win.window  # horizon for the EH carrier, W for the dense ring
-    print(
-        f"  window[{span} epochs] rolling distinct/request "
-        f"min={rolling.min():.0f} mean={rolling.mean():.0f} "
-        f"max={rolling.max():.0f}; "
-        f"newest slice mean={newest.mean():.0f}"
-    )
+    print(kv_line(f"window[{span} epochs] rolling distinct/request", [
+        ("min", fmt_count(rolling.min())),
+        ("mean", fmt_count(rolling.mean())),
+        ("max", fmt_count(rolling.max())),
+        ("newest-mean", fmt_count(newest.mean())),
+    ]))
     if args.window_levels > 0:
         d = win.density()
-        print(
-            f"  multi-res ring: {d['slots']} slots over a {d['horizon']}-"
-            f"epoch horizon ({d['reduction']:.1f}x smaller than dense)"
-        )
+        print(kv_line("multi-res ring", [
+            ("slots", d["slots"]),
+            ("horizon", f"{d['horizon']} epochs"),
+            ("reduction", f"{fmt_float(d['reduction'], 1)}x"),
+        ]))
+
+    # per-request read-path latency (DESIGN.md §15): each request's
+    # dashboard read — rolling window estimate + its distinct count —
+    # timed into the serve.request.seconds histogram.  Repeated window
+    # reads hit the per-instance fold cache, which is exactly what the
+    # window.fold_cache hit/miss counters in the snapshot make visible.
+    for r in range(B):
+        with tracing.span(
+            "serve.request", metric="serve.request.seconds", request=r
+        ):
+            est = win.estimate_window(plan=board.plan,
+                                      estimator=args.estimator)
+            _reading = (float(np.asarray(est)[r]), float(per_req[r]))
+        if metrics.enabled() and (r + 1) % max(args.report_every, 1) == 0:
+            print(metrics_report_line(metrics.snapshot()))
+
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(metrics.to_json())
+        print(f"  metrics snapshot written to {args.metrics_out}")
 
 
 if __name__ == "__main__":

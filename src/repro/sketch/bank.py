@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.sketch import hll, u64 as u64lib
 from repro.sketch.carrier import HyperLogLog
 from repro.sketch.dispatch import mesh_fold
@@ -227,6 +228,7 @@ class SketchBank:
             )
         if flat_items.shape[0] == 0 or len(self) == 0:
             return self
+        obs_metrics.observe("bank.update_many.batch_items", flat_items.shape[0])
         regs = update_bank_registers(self.registers, flat_keys, items, self.cfg, plan)
         rows = len(self)
         # count only the observations that actually landed (dropped keys

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.sketch import murmur3, u64 as u64lib
 from repro.sketch.bank import _counter_add_rows
 from repro.sketch.dispatch import cm_mesh_sum
@@ -417,6 +418,7 @@ class CountMinBank:
             )
         if flat_items.shape[0] == 0 or len(self) == 0:
             return self
+        obs_metrics.observe("cm.update_many.batch_items", flat_items.shape[0])
         counters = update_cm_counters(
             self.counters, flat_keys, flat_items, self.cfg, plan
         )

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.obs import metrics as obs_metrics
 from repro.sketch import hll
 from repro.sketch.hll import HLLConfig
 from repro.sketch.plan import (
@@ -112,7 +113,10 @@ def update_registers(
     flat = items.reshape(-1)
     if flat.shape[0] == 0:
         # an empty stream cannot move a register: skip the dispatch entirely
+        # (skips are counted so the no-dispatch contract stays observable)
+        obs_metrics.inc("dispatch.update.skipped_empty")
         return registers
+    obs_metrics.observe("update.batch_items", flat.shape[0])
     if plan.placement == "local":
         return backend(registers, items, cfg, plan)
     return mesh_fold(
@@ -147,6 +151,7 @@ def dedup_pairs(
     try:
         backend = get_sparse_backend(plan.backend)
     except ValueError:
+        obs_metrics.inc("dispatch.sparse_dedup.fallback")
         backend = get_sparse_backend("jnp")
     return backend(row, bucket, rank, rows, cfg, plan)
 

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.sketch.hll import HLLConfig, alpha
 
 # alpha_infinity = 1 / (2 ln 2): the bias constant of Ertl's raw estimator.
@@ -459,8 +460,13 @@ def estimate(
     registers, cfg: HLLConfig, estimator: Optional[str] = None
 ) -> float:
     """Phase 4, host-exact: histogram the registers, then finalize."""
-    counts = register_histogram_host(registers, cfg)
-    return float(get_estimator(resolve_estimator(estimator)).host(counts, cfg))
+    name = resolve_estimator(estimator)
+    # finalization time per estimator (DESIGN.md §15) — the "estimate"
+    # axis reuses the dispatch-seam shape the backend registries get from
+    # plan.register_*, with the estimator name in the backend slot
+    with obs_metrics.seam("estimate", name):
+        counts = register_histogram_host(registers, cfg)
+        return float(get_estimator(name).host(counts, cfg))
 
 
 @partial(jax.jit, static_argnames=("cfg", "estimator"))
@@ -478,7 +484,9 @@ def estimate_device(
 ) -> jnp.ndarray:
     """Float32 on-device estimate of one (m,) sketch (telemetry path)."""
     validate_registers(registers, cfg, batched=False)
-    return _estimate_device(registers, cfg, resolve_estimator(estimator))
+    name = resolve_estimator(estimator)
+    with obs_metrics.seam("estimate", name):
+        return _estimate_device(registers, cfg, name)
 
 
 def estimate_many(
@@ -494,4 +502,6 @@ def estimate_many(
     float32 tolerance (property-tested in tests/test_estimators.py).
     """
     validate_registers(register_bank, cfg, batched=True)
-    return _estimate_device(register_bank, cfg, resolve_estimator(estimator))
+    name = resolve_estimator(estimator)
+    with obs_metrics.seam("estimate", name):
+        return _estimate_device(register_bank, cfg, name)

@@ -36,6 +36,7 @@ from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 
+from repro.obs import metrics as obs_metrics
 from repro.sketch.estimators import DEFAULT_ESTIMATOR, get_estimator
 
 DEFAULT_PIPELINES = 8  # unified default (was 8 in core.sketch, 4 in kernels.ops)
@@ -137,7 +138,11 @@ def register_backend(name: str) -> Callable[[Callable], Callable]:
     def deco(fn: Callable) -> Callable:
         if name in _BACKENDS:
             raise ValueError(f"backend {name!r} already registered")
-        _BACKENDS[name] = fn
+        # every axis wraps at registration so per-backend dispatch counts
+        # and wall time (DESIGN.md §15) cost one flag check when disabled;
+        # short-circuits (empty streams) never reach the wrapper, so they
+        # are never counted
+        _BACKENDS[name] = obs_metrics.wrap_backend("update", name, fn)
         return fn
 
     return deco
@@ -154,7 +159,9 @@ def register_bank_backend(name: str) -> Callable[[Callable], Callable]:
     def deco(fn: Callable) -> Callable:
         if name in _BANK_BACKENDS:
             raise ValueError(f"bank backend {name!r} already registered")
-        _BANK_BACKENDS[name] = fn
+        _BANK_BACKENDS[name] = obs_metrics.wrap_backend(
+            "bank_update", name, fn
+        )
         return fn
 
     return deco
@@ -175,7 +182,9 @@ def register_window_backend(name: str) -> Callable[[Callable], Callable]:
     def deco(fn: Callable) -> Callable:
         if name in _WINDOW_BACKENDS:
             raise ValueError(f"window backend {name!r} already registered")
-        _WINDOW_BACKENDS[name] = fn
+        _WINDOW_BACKENDS[name] = obs_metrics.wrap_backend(
+            "window_fold", name, fn
+        )
         return fn
 
     return deco
@@ -198,7 +207,9 @@ def register_window_merge_backend(name: str) -> Callable[[Callable], Callable]:
     def deco(fn: Callable) -> Callable:
         if name in _WINDOW_MERGE_BACKENDS:
             raise ValueError(f"window merge backend {name!r} already registered")
-        _WINDOW_MERGE_BACKENDS[name] = fn
+        _WINDOW_MERGE_BACKENDS[name] = obs_metrics.wrap_backend(
+            "window_merge", name, fn
+        )
         return fn
 
     return deco
@@ -215,7 +226,10 @@ def register_cm_backend(name: str, ingest: Callable, query: Callable) -> CMBacke
     """
     if name in _CM_BACKENDS:
         raise ValueError(f"cm backend {name!r} already registered")
-    backend = CMBackend(ingest, query)
+    backend = CMBackend(
+        obs_metrics.wrap_backend("cm_update", name, ingest),
+        obs_metrics.wrap_backend("cm_query", name, query),
+    )
     _CM_BACKENDS[name] = backend
     return backend
 
@@ -233,7 +247,9 @@ def register_cm_window_backend(name: str) -> Callable[[Callable], Callable]:
     def deco(fn: Callable) -> Callable:
         if name in _CM_WINDOW_BACKENDS:
             raise ValueError(f"cm window backend {name!r} already registered")
-        _CM_WINDOW_BACKENDS[name] = fn
+        _CM_WINDOW_BACKENDS[name] = obs_metrics.wrap_backend(
+            "cm_window_fold", name, fn
+        )
         return fn
 
     return deco
@@ -253,7 +269,9 @@ def register_sparse_backend(name: str) -> Callable[[Callable], Callable]:
     def deco(fn: Callable) -> Callable:
         if name in _SPARSE_BACKENDS:
             raise ValueError(f"sparse backend {name!r} already registered")
-        _SPARSE_BACKENDS[name] = fn
+        _SPARSE_BACKENDS[name] = obs_metrics.wrap_backend(
+            "sparse_dedup", name, fn
+        )
         return fn
 
     return deco

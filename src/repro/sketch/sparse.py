@@ -88,6 +88,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.sketch import hll, u64 as u64lib
 from repro.sketch.bank import (
     _BANK_HEADER,
@@ -490,7 +491,7 @@ class HybridBank:
         live = int(np.asarray(self.pair_len, dtype=np.int64).sum())
         return pend.total >= max(_FLUSH_MIN_PAIRS, _FLUSH_FACTOR * live)
 
-    def compact(self) -> "HybridBank":
+    def compact(self, _reason: str = "read") -> "HybridBank":
         """Settle the append buffer: dedup, recompact, promote — one pass.
 
         Idempotent and cached (a bank is immutable, so its settled form
@@ -498,11 +499,16 @@ class HybridBank:
         result is bit-identical to having eagerly deduplicated every
         ``update_many`` batch — the register lattice is an associative,
         commutative, idempotent max, so batching order is invisible.
+
+        ``_reason`` labels the flush for the metrics registry: "read" for
+        settle-reads (a read surface forcing the buffer down), "pressure"
+        when the ingest path crossed the flush floors.
         """
         if self.pending is None:
             return self
         cached = self.__dict__.get("_settled")
         if cached is None:
+            obs_metrics.inc(f"sparse.flush.{_reason}")
             cached = self._compact_now()
             object.__setattr__(self, "_settled", cached)
         return cached
@@ -539,6 +545,8 @@ class HybridBank:
             int(distinct_np[keep].max(initial=0)), self.threshold
         )
         promoted = np.nonzero(promote)[0]
+        if promoted.size:
+            obs_metrics.inc("sparse.promotions", int(promoted.size))
         slot_of_row = np.full(rows, -1, np.int32)
         slot_of_row[promoted] = np.arange(promoted.size, dtype=np.int32)
         new_pairs, fresh = _dedup_products(
@@ -777,10 +785,13 @@ class HybridBank:
 
         pending = self.pending
         if sparse_sel.any():
+            appended = int(sparse_sel.sum())
             chunk = (keys_np[sparse_sel], items_np[sparse_sel])
             chunks = (chunk,) if pending is None else pending.chunks + (chunk,)
-            total = int(sparse_sel.sum()) + (pending.total if pending else 0)
+            total = appended + (pending.total if pending else 0)
             pending = _PendingLog(chunks, total, plan)
+            obs_metrics.inc("sparse.pending.appends")
+            obs_metrics.inc("sparse.pending.pairs", appended)
 
         # one host bincount keeps the counters exact without a device
         # round-trip on the pure-append path
@@ -794,7 +805,7 @@ class HybridBank:
             pending=pending,
         )
         if out._pending_pressure():
-            return out.compact()
+            return out.compact(_reason="pressure")
         return out
 
     def merge(

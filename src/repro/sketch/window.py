@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.sketch import hll
 from repro.sketch.bank import SketchBank
 from repro.sketch.hll import HLLConfig
@@ -291,6 +292,7 @@ class WindowedBank(_RingReads):
         state (the amortization of DESIGN.md §14); expired slots were
         zero-filled by ``advance_to`` and fold as the rank-0 identity.
         """
+        obs_metrics.inc("window.prefix_rebuilds")
         window, cursor = self.window, int(self.cursor)
         bank_shape = self.registers.shape[1:]
         if window == 1:
@@ -470,7 +472,9 @@ class WindowedBank(_RingReads):
         key = (last_k, plan.backend, plan.pipelines)
         hit = cache.get(key)
         if hit is not None:
+            obs_metrics.inc("window.fold_cache.hits")
             return hit
+        obs_metrics.inc("window.fold_cache.misses")
         if last_k == self.window:
             regs = self._fold_incremental(plan)
         else:
@@ -792,7 +796,9 @@ class HybridWindowedBank(_RingReads):
             cache = self.__dict__.setdefault("_fold_cache", {})
             hit = cache.get(last_k)
             if hit is not None:
+                obs_metrics.inc("window.fold_cache.hits")
                 return hit
+            obs_metrics.inc("window.fold_cache.misses")
         mask = self._live_mask(last_k)
         live = [self.buckets[s] for s in range(self.window) if mask[s]]
         out = live[0]
@@ -1179,7 +1185,9 @@ class MultiResWindowedBank:
             key = (last_k, plan.backend, plan.pipelines)
             hit = cache.get(key)
             if hit is not None:
+                obs_metrics.inc("window.fold_cache.hits")
                 return hit
+            obs_metrics.inc("window.fold_cache.misses")
         stack = jnp.stack(
             [self.current.registers]
             + [b.bank.registers for b in self._live_buckets(last_k)]

@@ -11,13 +11,13 @@ batch is a no-op).  See checkpoint/ckpt.py for the elastic-resume path.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
+from repro.obs.tracing import Stopwatch
 from repro.configs.base import ArchConfig
 from repro.sketch import estimators
 from repro.data.pipeline import DataConfig, batch_at_step
@@ -60,7 +60,8 @@ def train(
     step_fn = make_jitted_step(arch, train_cfg)
     watchdog = StepWatchdog()
     history = []
-    t0 = time.perf_counter()
+    wall = Stopwatch()
+    wall.start()
     for step in range(start, loop_cfg.total_steps):
         watchdog.step_begin()  # window covers data fetch too (data stalls
         batch = batch_at_step(data_cfg, jnp.asarray(step, jnp.int32))
@@ -81,7 +82,7 @@ def train(
             )
         if (step + 1) % loop_cfg.log_every == 0 or step + 1 == loop_cfg.total_steps:
             m = {k: float(v) for k, v in metrics.items()}
-            dt = (time.perf_counter() - t0) / (step - start + 1)
+            dt = wall.elapsed() / (step - start + 1)
             history.append({"step": step + 1, **m})
             log_fn(
                 f"[step {step + 1:5d}] loss={m['loss']:.4f} "

@@ -24,8 +24,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import time
-from typing import List, Optional
+from typing import List
+
+from repro.obs.tracing import Stopwatch
 
 
 class Verdict(enum.Enum):
@@ -44,12 +45,12 @@ class StepWatchdog:
     min_timeout_s: float = 1.0
 
     _durations: List[float] = dataclasses.field(default_factory=list)
-    _t_start: Optional[float] = None
+    _watch: Stopwatch = dataclasses.field(default_factory=Stopwatch)
     slow_count: int = 0
     wedged_count: int = 0
 
     def step_begin(self) -> None:
-        self._t_start = time.perf_counter()
+        self._watch.start()
 
     def _stats(self):
         xs = sorted(self._durations)
@@ -59,9 +60,8 @@ class StepWatchdog:
         return med, max(mad, med * 0.01)
 
     def step_end(self) -> Verdict:
-        assert self._t_start is not None, "step_begin not called"
-        dt = time.perf_counter() - self._t_start
-        self._t_start = None
+        assert self._watch.running, "step_begin not called"
+        dt = self._watch.stop()
 
         if len(self._durations) < self.warmup_steps:
             self._durations.append(dt)

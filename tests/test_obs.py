@@ -1,0 +1,356 @@
+"""Observability subsystem: metrics registry, trace hygiene, Chrome traces.
+
+Pins the DESIGN.md §15 contracts:
+
+* disabled is a TRUE no-op — update/estimate paths leave the registry
+  empty and add zero backend dispatches;
+* record sites inside jax-traced functions are skipped entirely (no
+  tracer leaks, no double-booking when the compiled executable replays);
+* ``to_json()`` round-trips the snapshot schema exactly;
+* ``span``/``start_trace`` emit Perfetto-loadable Chrome trace events,
+  with the dispatch seams visible under the outer spans.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import metrics, tracing
+from repro.obs.format import (
+    fmt_bytes,
+    fmt_count,
+    fmt_pct,
+    fmt_rate,
+    fmt_seconds,
+    kv_line,
+    metrics_report_line,
+    truncated_note,
+)
+from repro.sketch import (
+    ExecutionPlan,
+    HLLConfig,
+    SketchBank,
+    estimate_many,
+    register_bank_backend,
+)
+from repro.sketch import register_backend
+from repro.sketch.backends import bank_update_jnp, update_pipelined
+from repro.sketch.dispatch import update_registers
+from repro.sketch.plan import get_bank_backend
+
+CFG = HLLConfig(p=6, hash_bits=32)
+
+_SPY = {"n": 0}
+
+
+# delegates to the real jnp paths so backend-sweeping suites stay green
+# (plan.validate needs the name on the single-sketch axis too)
+@register_backend("obs_spy_jnp")
+def _spy_backend(registers, items, cfg, plan):
+    _SPY["n"] += 1
+    return update_pipelined(registers, items, cfg, plan.pipelines)
+
+
+@register_bank_backend("obs_spy_jnp")
+def _spy_bank_backend(registers, keys, items, cfg, plan):
+    _SPY["n"] += 1
+    return bank_update_jnp(registers, keys, items, cfg)
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs_state():
+    """Every test starts and ends with metrics off/empty and no trace."""
+    metrics.disable()
+    metrics.reset()
+    if tracing.active():
+        tracing.stop_trace()
+    yield
+    metrics.disable()
+    metrics.reset()
+    if tracing.active():
+        tracing.stop_trace()
+
+
+def _ingest(bank, n=32, backend="jnp"):
+    keys = jnp.arange(n, dtype=jnp.int32) % 4
+    items = jnp.arange(n, dtype=jnp.int32)
+    return bank.update_many(keys, items, plan=ExecutionPlan(backend=backend))
+
+
+# ----------------------------------------------------------------------------
+# disabled default: true no-op
+# ----------------------------------------------------------------------------
+
+
+def test_disabled_by_default_registry_stays_empty():
+    assert not metrics.enabled()
+    bank = _ingest(SketchBank.empty(4, CFG))
+    np.asarray(estimate_many(bank.registers, CFG))
+    snap = metrics.snapshot()
+    assert snap["enabled"] is False
+    assert snap["counters"] == {}
+    assert snap["gauges"] == {}
+    assert snap["histograms"] == {}
+
+
+def test_disabled_adds_zero_backend_dispatches():
+    """The seam wrapper forwards exactly one call per real dispatch."""
+    bank = SketchBank.empty(4, CFG)
+    _SPY["n"] = 0
+    bank = _ingest(bank, backend="obs_spy_jnp")
+    assert _SPY["n"] == 1  # wrapped, not doubled
+    # empty streams short-circuit BEFORE the wrapper: no dispatch, and
+    # nothing counted even with metrics on
+    metrics.enable()
+    _SPY["n"] = 0
+    out = bank.update_many(
+        jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0,), jnp.int32),
+        plan=ExecutionPlan(backend="obs_spy_jnp"),
+    )
+    assert out is bank and _SPY["n"] == 0
+    assert metrics.counter_value("dispatch.bank_update.obs_spy_jnp.calls") == 0
+    # the single-sketch path counts its skips so the no-dispatch contract
+    # stays observable
+    regs = update_registers(
+        jnp.zeros((CFG.m,), jnp.uint8),
+        jnp.zeros((0,), jnp.int32),
+        CFG,
+        ExecutionPlan(backend="obs_spy_jnp"),
+    )
+    assert regs.shape == (CFG.m,) and _SPY["n"] == 0
+    assert metrics.counter_value("dispatch.update.skipped_empty") == 1
+
+
+def test_record_sites_noop_when_disabled():
+    metrics.inc("x")
+    metrics.gauge("g", 3.0)
+    metrics.observe("h", 1.0)
+    with metrics.timed("t"):
+        pass
+    assert metrics.snapshot()["counters"] == {}
+    assert metrics.counter_value("x") == 0
+
+
+# ----------------------------------------------------------------------------
+# enabled: dispatch seams count and time
+# ----------------------------------------------------------------------------
+
+
+def test_enabled_counts_dispatches_per_axis_and_backend():
+    metrics.enable()
+    bank = _ingest(SketchBank.empty(4, CFG))
+    np.asarray(estimate_many(bank.registers, CFG, estimator="original"))
+    snap = metrics.snapshot()
+    assert snap["counters"]["dispatch.bank_update.jnp.calls"] == 1
+    assert snap["histograms"]["dispatch.bank_update.jnp.seconds"]["count"] == 1
+    assert snap["counters"]["dispatch.estimate.original.calls"] == 1
+    assert snap["histograms"]["bank.update_many.batch_items"]["count"] == 1
+    assert snap["histograms"]["bank.update_many.batch_items"]["max"] == 32.0
+
+
+def test_reset_clears_but_keeps_enabled():
+    metrics.enable()
+    metrics.inc("a")
+    metrics.reset()
+    snap = metrics.snapshot()
+    assert snap["enabled"] is True and snap["counters"] == {}
+
+
+# ----------------------------------------------------------------------------
+# jit safety: no record site runs under an active jax trace
+# ----------------------------------------------------------------------------
+
+
+def test_record_sites_skipped_under_jit():
+    metrics.enable()
+
+    @jax.jit
+    def f(x):
+        metrics.inc("jit.counter")
+        metrics.gauge("jit.gauge", 1.0)
+        metrics.observe("jit.hist", 2.0)
+        with metrics.timed("jit.timed"):
+            y = x + 1
+        return y
+
+    np.asarray(f(jnp.arange(4)))  # traces + runs
+    np.asarray(f(jnp.arange(4)))  # compiled: no python at all
+    snap = metrics.snapshot()
+    assert snap["counters"] == {} and snap["gauges"] == {}
+    assert snap["histograms"] == {}
+
+
+def test_wrapped_backend_seam_skipped_under_jit():
+    """Tracing a jitted caller must not book a dispatch the executable
+    replays without running Python again."""
+    metrics.enable()
+    wrapped = get_bank_backend("jnp")
+    plan = ExecutionPlan(backend="jnp")
+    regs = SketchBank.empty(4, CFG).registers
+    keys = jnp.arange(8, dtype=jnp.int32) % 4
+    items = jnp.arange(8, dtype=jnp.int32)
+
+    @jax.jit
+    def g(r, k, x):
+        return wrapped(r, k, x, CFG, plan)
+
+    inside = np.asarray(g(regs, keys, items))
+    np.asarray(g(regs, keys, items))
+    assert metrics.counter_value("dispatch.bank_update.jnp.calls") == 0
+    # ...while the same wrapped fn called eagerly records exactly once
+    outside = np.asarray(wrapped(regs, keys, items, CFG, plan))
+    assert metrics.counter_value("dispatch.bank_update.jnp.calls") == 1
+    np.testing.assert_array_equal(inside, outside)
+
+
+def test_span_under_jit_emits_no_event():
+    tracing.start_trace()
+
+    @jax.jit
+    def f(x):
+        with tracing.span("traced.body"):
+            return x * 2
+
+    np.asarray(f(jnp.arange(3)))
+    events = tracing.stop_trace()
+    assert all(e["name"] != "traced.body" for e in events)
+
+
+# ----------------------------------------------------------------------------
+# snapshot schema / to_json round-trip
+# ----------------------------------------------------------------------------
+
+
+def test_to_json_roundtrips_snapshot():
+    metrics.enable()
+    metrics.inc("c", 3)
+    metrics.gauge("g", 2.5)
+    for v in (0.001, 0.01, 0.1):
+        metrics.observe("h", v)
+    snap = metrics.snapshot()
+    assert json.loads(metrics.to_json()) == snap
+    assert set(snap) == {"enabled", "counters", "gauges", "histograms"}
+    hist = snap["histograms"]["h"]
+    assert set(hist) == {"count", "sum", "mean", "min", "max", "p50", "p90", "p99"}
+    assert hist["count"] == 3
+    assert hist["min"] == pytest.approx(0.001)
+    assert hist["max"] == pytest.approx(0.1)
+
+
+def test_histogram_percentiles_sane():
+    metrics.enable()
+    for v in range(1, 1001):
+        metrics.observe("lat", float(v))
+    h = metrics.snapshot()["histograms"]["lat"]
+    assert h["count"] == 1000
+    assert h["mean"] == pytest.approx(500.5)
+    # log-binned at 4 bins/decade: estimates land within one bin (~1.78x)
+    assert 500 / 1.78 <= h["p50"] <= 500 * 1.78
+    assert 900 / 1.78 <= h["p90"] <= 1000.0
+    assert h["p99"] <= h["max"] <= 1000.0
+    assert h["min"] == 1.0
+
+
+# ----------------------------------------------------------------------------
+# tracing: spans, nesting, Chrome-trace shape, seam events
+# ----------------------------------------------------------------------------
+
+
+def test_span_times_and_chrome_trace_shape():
+    tracing.start_trace()
+    with tracing.span("outer", phase="test") as outer:
+        with tracing.span("inner") as inner:
+            sum(range(1000))
+    tracing.stop_trace()
+    assert 0 < inner.elapsed_s <= outer.elapsed_s
+    doc = tracing.chrome_trace()
+    assert doc["displayTimeUnit"] == "ms"
+    events = {e["name"]: e for e in doc["traceEvents"]}
+    assert set(events) == {"outer", "inner"}
+    for e in events.values():
+        assert e["ph"] == "X" and e["dur"] >= 0 and "pid" in e and "tid" in e
+    # nesting is reconstructed from containment: inner ⊆ outer
+    o, i = events["outer"], events["inner"]
+    assert o["ts"] <= i["ts"]
+    assert i["ts"] + i["dur"] <= o["ts"] + o["dur"] + 1e-3
+    assert o["args"] == {"phase": "test"}
+    json.dumps(doc)  # Perfetto-loadable
+
+
+def test_span_metric_feeds_histogram():
+    metrics.enable()
+    with tracing.span("req", metric="req.seconds"):
+        pass
+    assert metrics.snapshot()["histograms"]["req.seconds"]["count"] == 1
+
+
+def test_dispatch_seams_emit_trace_events():
+    tracing.start_trace()
+    _ingest(SketchBank.empty(4, CFG))
+    tracing.stop_trace()
+    names = {e["name"] for e in tracing.chrome_trace()["traceEvents"]}
+    assert "bank_update[jnp]" in names
+    # ...and nothing is recorded in the metrics registry by a pure trace
+    assert metrics.snapshot()["counters"] == {}
+
+
+def test_write_trace_and_buffer_lifecycle(tmp_path):
+    tracing.start_trace()
+    with tracing.span("once"):
+        pass
+    tracing.stop_trace()
+    path = tracing.write_trace(str(tmp_path / "t.json"))
+    with open(path) as f:
+        assert len(json.load(f)["traceEvents"]) == 1
+    with tracing.span("after_stop"):  # capture over: not buffered
+        pass
+    assert len(tracing.chrome_trace()["traceEvents"]) == 1
+    tracing.start_trace()  # restarting clears the old buffer
+    assert tracing.chrome_trace()["traceEvents"] == []
+    tracing.stop_trace()
+
+
+def test_stopwatch_semantics():
+    w = tracing.Stopwatch()
+    assert not w.running
+    with pytest.raises(AssertionError):
+        w.elapsed()
+    w.start()
+    assert w.running and w.elapsed() >= 0
+    dt = w.stop()
+    assert dt >= 0 and not w.running
+
+
+# ----------------------------------------------------------------------------
+# formatting helpers (serve report lines)
+# ----------------------------------------------------------------------------
+
+
+def test_format_helpers():
+    assert fmt_count(1234567) == "1,234,567"
+    assert fmt_pct(0.6667) == "66.7%"
+    assert fmt_seconds(0.0000012) == "1µs"
+    assert fmt_seconds(0.0034) == "3.4ms"
+    assert fmt_seconds(2.5) == "2.50s"
+    assert fmt_rate(1.25e6, "tok") == "1,250,000 tok/s"
+    assert fmt_bytes(3 * 1024**2) == "3.0MiB"
+    assert kv_line("board", [("rows", 4), ("hit", "66.7%")]) == (
+        "  board: rows=4 hit=66.7%"
+    )
+    note = truncated_note(3, 8, "requests")
+    assert "+5 more requests" in note and "8 total" in note
+
+
+def test_metrics_report_line_reads_snapshot():
+    metrics.enable()
+    _ingest(SketchBank.empty(4, CFG))
+    metrics.observe("serve.request.seconds", 0.002)
+    metrics.inc("window.fold_cache.hits", 2)
+    metrics.inc("window.fold_cache.misses", 1)
+    line = metrics_report_line(metrics.snapshot())
+    assert line.startswith("[metrics]")
+    assert "p50=" in line and "dispatches=" in line and "hit=66.7%" in line

@@ -11,7 +11,7 @@ def _feed(wd, durations):
     verdicts = []
     for d in durations:
         wd.step_begin()
-        wd._t_start -= d  # simulate a step of length d without sleeping
+        wd._watch._t0 -= d  # simulate a step of length d without sleeping
         verdicts.append(wd.step_end())
     return verdicts
 
