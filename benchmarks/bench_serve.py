@@ -1,0 +1,236 @@
+"""Sustained serve-path load: coalesced sharded ingest vs one-at-a-time.
+
+The production serve path (DESIGN.md §16) makes two structural bets: that
+landing many tenants' pending updates as ONE coalesced ``update_many``
+tick beats dispatching each request alone, and that sharding the bank's
+tenant-row axis over devices costs nothing in correctness.  This bench
+measures both under sustained Zipf traffic and writes ``BENCH_serve.json``
+so "heavy traffic from millions of users" is a tracked number:
+
+* **ingest sweep** — R requests against a B-tenant ``SketchBank``, Zipf
+  tenant popularity.  Baseline: the pre-§16 serve loop, one blocking
+  ``update_many`` per request.  Coalesced: the same requests submitted to
+  a ``CoalescingQueue`` and drained every TICK requests through the
+  double-buffered staging ring under the row-sharded plan.  The in-bench
+  gate asserts coalesced ≥ ``COALESCE_GATE``x one-at-a-time items/s at
+  B=1024 on CPU (relaxed under --smoke).
+* **bit-identity** — before any number lands, the coalesced + sharded
+  registers and counters are asserted bit-identical to the sequential
+  local ingest for EVERY registered bank backend (§6 lattice laws made
+  observable).
+* **read latency** — a sustained tick/read cycle times every per-tenant
+  dashboard read into the PR-9 ``serve.request.seconds`` histogram; the
+  JSON carries its p50/p99.
+
+The registry flag is left exactly as found: under ``--metrics-check`` the
+suite already enabled it (and resetting here would wipe the other
+benches' counters); standalone runs enable it just for the latency sweep.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, write_bench_json
+from repro.launch.mesh import make_auto_mesh
+from repro.obs import metrics, tracing
+from repro.serve.coalesce import CoalescingQueue
+from repro.sketch import (
+    ExecutionPlan,
+    HLLConfig,
+    SketchBank,
+    available_bank_backends,
+)
+
+JSON_PATH = "BENCH_serve.json"
+TENANTS = 1024
+REQUESTS = 256
+ITEMS_PER_REQUEST = 512
+TICK_REQUESTS = 32  # coalescer drain cadence (requests per tick)
+READ_TICKS = 8  # sustained tick/read cycles for the latency histogram
+COALESCE_GATE = 2.0
+COALESCE_GATE_SMOKE = 1.1
+ZIPF_A = 1.2
+
+
+def _zipf_requests(rows, requests, items_per_req, seed=0):
+    """Per-request (tenant, items): Zipf-popular tenants, uniform tokens."""
+    rng = np.random.default_rng(seed)
+    tenants = (rng.zipf(ZIPF_A, requests) - 1) % rows
+    streams = rng.integers(0, 2**31, (requests, items_per_req), dtype=np.int32)
+    return tenants.astype(np.int32), streams
+
+
+def _ingest_sequential(bank, tenants, streams, plan):
+    """The pre-§16 loop: one blocking update_many per request."""
+    for tenant, items in zip(tenants, streams):
+        keys = np.full(items.shape[0], tenant, np.int32)
+        bank = bank.update_many(keys, items, plan)
+        jax.block_until_ready(bank.registers)
+    return bank
+
+
+def _ingest_coalesced(bank, tenants, streams, plan, tick_requests):
+    """Submit per tenant, drain every ``tick_requests`` as one dispatch."""
+    queue = CoalescingQueue()
+    for i, (tenant, items) in enumerate(zip(tenants, streams)):
+        queue.submit_row(int(tenant), items)
+        if (i + 1) % tick_requests == 0:
+            bank = queue.flush_into(bank, plan)
+    bank = queue.flush_into(bank, plan)
+    jax.block_until_ready(bank.registers)
+    return bank
+
+
+def _assert_bit_identical(rows, tenants, streams, shard_plan):
+    """Coalesced+sharded == sequential+local, every registered backend."""
+    cfg = HLLConfig(p=8, hash_bits=64)
+    verdicts = {}
+    for backend in available_bank_backends():
+        local = ExecutionPlan(backend=backend)
+        sharded = local.with_sharding(shard_plan.mesh, shard_plan.data_axes)
+        ref = _ingest_sequential(SketchBank.empty(rows, cfg), tenants, streams, local)
+        got = _ingest_coalesced(
+            SketchBank.empty(rows, cfg), tenants, streams, sharded, 8
+        )
+        same = bool(
+            np.array_equal(np.asarray(ref.registers), np.asarray(got.registers))
+            and np.array_equal(ref.counts, got.counts)
+        )
+        verdicts[backend] = same
+        if not same:
+            raise AssertionError(
+                f"coalesced sharded ingest diverged from sequential local "
+                f"ingest under backend {backend!r}"
+            )
+        ref_est = np.asarray(ref.estimate_many())
+        got_est = np.asarray(got.estimate_many(plan=sharded))
+        if not np.array_equal(ref_est, got_est):
+            raise AssertionError(
+                f"sharded estimate_many diverged from local under "
+                f"backend {backend!r}"
+            )
+    return verdicts
+
+
+def _latency_sweep(rows, items_per_req, plan, ticks):
+    """Sustained tick/read cycle -> serve.request.seconds p50/p99."""
+    cfg = HLLConfig(p=12, hash_bits=64)
+    bank = SketchBank.empty(rows, cfg)
+    queue = CoalescingQueue()
+    tenants, streams = _zipf_requests(rows, ticks * 4, items_per_req, seed=7)
+    for i in range(ticks):
+        for j in range(4):
+            r = i * 4 + j
+            queue.submit_row(int(tenants[r]), streams[r])
+        bank = queue.flush_into(bank, plan)
+        with tracing.span("serve.request", metric="serve.request.seconds", tick=i):
+            jax.block_until_ready(bank.estimate_many(plan=plan))
+    hist = metrics.snapshot()["histograms"].get("serve.request.seconds")
+    if not hist or not hist["count"]:
+        raise AssertionError("latency sweep recorded no serve.request.seconds samples")
+    return {"p50_s": hist["p50"], "p99_s": hist["p99"], "reads": hist["count"]}
+
+
+def run(full: bool = False, smoke: bool = False):
+    import time
+
+    rows = 128 if smoke else TENANTS
+    requests = 32 if smoke else REQUESTS
+    items_per_req = 64 if smoke else ITEMS_PER_REQUEST
+    gate = COALESCE_GATE_SMOKE if smoke else COALESCE_GATE
+    cfg = HLLConfig(p=12, hash_bits=64)
+    mesh = make_auto_mesh((jax.device_count(),), ("data",))
+    local = ExecutionPlan(backend="jnp")
+    sharded = local.with_sharding(mesh)
+
+    # correctness first: no number lands unless every backend agrees
+    small_t, small_s = _zipf_requests(64, 24, 48, seed=3)
+    identical = _assert_bit_identical(64, small_t, small_s, sharded)
+    emit(
+        "serve_bit_identity",
+        0.0,
+        f"coalesced+sharded == sequential+local for "
+        f"{sorted(identical)} at B=64",
+    )
+
+    tenants, streams = _zipf_requests(rows, requests, items_per_req)
+    total_items = requests * items_per_req
+
+    def timed(fn):
+        fn()  # warm the compile caches outside the timed run
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    seq_s = timed(
+        lambda: _ingest_sequential(SketchBank.empty(rows, cfg), tenants, streams, local)
+    )
+    coal_s = timed(
+        lambda: _ingest_coalesced(
+            SketchBank.empty(rows, cfg),
+            tenants,
+            streams,
+            sharded,
+            TICK_REQUESTS,
+        )
+    )
+    seq_rate = total_items / seq_s
+    coal_rate = total_items / coal_s
+    speedup = coal_rate / seq_rate
+    emit(
+        "serve_ingest",
+        coal_s * 1e6,
+        f"B={rows} R={requests} n/req={items_per_req} "
+        f"coalesced={coal_rate:,.0f} items/s "
+        f"sequential={seq_rate:,.0f} items/s speedup={speedup:.2f}x",
+    )
+    if speedup < gate:
+        raise AssertionError(
+            f"coalesced ingest only {speedup:.2f}x one-at-a-time at "
+            f"B={rows} (gate {gate}x)"
+        )
+
+    # the latency sweep needs a live registry; leave the flag as found
+    was_enabled = metrics.enabled()
+    if not was_enabled:
+        metrics.enable()
+    try:
+        latency = _latency_sweep(
+            rows, items_per_req, sharded, 4 if smoke else READ_TICKS
+        )
+    finally:
+        if not was_enabled:
+            metrics.disable()
+    emit(
+        "serve_read_latency",
+        latency["p50_s"] * 1e6,
+        f"p50={latency['p50_s'] * 1e6:.0f}us "
+        f"p99={latency['p99_s'] * 1e6:.0f}us over {latency['reads']} reads",
+    )
+
+    payload = {
+        "smoke": smoke,
+        "devices": jax.device_count(),
+        "ingest": {
+            "tenants": rows,
+            "requests": requests,
+            "items_per_request": items_per_req,
+            "tick_requests": TICK_REQUESTS,
+            "zipf_a": ZIPF_A,
+            "sequential_items_per_s": seq_rate,
+            "coalesced_items_per_s": coal_rate,
+            "speedup": speedup,
+            "gate": gate,
+            "bit_identical": identical,
+        },
+        "read_latency": latency,
+    }
+    path = write_bench_json(JSON_PATH, payload, smoke)
+    emit("serve_json", 0.0, path)
+
+
+if __name__ == "__main__":
+    run()

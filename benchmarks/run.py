@@ -22,6 +22,9 @@ job runs this, so benchmark scripts can no longer rot unexecuted).
           writes BENCH_heavy.json
   obs   observability overhead (disabled-mode seam cost vs passthrough,
         gated at 3%); writes BENCH_obs.json
+  serve production serve path: coalesced row-sharded ingest vs
+        one-request-at-a-time under Zipf traffic, plus read-latency
+        p50/p99 (gated at 2x coalesced speedup); writes BENCH_serve.json
 
 JSON-writing benches write in every mode: full runs update the tracked
 ``BENCH_*.json`` perf trajectory, smoke runs write sibling
@@ -70,6 +73,7 @@ SUITE = {
     "sparse": "bench_sparse",
     "heavy": "bench_heavy",
     "obs": "bench_obs",
+    "serve": "bench_serve",
 }
 
 

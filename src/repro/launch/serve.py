@@ -2,17 +2,27 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \\
         --requests 8 --prompt-len 64 --gen-len 32 [--reduced] \\
-        [--metrics-out metrics.json]
+        [--placement sharded] [--metrics-out metrics.json]
 
 Same step functions the decode dry-run compiles; on a pod the KV-cache
 sequence axis shards over 'model' per sharding/specs.cache_specs.
 
+The sketch-telemetry ingest runs the production serve path (DESIGN.md
+§16): every request SUBMITS its token stream to a coalescing queue and
+the merged batch lands as ONE ``update_many`` per tick
+(repro/serve/coalesce.py); ``--placement sharded`` splits the bank's
+tenant-row axis over the process's devices with block-local key routing,
+bit-identical to local placement.  The sliding-window ring is shared
+across requests through ``SharedWindowRing`` so the §14 incremental fold
+state amortizes across the fleet instead of rebuilding per request.
+
 ``--metrics-out`` turns on the repro.obs metrics registry for the run
 (DESIGN.md §15): per-request read latency histograms (p50/p99), items/s
 and density gauges, dispatch counts per registry axis/backend, sparse
-compaction counters, and window-cache hit rates land in one snapshot
-JSON, with a periodic ``[metrics]`` report line every ``--report-every``
-requests.  Without it the registry stays in its no-op default.
+compaction counters, coalescer tick sizes, and window-cache hit rates
+land in one snapshot JSON, with a periodic ``[metrics]`` report line
+every ``--report-every`` requests (0 = no periodic lines, snapshot at
+exit only).  Without it the registry stays in its no-op default.
 """
 
 from __future__ import annotations
@@ -34,6 +44,7 @@ from repro.obs.format import (
     fmt_rate,
     kv_line,
     metrics_report_line,
+    per_second,
     truncated_note,
 )
 from repro.sketch import (
@@ -47,8 +58,10 @@ from repro.sketch import (
     WindowedBank,
     available_estimators,
 )
+from repro.launch.mesh import make_auto_mesh
 from repro.models import transformer
 from repro.serve import engine
+from repro.serve.coalesce import CoalescingQueue, SharedWindowRing
 from repro.telemetry.sketchboard import StreamSketch
 
 
@@ -80,12 +93,19 @@ def main():
                     help="count-min depth rows for --topk tracking")
     ap.add_argument("--cm-width", type=int, default=1024,
                     help="count-min counters per depth row for --topk")
+    ap.add_argument("--placement", default="local",
+                    choices=("local", "sharded"),
+                    help="'sharded' splits the telemetry banks' tenant-row "
+                         "axis over this process's devices with block-local "
+                         "key routing (DESIGN.md §16); bit-identical to "
+                         "'local'")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="enable the metrics registry (DESIGN.md §15) and "
                          "write the snapshot JSON here at exit")
     ap.add_argument("--report-every", type=int, default=4,
-                    help="print a [metrics] line every N requests "
-                         "(needs --metrics-out)")
+                    help="print a [metrics] line every N requests (needs "
+                         "--metrics-out); 0 disables the periodic lines and "
+                         "only the exit snapshot is written")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full-config", dest="reduced", action="store_false")
     args = ap.parse_args()
@@ -113,6 +133,13 @@ def main():
         ),
         track_topk=cm_cfg,
     )
+    # the board's single-sketch streams have no row axis; the multi-tenant
+    # banks below ingest and finalize under the serve placement (§16)
+    ingest_plan = board.plan
+    if args.placement == "sharded":
+        ingest_plan = board.plan.with_sharding(
+            make_auto_mesh((jax.device_count(),), ("data",))
+        )
 
     B, S, T = args.requests, args.prompt_len, args.gen_len
     prompts = jax.random.randint(
@@ -142,12 +169,16 @@ def main():
 
     board.observe("prompt_tokens", prompts)
     board.observe("generated_tokens", out)
+    # per_second guards the zero/near-zero elapsed a --smoke-sized run can
+    # produce: "inf tok/s" on a report line instead of ZeroDivisionError
     print(
-        f"{args.arch}: prefill {fmt_rate(B * S / pre.elapsed_s, 'tok')}, "
-        f"decode {fmt_rate(B * T / dec.elapsed_s, 'tok')}"
+        f"{args.arch}: "
+        f"prefill {fmt_rate(per_second(B * S, pre.elapsed_s), 'tok')}, "
+        f"decode {fmt_rate(per_second(B * T, dec.elapsed_s), 'tok')}"
     )
     metrics.gauge(
-        "serve.items_per_s", B * (S + T) / (pre.elapsed_s + dec.elapsed_s)
+        "serve.items_per_s",
+        per_second(B * (S + T), pre.elapsed_s + dec.elapsed_s),
     )
     report = board.report(
         density=True, topk=args.topk if args.topk > 0 else None
@@ -171,27 +202,27 @@ def main():
         ("dense", fmt_bytes(bd["dense_nbytes"])),
     ]))
 
-    # per-request distinct-token telemetry: one HybridBank row per request,
-    # every (prompt + generated) token routed by its request index with ONE
-    # hybrid-routed update_many pass (DESIGN.md §9, §12); requests with few
-    # distinct tokens stay in the sparse COO layout and the bank reports
-    # its own storage win.  Sparse-destined pairs ride the deferred append
-    # buffer until estimate_many()/density() below settle the bank — the
-    # first read IS the flush seam, no explicit compact() call needed.
-    # The bank shares the board's config + plan so both readings stay
-    # comparable.
+    # per-request distinct-token telemetry: one HybridBank row per request.
+    # Each request SUBMITS its (prompt + generated) stream to the
+    # coalescing queue — cheap host appends — and the whole fleet lands as
+    # ONE hybrid-routed update_many tick (DESIGN.md §9, §12, §16); requests
+    # with few distinct tokens stay in the sparse COO layout and the bank
+    # reports its own storage win.  Sparse-destined pairs ride the deferred
+    # append buffer until estimate_many()/density() below settle the bank —
+    # the first read IS the flush seam, no explicit compact() call needed.
+    # The bank shares the board's config so both readings stay comparable.
     bank = HybridBank.empty(
         B, board.cfg, threshold=board.plan.sparse_threshold
     )
     rows = jnp.arange(B, dtype=jnp.int32)[:, None]
     req_keys = jnp.broadcast_to(rows, prompts.shape)
     gen_keys = jnp.broadcast_to(rows, out.shape)
-    bank = bank.update_many(
-        jnp.concatenate([req_keys.reshape(-1), gen_keys.reshape(-1)]),
-        jnp.concatenate([prompts.reshape(-1), out.reshape(-1)]),
-        board.plan,
-    )
-    per_req = np.asarray(bank.estimate_many(args.estimator))
+    queue = CoalescingQueue()
+    prompts_np, out_np = np.asarray(prompts), np.asarray(out)
+    for r in range(B):
+        queue.submit_row(r, np.concatenate([prompts_np[r], out_np[r]]))
+    bank = queue.flush_into(bank, ingest_plan)
+    per_req = np.asarray(bank.estimate_many(args.estimator, plan=ingest_plan))
     bank_d = bank.density()
     metrics.gauge("serve.bank.density_reduction", bank_d["reduction"])
     print(kv_line(f"bank[{B} requests] distinct tokens/request", [
@@ -240,24 +271,39 @@ def main():
     # which is exactly the "distinct tokens in the last k slices" question
     # a traffic dashboard asks.
     W = args.window_epochs
+    ring_key = ("serve", args.window_levels, W, B, board.cfg)
     if args.window_levels > 0:
         # multi-res mode (DESIGN.md §14): same carrier surface, but the
         # horizon stretches to W*(2**L - 1) epochs at O(W*L) slots — the
         # prompt epoch coarsens into merged buckets instead of expiring
-        win = MultiResWindowedBank.empty(
-            W, B, board.cfg, levels=args.window_levels
+        win = SharedWindowRing.get_or_create(
+            ring_key,
+            lambda: MultiResWindowedBank.empty(
+                W, B, board.cfg, levels=args.window_levels
+            ),
         )
     else:
-        win = WindowedBank.empty(W, B, board.cfg)
-    win = win.observe(req_keys, prompts, board.plan)
-    slices = np.array_split(np.asarray(out), W, axis=1)
+        win = SharedWindowRing.get_or_create(
+            ring_key, lambda: WindowedBank.empty(W, B, board.cfg)
+        )
+    win = win.observe(req_keys, prompts, ingest_plan)
+    slices = np.array_split(out_np, W, axis=1)
     for chunk in slices:
+        if chunk.shape[1] == 0:
+            # --gen-len < --window-epochs: array_split pads the tail with
+            # token-less slices.  Rotating on them would expire the prompt
+            # epoch after fewer than W REAL decode slices (and coarsen
+            # empty multi-res buckets), so empty slices do not advance.
+            continue
         win = win.advance()
         keys = jnp.broadcast_to(rows, chunk.shape)
-        win = win.observe(keys, jnp.asarray(chunk), board.plan)
-    rolling = np.asarray(win.estimate_window(plan=board.plan,
+        win = win.observe(keys, jnp.asarray(chunk), ingest_plan)
+    # publish the advanced ring so later requests (and re-entries in this
+    # process) share the §14 decomposed fold state instead of refolding
+    win = SharedWindowRing.swap(ring_key, win)
+    rolling = np.asarray(win.estimate_window(plan=ingest_plan,
                                              estimator=args.estimator))
-    newest = np.asarray(win.estimate_window(1, board.plan, args.estimator))
+    newest = np.asarray(win.estimate_window(1, ingest_plan, args.estimator))
     span = win.window  # horizon for the EH carrier, W for the dense ring
     print(kv_line(f"window[{span} epochs] rolling distinct/request", [
         ("min", fmt_count(rolling.min())),
@@ -282,10 +328,14 @@ def main():
         with tracing.span(
             "serve.request", metric="serve.request.seconds", request=r
         ):
-            est = win.estimate_window(plan=board.plan,
+            est = win.estimate_window(plan=ingest_plan,
                                       estimator=args.estimator)
             _reading = (float(np.asarray(est)[r]), float(per_req[r]))
-        if metrics.enabled() and (r + 1) % max(args.report_every, 1) == 0:
+        if (
+            metrics.enabled()
+            and args.report_every > 0
+            and (r + 1) % args.report_every == 0
+        ):
             print(metrics_report_line(metrics.snapshot()))
 
     if args.metrics_out:

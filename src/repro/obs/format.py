@@ -10,6 +10,8 @@ across surfaces.  Pure string munging: no jax, no metrics state.
 
 from __future__ import annotations
 
+import math
+
 __all__ = [
     "fmt_count",
     "fmt_float",
@@ -17,6 +19,7 @@ __all__ = [
     "fmt_seconds",
     "fmt_rate",
     "fmt_bytes",
+    "per_second",
     "kv_line",
     "truncated_note",
     "metrics_report_line",
@@ -24,8 +27,32 @@ __all__ = [
 
 
 def fmt_count(x: float) -> str:
-    """Integer quantities: thousands separators, no decimals."""
-    return f"{round(float(x)):,}"
+    """Integer quantities: thousands separators, no decimals.
+
+    Non-finite values render as ``inf``/``-inf``/``nan`` instead of
+    raising from ``round()`` — a zero-elapsed throughput on a fast
+    machine must degrade a report line, never crash the launcher.
+    """
+    x = float(x)
+    if not math.isfinite(x):
+        return str(x)
+    return f"{round(x):,}"
+
+
+def per_second(count: float, elapsed_s: float) -> float:
+    """A rate that tolerates zero/near-zero timer spans.
+
+    ``span``/``Stopwatch`` measure with ``perf_counter``, whose
+    resolution can quantize a tiny timed region to exactly 0.0 — the
+    naive ``count / elapsed`` then dies with ZeroDivisionError.  Zero
+    work in zero time is 0.0; finite work in zero time is ``inf``,
+    which every ``fmt_*`` helper renders safely.
+    """
+    count = float(count)
+    elapsed_s = float(elapsed_s)
+    if elapsed_s <= 0.0:
+        return 0.0 if count == 0.0 else math.inf
+    return count / elapsed_s
 
 
 def fmt_float(x: float, digits: int = 1) -> str:

@@ -32,6 +32,7 @@ header (magic ``RHLB``) over densely packed rows.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import struct
 from typing import Optional, Sequence
 
@@ -42,7 +43,7 @@ import numpy as np
 from repro.obs import metrics as obs_metrics
 from repro.sketch import hll, u64 as u64lib
 from repro.sketch.carrier import HyperLogLog
-from repro.sketch.dispatch import mesh_fold
+from repro.sketch.dispatch import mesh_fold, row_shard_apply, row_shard_fold
 from repro.sketch.hll import HLLConfig
 from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, get_bank_backend
 
@@ -77,7 +78,11 @@ def update_bank_registers(
     fused update; placement="mesh" shards the (keys, items) pair through
     the same :func:`repro.sketch.dispatch.mesh_fold` rule as the
     single-sketch path (per-device partial banks + one lax.pmax fold,
-    edge-padding for non-divisible streams).
+    edge-padding for non-divisible streams); placement="sharded" splits
+    the BANK'S ROW AXIS over the mesh instead and routes keys by
+    re-basing them into each device's block (DESIGN.md §16) — the §9
+    drop rule discards foreign keys, so no fold collective is needed
+    and bit-identity to local holds row by row.
     """
     plan = (DEFAULT_PLAN if plan is None else plan).validate()
     backend = get_bank_backend(plan.backend)
@@ -93,12 +98,47 @@ def update_bank_registers(
         return registers
     if plan.placement == "local":
         return backend(registers, flat_keys, flat_items, cfg, plan)
+    if plan.placement == "sharded":
+        return row_shard_fold(
+            plan,
+            registers,
+            flat_keys,
+            (flat_items,),
+            _sharded_ingest_fn(backend, cfg, plan),
+        )
     return mesh_fold(
         plan,
         registers,
         (flat_keys, flat_items),
         lambda regs, ks, xs: backend(regs, ks, xs, cfg, plan),
     )
+
+
+@functools.lru_cache(maxsize=256)
+def _sharded_ingest_fn(backend, cfg: HLLConfig, plan: ExecutionPlan):
+    """Identity-stable block ingest for the sharded-placement cache.
+
+    The dispatch layer memoizes the jitted ``shard_map`` callable per
+    apply-function IDENTITY; an inline lambda here would defeat that and
+    re-trace on every serve tick, so the closure itself is cached on the
+    values it closes over (registry fns, ``cfg`` and ``plan`` hash).
+    """
+
+    def apply(regs, ks, xs):
+        return backend(regs, ks, xs, cfg, plan)
+
+    return apply
+
+
+@functools.lru_cache(maxsize=256)
+def _sharded_estimate_fn(cfg: HLLConfig, name: Optional[str]):
+    """Identity-stable per-row-block estimate map (read-side companion)."""
+    from repro.sketch import estimators as _estimators
+
+    def apply(regs):
+        return _estimators.estimate_many(regs, cfg, estimator=name)
+
+    return apply
 
 
 # ----------------------------------------------------------------------------
@@ -269,17 +309,35 @@ class SketchBank:
     # estimation (paper phase 4, batched)
     # ------------------------------------------------------------------
 
-    def estimate_many(self, estimator: Optional[str] = None) -> jnp.ndarray:
+    def estimate_many(
+        self,
+        estimator: Optional[str] = None,
+        plan: Optional[ExecutionPlan] = None,
+    ) -> jnp.ndarray:
         """(B,) float32 estimates in one jitted dispatch (DESIGN.md §8).
 
         A zero-row bank short-circuits to an empty result instead of
-        tracing a degenerate zero-batch histogram.
+        tracing a degenerate zero-batch histogram.  Under a
+        placement="sharded" ``plan`` each device finalizes its own row
+        block (DESIGN.md §16) — the histogram is per-row, so the blocked
+        read is bit-identical to the flat one.
         """
         from repro.sketch import estimators as _estimators
 
         if len(self) == 0:
             return jnp.zeros((0,), jnp.float32)
-        return _estimators.estimate_many(self.registers, self.cfg, estimator=estimator)
+        name = estimator
+        if plan is not None:
+            plan = plan.validate()
+            name = estimator or plan.estimator
+            if plan.placement == "sharded":
+                return row_shard_apply(
+                    plan,
+                    _sharded_estimate_fn(self.cfg, name),
+                    (self.registers,),
+                    (0,),
+                )
+        return _estimators.estimate_many(self.registers, self.cfg, estimator=name)
 
     def estimate(self, i: int, estimator: Optional[str] = None) -> float:
         """Exact host-side estimate of one row."""

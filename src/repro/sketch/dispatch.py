@@ -9,6 +9,7 @@ same stream (DESIGN.md §3).
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -61,6 +62,141 @@ def mesh_fold(plan: ExecutionPlan, registers, arrays, apply_fn):
     )(registers, *arrays)
 
 
+def _shard_count(plan: ExecutionPlan) -> int:
+    shards = 1
+    for a in plan.data_axes:
+        shards *= plan.mesh.shape[a]
+    return shards
+
+
+def _block_index(plan: ExecutionPlan):
+    """This device's row-block index: the flattened position over
+    ``plan.data_axes`` in the same row-major order ``P(axes)`` shards by."""
+    idx = jax.lax.axis_index(plan.data_axes[0])
+    for a in plan.data_axes[1:]:
+        idx = idx * plan.mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _spec_at(axes, dim: int, rank: int):
+    """A PartitionSpec sharding dimension ``dim`` of a rank-``rank`` array
+    over ``axes``, replicating every other dimension."""
+    entries = [None] * rank
+    entries[dim] = axes
+    return P(*entries)
+
+
+def row_shard_fold(plan: ExecutionPlan, registers, keys, arrays, apply_fn):
+    """The sharded placement rule for keyed bank ingest (DESIGN.md §16).
+
+    ``registers`` is a (B, ...) bank whose ROW axis splits into contiguous
+    blocks over ``plan.data_axes``; ``keys`` and the ``arrays`` streams are
+    replicated to every device.  Each device re-bases the key stream into
+    block-local coordinates (``key - block_start``) and applies
+    ``apply_fn(block, local_keys, *local_arrays)``: keys owned by another
+    device fall outside [0, block_rows) and the §9 drop rule discards
+    them, so cross-device key ROUTING is the drop rule itself — no
+    gather, scatter, or collective moves a register.  Row counts that do
+    not divide the shard count pad with phantom rows (valid keys are
+    < B by the same rule, so nothing can land in them) and slice back.
+    The union of the blocks is exactly one local update: bit-identity to
+    placement="local" holds by construction, not by a fold.
+    """
+    shards = _shard_count(plan)
+    rows = registers.shape[0]
+    padded = -(-rows // shards) * shards
+    regs = registers
+    if padded != rows:
+        regs = jnp.pad(
+            registers, [(0, padded - rows)] + [(0, 0)] * (registers.ndim - 1)
+        )
+    out = _sharded_fold_callable(
+        apply_fn, plan, padded // shards, regs.ndim, len(arrays)
+    )(regs, keys, *arrays)
+    return out[:rows] if padded != rows else out
+
+
+@functools.lru_cache(maxsize=512)
+def _sharded_fold_callable(apply_fn, plan, block_rows, rank, n_arrays):
+    """The jitted shard-mapped ingest for one (fn, plan, geometry) key.
+
+    Eager ``shard_map`` re-traces on every call when handed a fresh
+    closure, which turns the serve loop's once-per-tick dispatch into a
+    once-per-tick recompile.  Caching here keeps the serve path's steady
+    state at one compile per shape; it only works because call sites
+    pass IDENTITY-STABLE apply functions (themselves lru_cached on the
+    values they close over) rather than inline lambdas.
+    """
+
+    def local(block, ks, *rest):
+        return apply_fn(block, ks - _block_index(plan) * block_rows, *rest)
+
+    in_specs = (_spec_at(plan.data_axes, 0, rank),) + (P(),) * (1 + n_arrays)
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=plan.mesh,
+            in_specs=in_specs,
+            out_specs=_spec_at(plan.data_axes, 0, rank),
+        )
+    )
+
+
+def row_shard_apply(plan: ExecutionPlan, fn, arrays, in_dims, out_dim: int = 0):
+    """Apply a ROW-INDEPENDENT map block-wise under the sharded placement.
+
+    The read-side companion of :func:`row_shard_fold`: ``fn`` maps each
+    array's row block to a per-row result (batched estimate finalization,
+    window ring folds — anything with no cross-row dataflow), so running
+    it per block and concatenating is bit-identical to the unsharded
+    call.  ``in_dims[i]`` names the row dimension of ``arrays[i]`` (None
+    replicates the whole array); the output's row dimension is
+    ``out_dim``.  Non-divisible row counts pad with phantom zero rows —
+    inert under every row-wise map here — and slice back.
+    """
+    shards = _shard_count(plan)
+    rows = next(
+        a.shape[d] for a, d in zip(arrays, in_dims) if d is not None
+    )
+    padded = -(-rows // shards) * shards
+    staged = []
+    for a, d in zip(arrays, in_dims):
+        if d is not None and padded != rows:
+            pad = [(0, 0)] * a.ndim
+            pad[d] = (0, padded - rows)
+            a = jnp.pad(a, pad)
+        staged.append(a)
+    out_rank = jax.eval_shape(fn, *staged).ndim  # abstract: no FLOPs
+    out = _sharded_apply_callable(
+        fn,
+        plan,
+        tuple(in_dims),
+        out_dim,
+        tuple(a.ndim for a in staged),
+        out_rank,
+    )(*staged)
+    if padded != rows:
+        out = jax.lax.slice_in_dim(out, 0, rows, axis=out_dim)
+    return out
+
+
+@functools.lru_cache(maxsize=512)
+def _sharded_apply_callable(fn, plan, in_dims, out_dim, ranks, out_rank):
+    """Jitted shard-mapped row map, cached like the fold companion."""
+    in_specs = tuple(
+        _spec_at(plan.data_axes, d, r) if d is not None else P()
+        for d, r in zip(in_dims, ranks)
+    )
+    return jax.jit(
+        shard_map(
+            fn,
+            mesh=plan.mesh,
+            in_specs=in_specs,
+            out_specs=_spec_at(plan.data_axes, out_dim, out_rank),
+        )
+    )
+
+
 def cm_mesh_sum(plan: ExecutionPlan, counters, arrays, apply_fn):
     """The mesh placement rule for ADDITIVE sketch state (count-min).
 
@@ -107,6 +243,9 @@ def update_registers(
     placement="mesh":  ``items`` is flattened and sharded over
     ``plan.data_axes`` through :func:`mesh_fold` (per-device aggregation
     + one all-reduce-max; edge-padding for non-divisible streams).
+    placement="sharded" degrades to the mesh rule here: a single sketch
+    has no row axis to split, and stream-sharding is bit-identical to
+    local by the same lattice laws (DESIGN.md §16).
     """
     plan = (DEFAULT_PLAN if plan is None else plan).validate()
     backend = get_backend(plan.backend)

@@ -13,6 +13,16 @@ datapath tap, and the two Pallas wrappers) with divergent defaults.  An
   placement  "local"            one device
              "mesh"             items sharded over ``data_axes`` of ``mesh``;
                                 partial sketches fold with one all-reduce-max
+             "sharded"          the BANK'S ROW AXIS sharded over ``data_axes``
+                                of ``mesh`` (DESIGN.md §16): every device owns
+                                a block of tenant rows, the keyed stream is
+                                re-based into block-local coordinates and the
+                                §9 drop rule discards foreign keys — routing
+                                without a collective.  Surfaces with no row
+                                axis (single-sketch updates, count-min ingest)
+                                degrade to the mesh stream-sharding rule,
+                                which is bit-identical by the same lattice
+                                laws.
   pipelines  k sub-sketch lanes per device (paper Fig. 3); every backend
              produces registers bit-identical to the k=1 reference because
              max is associative/commutative/idempotent (DESIGN.md §6).
@@ -41,7 +51,7 @@ from repro.sketch.estimators import DEFAULT_ESTIMATOR, get_estimator
 
 DEFAULT_PIPELINES = 8  # unified default (was 8 in core.sketch, 4 in kernels.ops)
 
-PLACEMENTS = ("local", "mesh")
+PLACEMENTS = ("local", "mesh", "sharded")
 
 # backend name -> fn(registers, flat_items, cfg, plan) -> registers
 _BACKENDS: Dict[str, Callable] = {}
@@ -413,15 +423,15 @@ class ExecutionPlan:
             raise ValueError(
                 f"sparse_threshold must be >= 1, got {self.sparse_threshold}"
             )
-        if self.placement == "mesh" and self.mesh is None:
-            raise ValueError("placement='mesh' requires a mesh")
+        if self.placement in ("mesh", "sharded") and self.mesh is None:
+            raise ValueError(f"placement={self.placement!r} requires a mesh")
         object.__setattr__(self, "data_axes", tuple(self.data_axes))
 
     def validate(self) -> "ExecutionPlan":
         """Check backend + estimator exist (deferred so plans build early)."""
         get_backend(self.backend)
         get_estimator(self.estimator)
-        if self.placement == "mesh":
+        if self.placement in ("mesh", "sharded"):
             missing = set(self.data_axes) - set(self.mesh.axis_names)
             if missing:
                 raise ValueError(
@@ -433,6 +443,12 @@ class ExecutionPlan:
     def with_mesh(self, mesh, data_axes=("data",)) -> "ExecutionPlan":
         return dataclasses.replace(
             self, placement="mesh", mesh=mesh, data_axes=tuple(data_axes)
+        )
+
+    def with_sharding(self, mesh, data_axes=("data",)) -> "ExecutionPlan":
+        """Row-sharded placement (DESIGN.md §16): bank rows over ``mesh``."""
+        return dataclasses.replace(
+            self, placement="sharded", mesh=mesh, data_axes=tuple(data_axes)
         )
 
 

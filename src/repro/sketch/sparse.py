@@ -96,10 +96,11 @@ from repro.sketch.bank import (
     _ROW_COUNT,
     SketchBank,
     _counter_add_rows,
+    _sharded_estimate_fn,
     update_bank_registers,
 )
 from repro.sketch.carrier import HyperLogLog
-from repro.sketch.dispatch import dedup_pairs
+from repro.sketch.dispatch import dedup_pairs, row_shard_apply
 from repro.sketch.hll import HLLConfig
 from repro.sketch.plan import DEFAULT_PLAN, ExecutionPlan, SparseDedup
 
@@ -925,7 +926,11 @@ class HybridBank:
         return counts.at[:, 0].set(s.cfg.m - s.pair_len)
 
     def estimate_many(
-        self, estimator: Optional[str] = None, *, lc_fast: bool = True
+        self,
+        estimator: Optional[str] = None,
+        *,
+        lc_fast: bool = True,
+        plan: Optional[ExecutionPlan] = None,
     ) -> jnp.ndarray:
         """(B,) float32 estimates, sparse rows via the LC fast path.
 
@@ -934,7 +939,10 @@ class HybridBank:
         device path — see the module docstring proof); other estimators
         (or ``lc_fast=False``) build histograms from the pairs and run
         the registered device finalizer.  Dense rows always finalize
-        through the §8 batched ``estimate_many``.
+        through the §8 batched ``estimate_many`` — per promoted-row block
+        under a placement="sharded" ``plan`` (§16); the sparse side is
+        host/COO math with no row axis on device, so placement cannot
+        move it.
         """
         from repro.sketch import estimators as _estimators
 
@@ -942,7 +950,9 @@ class HybridBank:
         rows = len(s)
         if rows == 0:
             return jnp.zeros((0,), jnp.float32)
-        name = _estimators.resolve_estimator(estimator)
+        name = _estimators.resolve_estimator(
+            estimator or (plan.estimator if plan is not None else None)
+        )
         if name == "original" and lc_fast:
             sparse_est = _lc_estimate(s.pair_len, m=s.cfg.m)
         else:
@@ -950,9 +960,17 @@ class HybridBank:
             sparse_est = _finalize_histograms(hist, s.cfg, name)
         d = int(s.dense_block.shape[0])
         if d:
-            dense_est = _estimators.estimate_many(
-                s.dense_block, s.cfg, estimator=name
-            )
+            if plan is not None and plan.validate().placement == "sharded":
+                dense_est = row_shard_apply(
+                    plan,
+                    _sharded_estimate_fn(s.cfg, name),
+                    (s.dense_block,),
+                    (0,),
+                )
+            else:
+                dense_est = _estimators.estimate_many(
+                    s.dense_block, s.cfg, estimator=name
+                )
             slot = jnp.clip(s.slot_map, 0, d - 1)
             return jnp.where(s.slot_map >= 0, dense_est[slot], sparse_est)
         return sparse_est

@@ -59,6 +59,7 @@ Version 2 is the hybrid sparse ring; version 3 the multi-resolution ring.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import struct
 from typing import Optional
 
@@ -68,7 +69,8 @@ import numpy as np
 
 from repro.obs import metrics as obs_metrics
 from repro.sketch import hll
-from repro.sketch.bank import SketchBank
+from repro.sketch.bank import SketchBank, _sharded_estimate_fn
+from repro.sketch.dispatch import row_shard_apply
 from repro.sketch.hll import HLLConfig
 from repro.sketch.plan import (
     DEFAULT_PLAN,
@@ -101,6 +103,68 @@ def _check_last_k_value(last_k: Optional[int], window: int) -> int:
     if not 1 <= int(last_k) <= window:
         raise ValueError(f"last_k must be in [1, {window}], got {last_k}")
     return int(last_k)
+
+
+def _ring_fold(backend, ring, mask, cfg, plan: ExecutionPlan):
+    """One masked ring fold under ``plan``'s placement.
+
+    Folds are per-row maps over the bank axis (dim 1 of the (W, B, m)
+    ring), so placement="sharded" runs the SAME backend on each device's
+    row block (DESIGN.md §16) — bit-identical to the flat fold by row
+    independence; every other placement folds the replicated ring as-is.
+    """
+    if plan.placement == "sharded":
+        # the mask rides along replicated (in_dim None) so the cached
+        # apply fn closes only over hashables — dispatch memoizes the
+        # jitted shard_map per fn identity, and a per-call lambda would
+        # force a re-trace on every serve-loop read
+        return row_shard_apply(
+            plan, _sharded_masked_fn(backend, cfg, plan), (ring, mask), (1, None)
+        )
+    return backend(ring, mask, cfg, plan)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_masked_fn(backend, cfg, plan: ExecutionPlan):
+    """Identity-stable (ring-block, mask) fold for the sharded cache."""
+
+    def apply(ring, mask):
+        return backend(ring, mask, cfg, plan)
+
+    return apply
+
+
+def _parts_merge(parts, cfg, plan: ExecutionPlan):
+    """Merge (K, B, m) fold fragments under ``plan``'s placement — the
+    sharded mirror of :func:`_ring_fold` for the §14 incremental read."""
+    merge = get_window_merge_backend(plan.backend)
+    if plan.placement == "sharded":
+        return row_shard_apply(
+            plan, _sharded_merge_fn(merge, cfg, plan), (parts,), (1,)
+        )
+    return merge(parts, cfg, plan)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_merge_fn(merge, cfg, plan: ExecutionPlan):
+    """Identity-stable fragment merge for the sharded cache."""
+
+    def apply(parts):
+        return merge(parts, cfg, plan)
+
+    return apply
+
+
+def _finalize_many(folded, cfg, plan: ExecutionPlan, estimator):
+    """Batched finalization of a folded (B, m) scratch bank under
+    ``plan``'s placement: sharded plans finalize per row block (§16),
+    everything else in one flat dispatch (§8)."""
+    from repro.sketch import estimators as _estimators
+
+    name = estimator or plan.estimator
+    if plan.placement == "sharded":
+        return row_shard_apply(plan, _sharded_estimate_fn(cfg, name), (folded,), (0,))
+    return _estimators.estimate_many(folded, cfg, estimator=name)
 
 
 def _pack_limbs(totals: np.ndarray) -> np.ndarray:
@@ -441,11 +505,7 @@ class WindowedBank(_RingReads):
         """
         folded = self._fold_registers(self._check_last_k(last_k), plan)
         plan = DEFAULT_PLAN if plan is None else plan
-        from repro.sketch import estimators as _estimators
-
-        return _estimators.estimate_many(
-            folded, self.cfg, estimator=estimator or plan.estimator
-        )
+        return _finalize_many(folded, self.cfg, plan, estimator)
 
     def _fold_registers(
         self, last_k: int, plan: Optional[ExecutionPlan]
@@ -467,9 +527,11 @@ class WindowedBank(_RingReads):
         plan = (DEFAULT_PLAN if plan is None else plan).validate()
         backend = get_window_backend(plan.backend)
         if not self._concrete():
-            return backend(self.registers, self._live_mask(last_k), self.cfg, plan)
+            return _ring_fold(
+                backend, self.registers, self._live_mask(last_k), self.cfg, plan
+            )
         cache = self.__dict__.setdefault("_fold_cache", {})
-        key = (last_k, plan.backend, plan.pipelines)
+        key = (last_k, plan.backend, plan.pipelines, plan.placement)
         hit = cache.get(key)
         if hit is not None:
             obs_metrics.inc("window.fold_cache.hits")
@@ -478,7 +540,9 @@ class WindowedBank(_RingReads):
         if last_k == self.window:
             regs = self._fold_incremental(plan)
         else:
-            regs = backend(self.registers, self._live_mask(last_k), self.cfg, plan)
+            regs = _ring_fold(
+                backend, self.registers, self._live_mask(last_k), self.cfg, plan
+            )
         cache[key] = regs
         return regs
 
@@ -496,7 +560,7 @@ class WindowedBank(_RingReads):
             self.registers, self.cursor, 0, keepdims=False
         )
         parts = jnp.stack([prefix_top, state.suffix, head_bucket])
-        return get_window_merge_backend(plan.backend)(parts, self.cfg, plan)
+        return _parts_merge(parts, self.cfg, plan)
 
     def fold_window(
         self,
@@ -1182,7 +1246,7 @@ class MultiResWindowedBank:
         cacheable = jax.core.trace_state_clean()
         if cacheable:
             cache = self.__dict__.setdefault("_fold_cache", {})
-            key = (last_k, plan.backend, plan.pipelines)
+            key = (last_k, plan.backend, plan.pipelines, plan.placement)
             hit = cache.get(key)
             if hit is not None:
                 obs_metrics.inc("window.fold_cache.hits")
@@ -1193,7 +1257,7 @@ class MultiResWindowedBank:
             + [b.bank.registers for b in self._live_buckets(last_k)]
         )
         mask = jnp.ones((stack.shape[0],), bool)
-        regs = backend(stack, mask, self.cfg, plan)
+        regs = _ring_fold(backend, stack, mask, self.cfg, plan)
         if cacheable:
             cache[key] = regs
         return regs
@@ -1209,11 +1273,7 @@ class MultiResWindowedBank:
         full-resolution head."""
         folded = self._fold_registers(self._check_last_k(last_k), plan)
         plan = DEFAULT_PLAN if plan is None else plan
-        from repro.sketch import estimators as _estimators
-
-        return _estimators.estimate_many(
-            folded, self.cfg, estimator=estimator or plan.estimator
-        )
+        return _finalize_many(folded, self.cfg, plan, estimator)
 
     def fold_window(
         self,

@@ -212,7 +212,7 @@ class DenseBankSUT:
         self.bank = SketchBank.from_bytes(self.bank.to_bytes())
 
     def estimates(self, estimator=None):
-        return np.asarray(self.bank.estimate_many(estimator))
+        return np.asarray(self.bank.estimate_many(estimator, plan=self.plan))
 
     def counts(self):
         return self.bank.counts
@@ -255,7 +255,7 @@ class HybridBankSUT:
         self.bank = self.bank.compact()
 
     def estimates(self, estimator=None):
-        return np.asarray(self.bank.estimate_many(estimator))
+        return np.asarray(self.bank.estimate_many(estimator, plan=self.plan))
 
     def counts(self):
         return self.bank.counts
@@ -543,6 +543,22 @@ def assert_within_band(estimates, true, m, sigma_mult=3.0):
 def make_plans(backends):
     """One local plan per registered bank backend (the differential axis)."""
     return {name: ExecutionPlan(backend=name) for name in backends}
+
+
+def make_sharded_plans(backends):
+    """One row-sharded plan per backend over this process's devices.
+
+    The §16 differential axis: every op sequence driven under one of
+    these plans must land bit-identical to the same sequence under
+    ``make_plans`` — the sharded placement may change WHERE a register
+    lives mid-flight, never what any read returns.
+    """
+    import jax
+
+    from repro.launch.mesh import make_auto_mesh
+
+    mesh = make_auto_mesh((jax.device_count(),), ("data",))
+    return {name: ExecutionPlan(backend=name).with_sharding(mesh) for name in backends}
 
 
 def assert_cm_bounds(estimates, true, total, width, depth):
